@@ -1,0 +1,31 @@
+"""Shared benchmark utilities: CSV emission + artifact directory."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Dict, Iterable, List
+
+ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "artifacts")
+
+
+def emit(table: str, rows: List[Dict[str, Any]], keys: Iterable[str]) -> None:
+    """Print `name,us_per_call,derived`-style CSV and save JSON artifact."""
+    keys = list(keys)
+    print(f"\n# {table}")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r.get(k, "")) for k in keys))
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"{table}.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,84 @@
+"""Generate the §Dry-run/§Roofline tables of EXPERIMENTS.md from the sweep
+artifacts (baseline sweep in artifacts/dryrun, optimized in
+artifacts/dryrun_opt)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+
+
+def load(d):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(ART, d, "*.json"))):
+        r = json.load(open(p))
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_ms(s):
+    return f"{s*1e3:,.1f}"
+
+
+def roofline_table(recs, mesh="16x16"):
+    lines = ["| arch | shape | C (ms) | M (ms) | X (ms) | dominant | useful | GiB/dev | fits |",
+             "|---|---|---:|---:|---:|---|---:|---:|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {arch} | {shape} | — | — | — | *skipped:"
+                         f" sub-quadratic-only shape* | — | — | — |")
+            continue
+        t = r["roofline"]
+        uf = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {arch} | {shape} | {fmt_ms(t['compute_s'])} | "
+            f"{fmt_ms(t['memory_s'])} | {fmt_ms(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s','')} | "
+            f"{uf:.3f} | {r['device_bytes']/2**30:.2f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def totals(recs, mesh="16x16"):
+    tot = {}
+    for (arch, shape, m), r in recs.items():
+        if m != mesh or r.get("status") != "ok":
+            continue
+        t = r["roofline"]
+        tot[(arch, shape)] = t["compute_s"] + t["memory_s"] + t["collective_s"]
+    return tot
+
+
+def main():
+    base = load("dryrun")
+    opt = load("dryrun_opt")
+    print("## Optimized roofline table (single pod, 16x16)\n")
+    print(roofline_table(opt, "16x16"))
+    print("\n## Optimized roofline table (multi-pod, 2x16x16)\n")
+    print(roofline_table(opt, "2x16x16"))
+    # improvement summary
+    tb, to = totals(base), totals(opt)
+    rows = []
+    for k in sorted(to):
+        if k in tb and to[k] > 0:
+            rows.append((tb[k] / to[k], k, tb[k], to[k]))
+    rows.sort(reverse=True)
+    print("\n## First-green vs optimized (sum of terms, single pod)\n")
+    print("| arch | shape | first-green (ms) | optimized (ms) | speedup |")
+    print("|---|---|---:|---:|---:|")
+    for sp, (a, s), b, o in rows:
+        print(f"| {a} | {s} | {fmt_ms(b)} | {fmt_ms(o)} | {sp:.2f}x |")
+    import statistics
+    sps = [r[0] for r in rows]
+    print(f"\ngeomean speedup: "
+          f"{statistics.geometric_mean(sps):.2f}x over {len(sps)} cells; "
+          f"max {max(sps):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

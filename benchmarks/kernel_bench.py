@@ -1,0 +1,74 @@
+"""Kernel micro-benchmarks: interpret-mode correctness timing is
+meaningless, so this reports the *oracle* (jnp) wall time on CPU as
+``us_per_call`` plus the kernels' analytic VMEM working sets — the numbers
+a TPU deployment would tile against."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+
+from .common import emit
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)                             # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # int8 matmul (Edge TPU analogue): 512^3
+    m = k = n = 512
+    x = jnp.asarray(rng.integers(-128, 128, (m, k), dtype=np.int8))
+    w = jnp.asarray(rng.integers(-128, 128, (k, n), dtype=np.int8))
+    f = jax.jit(ref.matmul_qi8_ref)
+    us = _time(f, x, w)
+    vmem = (128 * 128 * 2 + 128 * 128 * 4) / 1024
+    rows.append({"name": "matmul_qi8_512", "us_per_call": round(us, 1),
+                 "derived": f"tile_vmem_kib={vmem:.0f}"})
+
+    # flash attention 1x8h 1k x 1k x 128
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 128)), jnp.float32)
+    kv = jnp.asarray(rng.normal(size=(1, 8, 1024, 128)), jnp.float32)
+    f = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c, True))
+    us = _time(f, q, kv, kv)
+    rows.append({"name": "flash_attn_1k", "us_per_call": round(us, 1),
+                 "derived": "tile=(128,128)x128d, vmem<1MiB"})
+
+    # rglru scan 2x1024x1024
+    a = jnp.asarray(rng.uniform(0.5, 1, (2, 1024, 1024)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(2, 1024, 1024)) * 0.1, jnp.float32)
+    h0 = jnp.zeros((2, 1024), jnp.float32)
+    f = jax.jit(ref.rglru_scan_ref)
+    us = _time(f, a, g, h0)
+    rows.append({"name": "rglru_scan_1k", "us_per_call": round(us, 1),
+                 "derived": "chunk=256, carry_vmem=B*R*4"})
+
+    # rwkv6 scan 1x8hx512x64
+    r = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(1, 8, 512, 64)) * 0.2, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 8, 512, 64)), jnp.float32)
+    w2 = jnp.asarray(rng.uniform(0.8, 1, (1, 8, 512, 64)), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(8, 64)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((1, 8, 64, 64), jnp.float32)
+    f = jax.jit(ref.rwkv6_scan_ref)
+    us = _time(f, r, kk, v, w2, u, s0)
+    rows.append({"name": "rwkv6_scan_512", "us_per_call": round(us, 1),
+                 "derived": "state_vmem=64*64*4=16KiB/head"})
+
+    emit("kernel_bench", rows, ["name", "us_per_call", "derived"])
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Perf-iteration harness (§Perf): lower one cell with variant knobs and
+print the three roofline terms — the measure step of the
+hypothesis -> change -> measure -> validate loop.
+
+    PYTHONPATH=src python -m benchmarks.perf_lab --arch qwen3-1.7b \
+        --shape decode_32k --variant cache_seq
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+
+from repro.launch import dryrun as dr    # noqa: E402
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="comma-separated knobs, applied via env (see "
+                         "repro.launch.variants)")
+    ap.add_argument("--tag", default=None)
+    args = ap.parse_args()
+
+    os.environ["REPRO_VARIANT"] = args.variant
+    rec = dr.dryrun_cell(args.arch, args.shape, args.multi_pod)
+    rec["variant"] = args.variant
+    out = os.path.join("benchmarks/artifacts/perf",
+                       f"{args.tag or args.arch}_{args.shape}_"
+                       f"{args.variant.replace(',', '+')}.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    t = rec["roofline"]
+    print(f"RESULT {args.arch} {args.shape} [{args.variant}]: "
+          f"C={t['compute_s']*1e3:.1f}ms M={t['memory_s']*1e3:.1f}ms "
+          f"X={t['collective_s']*1e3:.1f}ms useful="
+          f"{rec.get('useful_flops_ratio')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Roofline table from the dry-run artifacts (§Roofline deliverable).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by
+``python -m repro.launch.dryrun --all --mesh both``) and prints the
+per-(arch x shape x mesh) three-term roofline with the dominant bottleneck
+and useful-FLOPs ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import ARTIFACTS, emit
+
+DRYRUN_OPT = os.path.join(ARTIFACTS, "dryrun_opt")   # optimized defaults
+DRYRUN_BASE = os.path.join(ARTIFACTS, "dryrun")      # first-green baseline
+
+
+def load_records():
+    d = DRYRUN_OPT if glob.glob(os.path.join(DRYRUN_OPT, "*.json")) \
+        else DRYRUN_BASE
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run() -> None:
+    recs = load_records()
+    if not recs:
+        print("no dry-run artifacts found; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all "
+              "--mesh both` first")
+        return
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "skipped"})
+            continue
+        if r.get("status") != "ok":
+            rows.append({"arch": r["arch"], "shape": r["shape"],
+                         "mesh": r["mesh"], "status": "ERROR"})
+            continue
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_ms": round(t["compute_s"] * 1e3, 2),
+            "memory_ms": round(t["memory_s"] * 1e3, 2),
+            "collective_ms": round(t["collective_s"] * 1e3, 2),
+            "dominant": t["dominant"].replace("_s", ""),
+            "useful_flops": (round(r["useful_flops_ratio"], 3)
+                             if r.get("useful_flops_ratio") else ""),
+            "GiB_per_dev": round(r["device_bytes"] / 2 ** 30, 2),
+            "fits": r["fits_hbm"],
+        })
+    emit("roofline_table", rows,
+         ["arch", "shape", "mesh", "status", "compute_ms", "memory_ms",
+          "collective_ms", "dominant", "useful_flops", "GiB_per_dev",
+          "fits"])
+    ok = [r for r in rows if r["status"] == "ok"]
+    from collections import Counter
+    doms = Counter(r["dominant"] for r in ok)
+    print(f"derived: {len(ok)} compiled cells; dominant terms: {dict(doms)}; "
+          f"all fit HBM: {all(r['fits'] for r in ok)}")
+
+
+if __name__ == "__main__":
+    run()

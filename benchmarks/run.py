@@ -1,0 +1,45 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only segm_real
+
+Prints ``name,us_per_call,derived``-style CSV per table and saves JSON
+artifacts under benchmarks/artifacts/.
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="single_tpu|segm_synth|segm_real|stage_balance|"
+                         "lm_balance|roofline|kernels|serving")
+    args = ap.parse_args()
+
+    from . import (kernel_bench, lm_pipeline_balance, pipeline_serving,
+                   roofline, segm_real, segm_synth, single_tpu_curve,
+                   stage_balance)
+
+    jobs = {
+        "single_tpu": lambda: (single_tpu_curve.run(),
+                               single_tpu_curve.run_real()),
+        "segm_synth": segm_synth.run,
+        "segm_real": segm_real.run,
+        "stage_balance": stage_balance.run,
+        "lm_balance": lm_pipeline_balance.run,
+        "roofline": roofline.run,
+        "kernels": kernel_bench.run,
+        "serving": pipeline_serving.run,
+    }
+    if args.only:
+        jobs[args.only]()
+        return
+    for name, fn in jobs.items():
+        print(f"\n{'='*70}\n== {name}\n{'='*70}")
+        fn()
+
+
+if __name__ == "__main__":
+    main()

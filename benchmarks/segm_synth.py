@@ -1,0 +1,68 @@
+"""Paper Table 4 + Fig. 6 (SEGM_COMP on synthetic models) and
+Table 6 + Fig. 7 (SEGM_PROF), plus SEGM_BALANCED for comparison."""
+from __future__ import annotations
+
+from repro.core import EdgeTPUModel, plan
+from repro.models.cnn import synthetic_cnn
+
+from .common import emit
+
+MIB = 2 ** 20
+# the paper's Table 4/6 range: models that spill on one TPU but whose
+# layers fit individually (first drop .. fourth drop)
+F_VALUES = (460, 500, 540, 580, 620, 660, 700, 740)
+
+
+def run() -> None:
+    # Table 4 / Table 6 analogues: per-stage memory for 4-way splits
+    mem_rows = []
+    for f in F_VALUES:
+        g = synthetic_cnn(f).to_layer_graph()
+        m = EdgeTPUModel(g)
+        row = {"size_mib": round(g.total_bytes / MIB, 2)}
+        for strat in ("comp", "balanced"):
+            pl = plan(g, 4, strat, tpu_model=m)
+            mems = m.stage_memories(pl.cuts)
+            row[f"{strat}_dev_mib"] = "|".join(
+                f"{r.device_bytes/MIB:.2f}" for r in mems)
+            row[f"{strat}_host_mib"] = "|".join(
+                f"{r.host_bytes/MIB:.2f}" for r in mems)
+        mem_rows.append(row)
+    emit("table4_table6_synthetic_segment_memory", mem_rows,
+         ["size_mib", "comp_dev_mib", "comp_host_mib",
+          "balanced_dev_mib", "balanced_host_mib"])
+
+    # Fig. 6 / Fig. 7: speedups for 2/3/4 TPUs
+    sp_rows = []
+    for f in F_VALUES:
+        g = synthetic_cnn(f).to_layer_graph()
+        m = EdgeTPUModel(g)
+        row = {"f": f, "size_mib": round(g.total_bytes / MIB, 2),
+               "t1_ms": round(m.single_tpu_time() * 1e3, 2)}
+        for n in (2, 3, 4):
+            for strat in ("comp", "prof", "balanced"):
+                pl = plan(g, n, strat, tpu_model=m)
+                row[f"{strat}_x{n}"] = round(m.speedup(pl.cuts, batch=15), 2)
+        sp_rows.append(row)
+    emit("fig6_fig7_synthetic_speedups", sp_rows,
+         ["f", "size_mib", "t1_ms"]
+         + [f"{s}_x{n}" for n in (2, 3, 4)
+            for s in ("comp", "prof", "balanced")])
+
+    # paper §6.2 claim: balanced == prof on the synthetic family.  Under
+    # our time model both reach the same minimax segment size; prof
+    # additionally exploits the stage-IO asymmetry (the last stage sends no
+    # output), worth ~5% at n=3.  Report the worst ratio.
+    worst = max(r[f"prof_x{n}"] / r[f"balanced_x{n}"]
+                for r in sp_rows for n in (2, 3, 4))
+    exact = sum(1 for r in sp_rows
+                if all(abs(r[f"balanced_x{n}"] - r[f"prof_x{n}"]) <= 0.05
+                       for n in (2, 3, 4)))
+    print(f"derived: balanced within {(worst-1)*100:.1f}% of prof on all "
+          f"synthetic models (exact on {exact}/{len(sp_rows)}; paper: "
+          f"identical partitions — the gap is stage-IO placement below "
+          f"the paper's measurement resolution)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,65 @@
+"""Paper Fig. 2 + Fig. 4 + Table 2: single-TPU performance vs model size,
+with device/host memory usage (analytical Edge TPU model)."""
+from __future__ import annotations
+
+from repro.core import EdgeTPUModel
+from repro.models.cnn import REAL_CNNS, synthetic_cnn
+
+from .common import emit
+
+MIB = 2 ** 20
+
+
+def run() -> None:
+    rows = []
+    for f in range(32, 1160, 40):
+        m = EdgeTPUModel(synthetic_cnn(f).to_layer_graph())
+        rep = m.whole_model_memory()
+        rows.append({
+            "f": f,
+            "size_mib": round(m.graph.total_bytes / MIB, 2),
+            "device_mib": round(rep.device_bytes / MIB, 2),
+            "host_mib": round(rep.host_bytes / MIB, 2),
+            "time_ms": round(m.single_tpu_time() * 1e3, 2),
+            "tops": round(m.single_tpu_tops(), 3),
+        })
+    emit("fig2_fig4_synthetic_curve", rows,
+         ["f", "size_mib", "device_mib", "host_mib", "time_ms", "tops"])
+
+    # Table 2: memory before/after each big drop
+    drops = []
+    prev_host = 0.0
+    for r in rows:
+        if r["host_mib"] > prev_host + 0.5:
+            drops.append({"size_mib": r["size_mib"],
+                          "device_mib": r["device_mib"],
+                          "host_mib": r["host_mib"],
+                          "host_frac": round(
+                              r["host_mib"] / r["size_mib"], 2)})
+        prev_host = r["host_mib"]
+    emit("table2_spill_steps", drops,
+         ["size_mib", "device_mib", "host_mib", "host_frac"])
+
+
+def run_real() -> None:
+    """Paper Table 3 + Fig. 2 real-model points."""
+    rows = []
+    for name, fn in REAL_CNNS.items():
+        g = fn().to_layer_graph()
+        m = EdgeTPUModel(g)
+        rep = m.whole_model_memory()
+        rows.append({
+            "model": name,
+            "size_mib": round(g.total_bytes / MIB, 2),
+            "device_mib": round(rep.device_bytes / MIB, 2),
+            "host_mib": round(rep.host_bytes / MIB, 2),
+            "time_ms": round(m.single_tpu_time() * 1e3, 2),
+            "tops": round(m.single_tpu_tops(), 3),
+        })
+    emit("table3_real_memory", rows,
+         ["model", "size_mib", "device_mib", "host_mib", "time_ms", "tops"])
+
+
+if __name__ == "__main__":
+    run()
+    run_real()

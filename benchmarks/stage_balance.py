@@ -1,0 +1,42 @@
+"""Paper Fig. 10: slowest-stage time and its deviation from the stage mean,
+comp vs balanced (+ beyond-paper cost-balanced), per real model."""
+from __future__ import annotations
+
+from repro.core import EdgeTPUModel, plan
+from repro.core.planner import min_stages_no_spill
+from repro.models.cnn import REAL_CNNS
+
+from .common import emit
+
+MODELS = ("Xception", "ResNet50", "ResNet101", "ResNet152", "InceptionV3",
+          "InceptionV4", "InceptionResNetV2", "DenseNet121", "DenseNet169",
+          "DenseNet201", "EfficientNetLiteB3", "EfficientNetLiteB4")
+
+
+def run() -> None:
+    rows = []
+    for name in MODELS:
+        g = REAL_CNNS[name]().to_layer_graph()
+        m = EdgeTPUModel(g)
+        n = min_stages_no_spill(g, m)
+        rec = {"model": name, "n": n}
+        for strat in ("comp", "balanced", "balanced_cost"):
+            pl = plan(g, n, strat, tpu_model=m)
+            ts = m.stage_times(pl.cuts)
+            mx, mean = max(ts), sum(ts) / len(ts)
+            rec[f"{strat}_max_ms"] = round(mx * 1e3, 2)
+            rec[f"{strat}_dev_ms"] = round((mx - mean) * 1e3, 2)
+            rec[f"{strat}_balance"] = round(mean / mx, 3)
+        rows.append(rec)
+    emit("fig10_stage_balance", rows,
+         ["model", "n"] + [f"{s}_{k}" for s in
+                           ("comp", "balanced", "balanced_cost")
+                           for k in ("max_ms", "dev_ms", "balance")])
+    better = sum(1 for r in rows
+                 if r["balanced_max_ms"] <= r["comp_max_ms"] * 1.001)
+    print(f"derived: balanced slowest-stage <= comp on {better}/{len(rows)} "
+          f"models (paper Fig. 10: all)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,57 @@
+"""Train a small LM end-to-end with the fault-tolerant runtime: a few
+hundred steps on CPU with an injected failure, checkpoint/restart, and a
+decreasing loss.  (The pod-scale path lowers the same train_step through
+launch/dryrun.py.)
+
+    PYTHONPATH=src python examples/train_lm.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointStore
+from repro.data import DataConfig, SyntheticLMDataset, prefetch
+from repro.launch import steps as steps_lib
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector, TrainSupervisor
+
+
+def main() -> None:
+    steps, batch, seq = 200, 8, 64
+    cfg = dataclasses.replace(configs.get("qwen3-1.7b").smoke_config(),
+                              n_layers=2, d_model=128, d_ff=256)
+    print(f"training {cfg.name}: {steps} steps, batch {batch}, seq {seq}")
+
+    data = SyntheticLMDataset(DataConfig(global_batch=batch, seq_len=seq,
+                                         vocab=cfg.vocab))
+    params, opt_state = steps_lib.init_train_state(cfg, jax.random.PRNGKey(0))
+    raw_step = jax.jit(steps_lib.make_train_step(
+        cfg, AdamWConfig(lr=3e-3, warmup_steps=20, total_steps=steps),
+        loss_chunk=seq))
+
+    def step_fn(state, step):
+        p, o = state
+        b = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        p, o, metrics = raw_step(p, o, b)
+        return (p, o), {k: float(v) for k, v in metrics.items()}
+
+    store = CheckpointStore("/tmp/repro_example_ckpt", keep=2)
+    sup = TrainSupervisor(store, step_fn, ckpt_every=50,
+                          injector=FailureInjector(fail_at_steps=[77]))
+    (params, opt_state), report = sup.run((params, opt_state), steps)
+
+    losses = [m["loss"] for _, m in report.history]
+    head = float(np.mean(losses[:10]))
+    tail = float(np.mean(losses[-10:]))
+    print(f"restarts={report.restarts} checkpoints={report.checkpoints}")
+    print(f"loss {head:.3f} -> {tail:.3f}")
+    assert report.restarts == 1, "failure injection should trigger exactly once"
+    assert tail < head, "loss must decrease"
+    print("OK: fault-tolerant training converges")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Checkpoint store: atomic, integrity-checked pytree snapshots.
+
+Fault-tolerance contract (runtime/ft.py builds on this):
+* **atomic**: write to ``step_N.tmp/`` then rename — a crash mid-save never
+  corrupts the latest checkpoint;
+* **integrity**: every array file carries a CRC32 in metadata.json; restore
+  verifies and falls back to the previous step on mismatch;
+* **async**: ``save(..., blocking=False)`` snapshots to host memory
+  synchronously (cheap) and writes to disk on a background thread, so the
+  train loop is never blocked by I/O;
+* **retention**: keeps the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._lock = threading.Lock()
+        self._pending: Optional[threading.Thread] = None
+
+    # -- paths ----------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save -------------------------------------------------------------------
+    def save(self, step: int, tree: Params, blocking: bool = True) -> None:
+        # snapshot to host memory NOW (donated/updated arrays stay valid)
+        leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(l) for l in leaves]
+
+        def write():
+            tmp = self._step_dir(step) + ".tmp"
+            final = self._step_dir(step)
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            meta = {"step": step, "n_leaves": len(host), "crc": [],
+                    "treedef": str(treedef)}
+            for i, arr in enumerate(host):
+                path = os.path.join(tmp, f"leaf_{i:05d}.npy")
+                np.save(path, arr)
+                with open(path, "rb") as f:
+                    meta["crc"].append(zlib.crc32(f.read()))
+            with open(os.path.join(tmp, "metadata.json"), "w") as f:
+                json.dump(meta, f)
+            with self._lock:
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self._gc()
+
+        if blocking:
+            write()
+        else:
+            self.wait()
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self) -> None:
+        steps = self.steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------------
+    def _verify(self, step: int) -> bool:
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "metadata.json")) as f:
+                meta = json.load(f)
+            for i, crc in enumerate(meta["crc"]):
+                path = os.path.join(d, f"leaf_{i:05d}.npy")
+                with open(path, "rb") as f:
+                    if zlib.crc32(f.read()) != crc:
+                        return False
+            return True
+        except (OSError, json.JSONDecodeError, KeyError):
+            return False
+
+    def restore(self, template: Params, step: Optional[int] = None
+                ) -> Tuple[Optional[int], Params]:
+        """Restore into the structure of `template`; returns (step, tree).
+        Tries the latest verified checkpoint, falling back on corruption."""
+        self.wait()
+        candidates = ([step] if step is not None else
+                      list(reversed(self.steps())))
+        leaves_t, treedef = jax.tree.flatten(template)
+        for s in candidates:
+            if not self._verify(s):
+                continue
+            d = self._step_dir(s)
+            leaves = [np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+                      for i in range(len(leaves_t))]
+
+            def cast(a, t):
+                want = np.dtype(t.dtype)
+                if a.dtype.kind == "V":          # ml_dtypes (bf16) roundtrip
+                    a = a.view(want)
+                return np.asarray(a, dtype=want).reshape(t.shape)
+
+            out = jax.tree.unflatten(
+                treedef, [cast(a, t) for a, t in zip(leaves, leaves_t)])
+            return s, out
+        return None, template

@@ -1,0 +1,123 @@
+"""Shared config machinery: the four assigned input shapes, ShapeDtypeStruct
+input specs per family (vision/audio frontends are stubs providing
+precomputed embeddings), and the smoke-test reduction helper."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import LMConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def input_specs(cfg: LMConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    train/prefill: the full-sequence batch (+labels for train).
+    decode: one new token; the KV cache of ``seq_len`` is supplied by the
+    serve-step builder via ``jax.eval_shape`` over ``init_cache``.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(bb, ss):
+        return jax.ShapeDtypeStruct((bb, ss), i32)
+
+    if shape.kind == "decode":
+        return {"tokens": tok(b, 1)}
+
+    batch: Dict[str, Any] = {}
+    if cfg.family == "vlm":
+        p = cfg.n_patches
+        batch["tokens"] = tok(b, s - p)
+        batch["embeds"] = jax.ShapeDtypeStruct((b, p, cfg.d_model), cfg.dtype)
+        batch["positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+    elif cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct((b, cfg.n_frames, cfg.d_model),
+                                               cfg.dtype)
+        batch["tokens"] = tok(b, s)
+    else:
+        batch["tokens"] = tok(b, s)
+    if shape.kind == "train":
+        batch["labels"] = tok(b, s)
+    return batch
+
+
+def concrete_batch(cfg: LMConfig, seq_len: int, batch: int,
+                   key: Optional[jax.Array] = None,
+                   kind: str = "train") -> Dict[str, jax.Array]:
+    """Materialized (small) batch for smoke tests and examples."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    out: Dict[str, jax.Array] = {}
+    if cfg.family == "vlm":
+        p = cfg.n_patches
+        out["tokens"] = jax.random.randint(k1, (batch, seq_len - p), 0,
+                                           cfg.vocab, jnp.int32)
+        out["embeds"] = jax.random.normal(k2, (batch, p, cfg.d_model),
+                                          jnp.float32).astype(cfg.dtype)
+        pos = jnp.broadcast_to(jnp.arange(seq_len)[None, None],
+                               (3, batch, seq_len))
+        out["positions"] = pos.astype(jnp.int32)
+    elif cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.n_frames, cfg.d_model), jnp.float32
+        ).astype(cfg.dtype)
+        out["tokens"] = jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab,
+                                           jnp.int32)
+    else:
+        out["tokens"] = jax.random.randint(k1, (batch, seq_len), 0, cfg.vocab,
+                                           jnp.int32)
+    if kind == "train":
+        out["labels"] = jax.random.randint(
+            jax.random.fold_in(key, 7),
+            out["tokens"].shape if cfg.family != "vlm"
+            else (batch, seq_len), 0, cfg.vocab, jnp.int32)
+    return out
+
+
+def shrink(cfg: LMConfig, **over) -> LMConfig:
+    """Reduced same-family config for CPU smoke tests."""
+    d = dict(
+        name=cfg.name + "-smoke",
+        n_layers=min(cfg.n_layers, 4),
+        d_model=64, d_ff=128, vocab=512,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 4) if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=16,
+        q_chunk=32,
+        remat=False,
+        dtype=jnp.float32,
+    )
+    if cfg.family == "moe":
+        # capacity_factor high enough that smoke runs never drop tokens
+        # (decode-vs-forward equivalence tests rely on no-drop routing)
+        d.update(n_experts=4, top_k=min(cfg.top_k, 2), capacity_factor=8.0)
+    if cfg.family == "vlm":
+        d.update(mrope_sections=(4, 2, 2), n_patches=4)
+    if cfg.family == "hybrid":
+        d.update(n_layers=5, local_window=16, head_dim=16, n_kv_heads=1)
+    if cfg.family == "encdec":
+        d.update(n_enc_layers=2, n_layers=2, n_frames=12, n_kv_heads=4)
+    if cfg.family == "ssm":
+        d.update(rwkv_head_dim=16)
+    d.update(over)
+    return dataclasses.replace(cfg, **d).validate()

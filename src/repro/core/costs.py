@@ -1,0 +1,95 @@
+"""Per-layer cost helpers shared by the CNN and LM graph builders.
+
+MAC conventions follow the paper (§3): a conv layer's MACs = #params × output
+spatial dims (stride-1, zero padding keeps W×H constant); a dense layer's
+MACs = #params.  Activation byte counts assume int8 for the quantized CNN
+path (1 B/elt) and bf16 (2 B/elt) for LM archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+
+def conv2d_params(cin: int, cout: int, kh: int, kw: int, bias: bool = True) -> int:
+    return cin * cout * kh * kw + (cout if bias else 0)
+
+
+def conv2d_macs(cin: int, cout: int, kh: int, kw: int,
+                out_h: int, out_w: int) -> int:
+    return cin * cout * kh * kw * out_h * out_w
+
+
+def dw_conv2d_params(c: int, kh: int, kw: int, bias: bool = True) -> int:
+    return c * kh * kw + (c if bias else 0)
+
+
+def dw_conv2d_macs(c: int, kh: int, kw: int, out_h: int, out_w: int) -> int:
+    return c * kh * kw * out_h * out_w
+
+
+def dense_params(fin: int, fout: int, bias: bool = True) -> int:
+    return fin * fout + (fout if bias else 0)
+
+
+def dense_macs(fin: int, fout: int) -> int:
+    return fin * fout
+
+
+def conv_out_hw(h: int, w: int, kh: int, kw: int, stride: int,
+                padding: str = "same") -> Tuple[int, int]:
+    if padding == "same":
+        return math.ceil(h / stride), math.ceil(w / stride)
+    if padding == "valid":
+        return (h - kh) // stride + 1, (w - kw) // stride + 1
+    raise ValueError(padding)
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerBlockCost:
+    """Parameter/MAC breakdown of one decoder block (per token)."""
+
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    head_dim: int
+    qkv_bias: bool = False
+    n_experts: int = 0       # 0 = dense FFN
+    top_k: int = 0
+    ffn_gated: bool = True   # SwiGLU: 3 matrices; plain MLP: 2
+
+    @property
+    def attn_params(self) -> int:
+        hd = self.head_dim
+        q = self.d_model * self.n_heads * hd
+        kv = 2 * self.d_model * self.n_kv_heads * hd
+        o = self.n_heads * hd * self.d_model
+        b = (self.n_heads * hd + 2 * self.n_kv_heads * hd) if self.qkv_bias else 0
+        return q + kv + o + b
+
+    @property
+    def ffn_params_per_expert(self) -> int:
+        m = 3 if self.ffn_gated else 2
+        return m * self.d_model * self.d_ff
+
+    @property
+    def ffn_params(self) -> int:
+        n = max(1, self.n_experts)
+        router = self.d_model * self.n_experts if self.n_experts else 0
+        return n * self.ffn_params_per_expert + router
+
+    @property
+    def block_params(self) -> int:
+        norms = 2 * self.d_model
+        return self.attn_params + self.ffn_params + norms
+
+    def block_macs(self, seq_len: int, kv_len: int) -> int:
+        """MACs per sequence (projections + attention scores + FFN)."""
+        proj = seq_len * self.attn_params
+        scores = 2 * seq_len * kv_len * self.n_heads * self.head_dim
+        active = max(1, self.top_k if self.n_experts else 1)
+        ffn = seq_len * active * self.ffn_params_per_expert
+        router = seq_len * self.d_model * self.n_experts if self.n_experts else 0
+        return proj + scores + ffn + router

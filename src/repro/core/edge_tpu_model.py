@@ -1,0 +1,188 @@
+"""Analytical Edge TPU performance/memory model.
+
+This container has no Edge TPUs (and no Edge TPU compiler), so the paper's
+experiments are reproduced through a calibrated analytical model of the
+device, playing the role the real hardware plays in the paper:
+
+* **Memory model** — mirrors the Edge TPU compiler report (paper §4.2):
+  8 MiB on-chip; instructions + activations reserve a slice; weights are
+  placed *whole-layer-at-a-time* in depth order until on-chip memory is
+  exhausted; the rest lives in host memory and is re-streamed over PCIe on
+  every inference.  This reproduces the abrupt host-usage steps of Table 2.
+* **Time model** — a stage's latency = systolic compute time (at a
+  calibrated fraction of the 4 TOPS peak) + PCIe streaming of host-resident
+  weights + stage I/O.  Calibration constants are fit to the paper's
+  single-TPU measurements (Figs. 2–4, Table 5) and recorded here.
+* **Pipeline model** — B inputs through s stages: fill + steady state,
+  ``T = sum(t_i) + (B-1) * max(t_i)`` (in-order queues, no bubbles beyond
+  the slowest stage — matches the paper's executor, Fig. 5).
+
+The model is intentionally simple and *documented as a model*: benchmark
+outputs state that times are analytical.  The paper's qualitative claims
+(stepped single-TPU curve, unbalanced SEGM_COMP, SEGM_BALANCED ≥ SEGM_COMP,
+super-linear multi-TPU speedups) are validated against it, and the
+quantitative constants put the reproduced tables in the paper's ranges.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .graph import LayerGraph
+from .segmentation import segment_ranges
+
+MIB = 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeTPUSpec:
+    """Calibrated Edge TPU constants.
+
+    Calibration (documented in EXPERIMENTS.md §Paper-model).  The time model
+    has two compute terms — MAC throughput and *weight loading into the
+    systolic array* (``t = macs/(eff*peak) + weight_bytes/load_rate``).  The
+    weight-load term dominating on real CNNs explains two paper
+    observations at once: (a) per-segment time tracks segment *size*, so
+    the params-balanced split is also time-balanced (Fig. 10); (b) real
+    models sustain ~0.5 int8 TOPS while pure-conv synthetic models do
+    better (Fig. 2).  Fit of Table 5 single-TPU times with these defaults:
+    ResNet50 33 vs 29.7 ms, ResNet101 54 vs 44.7, ResNet152 72 vs 68.9,
+    InceptionV3 33 vs 37.0, DenseNet121 15 vs 14.9 (documented per-model in
+    benchmarks/segm_real.py output).
+    * ``pcie_gbps`` — effective host->device streaming for host-resident
+      weights (per inference; the delegate cannot cache what does not fit).
+    * ``spill_event_overhead_s`` — fixed per-inference driver cost once any
+      weights are host-resident.  The paper's Fig. 4 drop magnitude is
+      larger than bandwidth alone; the residual is a documented limit.
+    * capacity: ``onchip - fixed_reserve - act_factor * max_activation`` —
+      reconciles Table 2 (whole-model fits at ~6.9 MiB) with Table 4
+      (a 6.26 MiB segment of a high-activation synthetic model spills).
+    """
+
+    onchip_bytes: int = 8 * MIB          # datasheet: 8 MiB on-chip
+    peak_tops: float = 4.0               # datasheet: 4 TOPS int8 (2 ops/MAC)
+    mac_efficiency: float = 1.0          # MXU term: fraction of peak
+    weight_load_gbps: float = 1.5        # systolic-array weight fill rate
+    pcie_gbps: float = 2.0
+    fixed_reserve: int = int(0.1 * MIB)
+    act_reserve_factor: float = 0.55     # fraction of the largest activation
+                                         # charged against weight capacity
+    spill_event_overhead_s: float = 8.0e-3
+    per_inference_overhead_s: float = 3.0e-4   # invoke/driver overhead
+    queue_hop_s: float = 1.2e-4          # host queue hand-off between stages
+
+    @property
+    def macs_per_s(self) -> float:
+        return self.mac_efficiency * self.peak_tops * 1e12 / 2.0
+
+
+@dataclasses.dataclass
+class MemoryReport:
+    """Analog of the Edge TPU compiler's per-segment memory report."""
+
+    device_bytes: int
+    host_bytes: int
+    layer_placement: Dict[str, str]      # layer name -> "device" | "host"
+
+    @property
+    def spills(self) -> bool:
+        return self.host_bytes > 0
+
+
+class EdgeTPUModel:
+    """Analytical device model bound to a :class:`LayerGraph`."""
+
+    def __init__(self, graph: LayerGraph, spec: Optional[EdgeTPUSpec] = None):
+        self.graph = graph
+        self.spec = spec or EdgeTPUSpec()
+        self._depths = graph.depths()
+        self._levels = graph.levels()
+
+    # -- memory -------------------------------------------------------------
+    def segment_memory(self, depth_lo: int, depth_hi: int) -> MemoryReport:
+        """Whole-layer greedy placement in depth order (paper §4.2: 'the
+        neural layer is the minimal storage unit')."""
+        spec = self.spec
+        layers = [n for lvl in self._levels[depth_lo:depth_hi + 1] for n in lvl]
+        act = max([self.graph.nodes[n].out_bytes for n in layers] + [0])
+        capacity = int(spec.onchip_bytes - spec.fixed_reserve
+                       - spec.act_reserve_factor * act)
+        device_used = 0
+        host_used = 0
+        placement: Dict[str, str] = {}
+        for n in layers:
+            b = self.graph.nodes[n].bytes
+            if device_used + b <= capacity:
+                device_used += b
+                placement[n] = "device"
+            else:
+                host_used += b
+                placement[n] = "host"
+        return MemoryReport(device_bytes=device_used, host_bytes=host_used,
+                            layer_placement=placement)
+
+    def whole_model_memory(self) -> MemoryReport:
+        return self.segment_memory(0, self.graph.depth - 1)
+
+    # -- time ----------------------------------------------------------------
+    def segment_time(self, depth_lo: int, depth_hi: int,
+                     mem: Optional[MemoryReport] = None) -> float:
+        """Per-inference latency of one segment on one TPU (seconds)."""
+        spec = self.spec
+        mem = mem or self.segment_memory(depth_lo, depth_hi)
+        layers = [n for lvl in self._levels[depth_lo:depth_hi + 1] for n in lvl]
+        macs = sum(self.graph.nodes[n].macs for n in layers)
+        weight_bytes = sum(self.graph.nodes[n].bytes for n in layers)
+        t_compute = (macs / spec.macs_per_s
+                     + weight_bytes / (spec.weight_load_gbps * 1e9))
+        t_stream = mem.host_bytes / (spec.pcie_gbps * 1e9)
+        t_spill = spec.spill_event_overhead_s if mem.host_bytes > 0 else 0.0
+        # stage input/output transfer through host queues
+        in_bytes = (self.graph.out_bytes_per_depth()[depth_lo - 1]
+                    if depth_lo > 0 else 0)
+        out_bytes = (self.graph.out_bytes_per_depth()[depth_hi]
+                     if depth_hi < self.graph.depth - 1 else 0)
+        t_io = (in_bytes + out_bytes) / (spec.pcie_gbps * 1e9)
+        return (t_compute + t_stream + t_spill + t_io
+                + spec.per_inference_overhead_s)
+
+    def single_tpu_time(self) -> float:
+        return self.segment_time(0, self.graph.depth - 1)
+
+    def single_tpu_tops(self) -> float:
+        """Sustained int8 TOPS for the whole model on one TPU (Fig. 2)."""
+        t = self.single_tpu_time()
+        return 2.0 * self.graph.total_macs / t / 1e12
+
+    # -- pipeline -------------------------------------------------------------
+    def stage_times(self, cuts: Sequence[int]) -> List[float]:
+        ranges = segment_ranges(self.graph.depth, cuts)
+        return [self.segment_time(lo, hi) for lo, hi in ranges]
+
+    def stage_memories(self, cuts: Sequence[int]) -> List[MemoryReport]:
+        ranges = segment_ranges(self.graph.depth, cuts)
+        return [self.segment_memory(lo, hi) for lo, hi in ranges]
+
+    def pipeline_batch_time(self, cuts: Sequence[int], batch: int = 15) -> float:
+        """Latency of a `batch`-input batch through the stage pipeline.
+
+        Fill (one traversal of all stages) + steady state paced by the
+        slowest stage + per-hop queue overhead (paper Fig. 5 executor).
+        """
+        times = self.stage_times(cuts)
+        hop = self.spec.queue_hop_s * len(times)
+        return sum(times) + (batch - 1) * max(times) + hop * batch
+
+    def single_tpu_batch_time(self, batch: int = 15) -> float:
+        return batch * self.single_tpu_time()
+
+    def speedup(self, cuts: Sequence[int], batch: int = 15) -> float:
+        return (self.single_tpu_batch_time(batch)
+                / self.pipeline_batch_time(cuts, batch))
+
+    # -- SEGM_PROF cost hook --------------------------------------------------
+    def prof_cost(self, batch: int = 15):
+        """Cost function for segmentation.prof_split (lower = better)."""
+        def cost(cuts: List[int]) -> float:
+            return self.pipeline_batch_time(cuts, batch)
+        return cost

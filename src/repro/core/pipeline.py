@@ -1,0 +1,111 @@
+"""Host-threaded pipeline executor — faithful to the paper's implementation.
+
+Paper §5.1 / Fig. 5: "we deploy a host thread per Edge TPU that is in charge
+of handling it, and a queue (implementing thread-safe mechanisms) on the host
+to communicate intermediate results among devices."
+
+Here each *stage* owns a worker thread and an input queue; stage ``i`` pops an
+item, applies its stage function, and pushes the result to stage ``i+1``'s
+queue.  Stage functions are arbitrary callables: the CNN benchmarks bind them
+to real JAX forwards of the stage's layers; tests bind simulated latencies to
+validate the analytical pipeline model.
+
+This executor is the *paper-faithful* path (host-mediated transfers).  The
+pod-scale SPMD path (shard_map + ppermute over ICI) lives in
+launch/pipeline_spmd.py and consumes the same SegmentationPlan.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+_SENTINEL = object()
+
+
+class PipelineExecutor:
+    """Run inputs through a chain of stage functions with one thread/stage."""
+
+    def __init__(self, stage_fns: Sequence[Callable[[Any], Any]],
+                 queue_size: int = 64):
+        if not stage_fns:
+            raise ValueError("need at least one stage")
+        self.stage_fns = list(stage_fns)
+        self.queue_size = queue_size
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_fns)
+
+    def run_batch(self, inputs: Sequence[Any],
+                  collect_stage_times: bool = False
+                  ) -> Tuple[List[Any], Optional[List[float]]]:
+        """Push `inputs` through the pipeline; returns (outputs, stage_busy_s).
+
+        Outputs preserve input order (in-order queues).  ``stage_busy_s[i]``
+        is the total busy time of stage i — the paper's Fig. 10 metric.
+        """
+        n = self.n_stages
+        qs: List[queue.Queue] = [queue.Queue(self.queue_size) for _ in range(n + 1)]
+        busy = [0.0] * n
+        errors: List[BaseException] = []
+
+        def worker(i: int) -> None:
+            fn = self.stage_fns[i]
+            while True:
+                item = qs[i].get()
+                if item is _SENTINEL:
+                    qs[i + 1].put(_SENTINEL)
+                    return
+                try:
+                    t0 = time.perf_counter()
+                    out = fn(item)
+                    busy[i] += time.perf_counter() - t0
+                except BaseException as e:   # surface worker failures
+                    errors.append(e)
+                    qs[i + 1].put(_SENTINEL)
+                    return
+                qs[i + 1].put(out)
+
+        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
+                   for i in range(n)]
+        for t in threads:
+            t.start()
+        for x in inputs:
+            qs[0].put(x)
+        qs[0].put(_SENTINEL)
+
+        outputs: List[Any] = []
+        while True:
+            item = qs[n].get()
+            if item is _SENTINEL:
+                break
+            outputs.append(item)
+        for t in threads:
+            t.join(timeout=30)
+        if errors:
+            raise errors[0]
+        return outputs, (busy if collect_stage_times else None)
+
+    def timed_run(self, inputs: Sequence[Any]) -> Tuple[List[Any], float, List[float]]:
+        t0 = time.perf_counter()
+        outs, busy = self.run_batch(inputs, collect_stage_times=True)
+        return outs, time.perf_counter() - t0, busy or []
+
+
+def simulated_stage(latency_s: float) -> Callable[[Any], Any]:
+    """A stage that just sleeps — used to validate the pipeline time model."""
+    def fn(x: Any) -> Any:
+        time.sleep(latency_s)
+        return x
+    return fn
+
+
+def stage_balance_metrics(stage_times: Sequence[float]) -> dict:
+    """Paper Fig. 10 metrics: slowest stage time and deviation from mean."""
+    mx = max(stage_times)
+    mean = sum(stage_times) / len(stage_times)
+    return {"max_stage_s": mx, "mean_stage_s": mean,
+            "max_minus_mean_s": mx - mean,
+            "balance": mean / mx if mx > 0 else 1.0}

@@ -1,0 +1,144 @@
+"""Strategy dispatch: LayerGraph + strategy name -> SegmentationPlan.
+
+The plan is the single hand-off object between the paper's algorithms and the
+executors: the host-threaded pipeline (core/pipeline.py), the SPMD pipeline
+(launch/pipeline_spmd.py), and the benchmarks all consume a plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from .edge_tpu_model import EdgeTPUModel
+from .graph import LayerGraph
+from .refine import GraphReporter, MemoryReporter, RefinementResult, refine_cuts
+from .segmentation import (balanced_split, comp_split, imbalance, prof_split,
+                           segment_ranges, segment_sums)
+
+STRATEGIES = ("comp", "prof", "balanced", "balanced_norefine",
+              "balanced_cost")
+
+
+@dataclasses.dataclass
+class SegmentationPlan:
+    """Stage assignment for a model pipeline."""
+
+    graph_name: str
+    strategy: str
+    n_stages: int
+    cuts: List[int]                       # s-1 cut depths
+    stage_depth_ranges: List[tuple]       # [(lo, hi)] inclusive
+    stage_layers: List[List[str]]         # layer names per stage
+    stage_params: List[int]
+    refinement: Optional[RefinementResult] = None
+
+    @property
+    def imbalance(self) -> int:
+        """Δs (paper Table 5): largest minus smallest stage, in params."""
+        return max(self.stage_params) - min(self.stage_params)
+
+    def describe(self) -> str:
+        segs = ", ".join(
+            f"S{i}[d{lo}-{hi}]={p/1e6:.2f}M"
+            for i, ((lo, hi), p) in enumerate(
+                zip(self.stage_depth_ranges, self.stage_params)))
+        return (f"{self.graph_name} / {self.strategy} x{self.n_stages}: {segs} "
+                f"(Δs={self.imbalance/1e6:.2f}M)")
+
+
+def plan(
+    graph: LayerGraph,
+    n_stages: int,
+    strategy: str = "balanced",
+    reporter: Optional[MemoryReporter] = None,
+    tpu_model: Optional[EdgeTPUModel] = None,
+    prof_batch: int = 15,
+) -> SegmentationPlan:
+    """Produce a SegmentationPlan with the requested paper strategy.
+
+    * ``comp``               — SEGM_COMP (layer-count balanced; vendor model)
+    * ``prof``               — SEGM_PROF (exhaustive; shallow models only)
+    * ``balanced_norefine``  — SEGM_BALANCED step 2 only (Algorithm 1)
+    * ``balanced``           — SEGM_BALANCED steps 2+3 (refinement with the
+                               supplied memory reporter; defaults to the
+                               analytical Edge TPU reporter)
+    * ``balanced_cost``      — BEYOND-PAPER: Algorithm 1 run over modeled
+                               per-depth *time* (MAC + weight-load terms)
+                               instead of raw params, then §6.1.3
+                               refinement.  Fixes the residual imbalance on
+                               archs whose MAC intensity varies with depth
+                               (e.g. high-resolution early CNN stages).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; pick from {STRATEGIES}")
+    P = graph.params_per_depth()
+    d = len(P)
+    refinement = None
+
+    if strategy == "comp":
+        cuts = comp_split(P, n_stages)
+    elif strategy == "prof":
+        model = tpu_model or EdgeTPUModel(graph)
+        cuts = prof_split(P, n_stages, model.prof_cost(batch=prof_batch))
+    elif strategy == "balanced_norefine":
+        cuts = balanced_split(P, n_stages)
+    elif strategy == "balanced_cost":
+        model = tpu_model or EdgeTPUModel(graph)
+        spec = model.spec
+        # integer per-depth cost in nanoseconds: MAC term + weight-load term
+        C = [int(1e9 * (m / spec.macs_per_s
+                        + b / (spec.weight_load_gbps * 1e9)))
+             for m, b in zip(graph.macs_per_depth(),
+                             graph.bytes_per_depth())]
+        cuts = balanced_split(C, n_stages)
+        if reporter is None:
+            reporter = GraphReporter(model)
+        refinement = refine_cuts(cuts, d, reporter)
+        if refinement.converged:
+            cuts = refinement.cuts
+    else:  # balanced = Algorithm 1 + §6.1.3 refinement
+        cuts = balanced_split(P, n_stages)
+        if reporter is None:
+            reporter = GraphReporter(tpu_model or EdgeTPUModel(graph))
+        refinement = refine_cuts(cuts, d, reporter)
+        if refinement.converged:
+            cuts = refinement.cuts
+        # else: spill is unavoidable at this stage count — keep the
+        # Algorithm-1 optimum rather than the refiner's wandering point
+
+    ranges = segment_ranges(d, cuts)
+    layers = [graph.layers_in_depth_range(lo, hi) for lo, hi in ranges]
+    params = segment_sums(P, cuts)
+    return SegmentationPlan(
+        graph_name=graph.name, strategy=strategy, n_stages=n_stages,
+        cuts=list(cuts), stage_depth_ranges=ranges, stage_layers=layers,
+        stage_params=params, refinement=refinement)
+
+
+def min_stages_to_fit(graph: LayerGraph, capacity_bytes: int) -> int:
+    """ceil(model_size / capacity): the paper's TPU-count rule (Table 5 note:
+    'a model occupying S MiB has been fragmented into ceil(S/8) TPUs')."""
+    total = graph.total_bytes
+    return max(1, -(-total // capacity_bytes))
+
+
+def min_stages_no_spill(graph: LayerGraph,
+                        tpu_model: Optional[EdgeTPUModel] = None,
+                        max_extra: int = 4) -> int:
+    """The paper's working rule (§5.2.2): 'the minimum number of TPUs that
+    would ideally avoid host memory usage' — smallest n whose refined
+    balanced plan leaves every segment on-device."""
+    model = tpu_model or EdgeTPUModel(graph)
+    start = min_stages_to_fit(graph, model.spec.onchip_bytes)
+    for n in range(start, start + max_extra + 1):
+        if n >= graph.depth:
+            return n
+        pl = plan(graph, n, "balanced", tpu_model=model)
+        if all(m.host_bytes == 0 for m in model.stage_memories(pl.cuts)):
+            return n
+    return start + max_extra
+
+
+def plan_summary_table(graph: LayerGraph, n_stages: int,
+                       strategies: Sequence[str] = ("comp", "balanced")) -> Dict[str, SegmentationPlan]:
+    return {s: plan(graph, n_stages, s) for s in strategies}

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot-spots.
+
+Each kernel module holds the ``pl.pallas_call`` + BlockSpec implementation;
+``ops.py`` exposes jit'd wrappers with CPU fallbacks; ``ref.py`` holds the
+pure-jnp oracles used by the allclose test sweeps (interpret=True on CPU).
+"""
+from .ops import (flash_attention, flash_decode, matmul_qi8, quantize_int8,
+                  quantized_dense, rglru_scan, rwkv6_scan)
+
+__all__ = ["flash_attention", "flash_decode", "matmul_qi8", "quantize_int8",
+           "quantized_dense", "rglru_scan", "rwkv6_scan"]

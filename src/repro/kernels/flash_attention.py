@@ -1,0 +1,109 @@
+"""Blocked online-softmax (flash) attention forward, GQA-aware.
+
+TPU-native adaptation of the attention hot-spot for the LM prefill path:
+instead of materializing the (S, T) score matrix in HBM, each (batch,
+q-head, q-block) streams KV blocks through VMEM carrying running max /
+denominator / accumulator in VMEM scratch — the TPU grid's innermost
+dimension executes sequentially per core, so scratch persists across the
+KV loop.
+
+Grid: (B, Hq, S/bq, T/bk).  GQA is folded into the k/v BlockSpec index maps
+(q-head h reads kv-head h // group) — no materialized head broadcast.
+Causal masking skips fully-masked KV blocks via the index map (they still
+occupy grid steps but exit early through @pl.when).
+
+Block defaults bq=bk=128: q tile (128, D) + k/v tiles (128, D) + fp32
+accumulators -> < 1 MiB VMEM for D=128, leaving room for double buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, nk: int, bq: int, bk: int, scale: float, causal: bool,
+            q_offset: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # kv block strictly after the q block's last row -> fully masked
+        run = (ki * bk) <= (q_offset + qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)           # (bk, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = (q_offset + qi * bq
+                    + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, S, D); k/v: (B, Hkv, T, D) -> (B, Hq, S, D).
+
+    When S != T (chunked prefill / cache-extended queries) the queries are
+    right-aligned: query i sits at absolute position T - S + i."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert s % bq == 0 and t % bk == 0, (s, t, bq, bk)
+    grid = (b, hq, s // bq, t // bk)
+    scale = d ** -0.5
+    kernel = functools.partial(_kernel, nk=t // bk, bq=bq, bk=bk,
+                               scale=scale, causal=causal, q_offset=t - s)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bb, h, qi, ki: (bb, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, qi, ki: (bb, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, qi, ki: (bb, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda bb, h, qi, ki: (bb, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

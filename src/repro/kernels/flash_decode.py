@@ -1,0 +1,97 @@
+"""Flash-decoding kernel: single-token cached attention, GQA-aware.
+
+The §Roofline analysis puts every decode cell 5-20x above the cache-read
+floor because the jnp path materializes per-layer fp32 score vectors in
+HBM.  This kernel streams the KV cache through VMEM once, carrying the
+online-softmax stats in scratch — the in-chip analogue of the
+sequence-sharded cache the SPMD layer already uses across chips
+(EXPERIMENTS.md §Perf pair 3).
+
+Grid: (B, Hq, T/bk), KV innermost (sequential; scratch persists).  The
+valid cache length arrives as a scalar in SMEM; blocks fully past it are
+skipped.  q: (B, Hq, D); k/v caches: (B, Hkv, T, D); GQA folded into the
+cache index maps (q-head h reads kv-head h // group).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, nk: int, bk: int, scale: float):
+    ki = pl.program_id(2)
+    valid_len = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(ki * bk < valid_len)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (1, D) row
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
+        s = jnp.where(kpos < valid_len, s, NEG_INF)     # (1, bk)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                 cache_len: jax.Array, bk: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """q: (B, Hq, D); k/v caches: (B, Hkv, T, D); cache_len: () int32
+    (entries [0, cache_len) are valid) -> (B, Hq, D)."""
+    b, hq, d = q.shape
+    _, hkv, t, _ = k_cache.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    assert t % bk == 0, (t, bk)
+    nk = t // bk
+    scale = d ** -0.5
+    q4 = q[:, :, None, :]                                # (B, Hq, 1, D)
+    len_arr = jnp.asarray(cache_len, jnp.int32).reshape(1)
+    kernel = functools.partial(_kernel, nk=nk, bk=bk, scale=scale)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, h, ki: (bb, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, ki: (bb, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bb, h, ki: (bb, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, h, ki: (bb, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),     # running max
+            pltpu.VMEM((1, 1), jnp.float32),     # running denominator
+            pltpu.VMEM((1, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(len_arr, q4, k_cache, v_cache)
+    return out[:, :, 0, :]

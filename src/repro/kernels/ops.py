@@ -1,0 +1,99 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Policy: on TPU backends the Pallas kernel runs compiled; everywhere else
+(`interpret=True` or a non-TPU backend) the wrapper either interprets the
+kernel (tests) or falls back to the jnp oracle (production CPU path), so the
+library is runnable on any backend.  Quantization helpers for the int8
+(Edge-TPU-faithful) inference mode live here too.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash_pallas
+from .flash_decode import flash_decode as _flash_decode_pallas
+from .matmul_qi8 import matmul_qi8 as _matmul_pallas
+from .rglru_scan import rglru_scan as _rglru_pallas
+from .rwkv6_scan import rwkv6_scan as _rwkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Quantization (per-tensor symmetric int8 — the Edge TPU scheme, paper §2.1)
+# ---------------------------------------------------------------------------
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Returns (q int8, scale fp32) with q * scale ~= x."""
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    scale = (amax / 127.0).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+@functools.partial(jax.jit, static_argnames=("block", "use_pallas"))
+def matmul_qi8(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+               w_scale: jax.Array, block=(128, 128, 128),
+               use_pallas: Optional[bool] = None) -> jax.Array:
+    """Quantized matmul -> fp32 (dequantized).  x_q (M,K), w_q (K,N) int8."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    acc = (_matmul_pallas(x_q, w_q, block=block)
+           if use else ref.matmul_qi8_ref(x_q, w_q))
+    return acc.astype(jnp.float32) * x_scale * w_scale
+
+
+def quantized_dense(x: jax.Array, w: jax.Array) -> jax.Array:
+    """fp32 in/out dense through the int8 path (quantize -> mm -> dequant)."""
+    xq, sx = quantize_int8(x)
+    wq, sw = quantize_int8(w)
+    return ref.matmul_qi8_ref(xq, wq).astype(jnp.float32) * sx * sw
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "use_pallas"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128, use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _flash_pallas(q, k, v, causal=causal, bq=bq, bk=bk)
+    return ref.flash_attention_ref(q, k, v, causal=causal)
+
+
+@functools.partial(jax.jit, static_argnames=("bk", "use_pallas"))
+def flash_decode(q, k_cache, v_cache, cache_len, bk: int = 128,
+                 use_pallas: Optional[bool] = None):
+    """Single-token cached attention (decode hot path)."""
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _flash_decode_pallas(q, k_cache, v_cache, cache_len, bk=bk)
+    return ref.flash_decode_ref(q, k_cache, v_cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# Recurrences
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def rglru_scan(a, g, h0, chunk: int = 256,
+               use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _rglru_pallas(a, g, h0, chunk=chunk)
+    return ref.rglru_scan_ref(a, g, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def rwkv6_scan(r, k, v, w, u, s0, chunk: int = 128,
+               use_pallas: Optional[bool] = None):
+    use = _on_tpu() if use_pallas is None else use_pallas
+    if use:
+        return _rwkv6_pallas(r, k, v, w, u, s0, chunk=chunk)
+    return ref.rwkv6_scan_ref(r, k, v, w, u, s0)

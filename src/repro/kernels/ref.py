@@ -1,0 +1,78 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_qi8_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """int8 x int8 -> int32 exact."""
+    return jax.lax.dot_general(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B,Hq,S,D); k/v: (B,Hkv,T,D) -> (B,Hq,S,D), fp32 softmax."""
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bkgsd,bktd->bkgst", qg, kf) / (d ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, t), bool), k=t - s)
+        scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def flash_decode_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len) -> jax.Array:
+    """Single-token cached attention.  q: (B,Hq,D); caches (B,Hkv,T,D)."""
+    b, hq, d = q.shape
+    hkv, t = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qg,
+                        k_cache.astype(jnp.float32)) / (d ** 0.5)
+    valid = jnp.arange(t)[None, None, None, :] < cache_len
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,bktd->bkgd", probs,
+                     v_cache.astype(jnp.float32))
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
+def rglru_scan_ref(a: jax.Array, g: jax.Array, h0: jax.Array):
+    """h_t = a_t h_{t-1} + g_t.  Returns (y (B,S,R), h_last fp32)."""
+    def step(h, xs):
+        a_t, g_t = xs
+        h = a_t.astype(jnp.float32) * h + g_t.astype(jnp.float32)
+        return h, h
+
+    h_last, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (a.transpose(1, 0, 2), g.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(a.dtype), h_last
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """Per-head WKV recurrence.  Returns (y (B,H,S,D), s_last fp32)."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs                       # (B,H,D) each
+        kv = k_t[..., :, None] * v_t[..., None, :]    # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       state + uf[None, :, :, None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, y
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (rf, kf, vf, wf))
+    s_last, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), s_last

@@ -1,0 +1,85 @@
+"""Blocked RWKV6 WKV recurrence (Finch time-mix core).
+
+Per head with state S in R^(K x V):
+
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+
+The (K, V) state tile lives in fp32 VMEM scratch and persists across the
+sequential chunk grid; within a chunk the recurrence is an unrolled loop of
+rank-1 updates + (1, K) x (K, V) matvecs — MXU/VPU-friendly, no cross-core
+communication (the GPU reference implementation's shared-memory tiling maps
+to the VMEM-resident state here; see DESIGN.md).
+
+Inputs r/k/v/w: (B, H, S, D) with D = head_dim (K == V == D); u: (H, D).
+Outputs y: (B, H, S, D) + final state (B, H, D, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+            st_ref, *, chunk: int, n_chunks: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        st_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                     # (D,)
+
+    def step(t, state):
+        r = r_ref[0, 0, t].astype(jnp.float32)           # (D,)
+        k = k_ref[0, 0, t].astype(jnp.float32)
+        v = v_ref[0, 0, t].astype(jnp.float32)
+        w = w_ref[0, 0, t].astype(jnp.float32)
+        kv = k[:, None] * v[None, :]                     # (K, V) rank-1
+        y = jnp.einsum("k,kv->v", r, state + u[:, None] * kv)
+        y_ref[0, 0, t] = y.astype(y_ref.dtype)
+        return w[:, None] * state + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, st_ref[...])
+    st_ref[...] = state
+
+    @pl.when(pl.program_id(2) == n_chunks - 1)
+    def _flush():
+        sout_ref[0, 0] = state
+
+
+def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+               u: jax.Array, s0: jax.Array, chunk: int = 128,
+               interpret: bool = False):
+    """Returns (y, s_last).  r/k/v/w: (B,H,S,D); u: (H,D); s0: (B,H,D,D)."""
+    b, h, s, d = r.shape
+    assert u.shape == (h, d) and s0.shape == (b, h, d, d)
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    kernel = functools.partial(_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, s_last = pl.pallas_call(
+        kernel,
+        grid=(b, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, c: (bb, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, c: (bb, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, c: (bb, hh, c, 0)),
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, c: (bb, hh, c, 0)),
+            pl.BlockSpec((1, d), lambda bb, hh, c: (hh, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bb, hh, c: (bb, hh, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, c: (bb, hh, c, 0)),
+            pl.BlockSpec((1, 1, d, d), lambda bb, hh, c: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), r.dtype),
+            jax.ShapeDtypeStruct((b, h, d, d), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, s0)
+    return y, s_last

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, sharding rules, train/serve steps, dry-run."""

@@ -1,0 +1,67 @@
+"""Parse collective-communication bytes out of lowered/compiled HLO text.
+
+``compiled.cost_analysis()`` has no collective term, so the roofline's
+third term comes from summing the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+in the (post-SPMD-partitioning) HLO.  Operand types appear inline in HLO
+call sites (``all-reduce(f32[8,128]{1,0} %add.5)``), so one regex pass
+over the text suffices.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g. "bf16[8,128,1024]" (dims optional: "f32[]" is a scalar)
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# collective instruction line: "...= TYPE[..] all-reduce(ARGS)..." — also
+# match fused/start variants (all-reduce-start, all-gather-start, ...)
+_COLL_RE = re.compile(
+    r"=\s+[^=]*?\b(" + "|".join(COLLECTIVES) + r")(?:-start)?\((.*)$")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective operand bytes (one program execution, per device),
+    plus 'total'."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind, args = m.group(1), m.group(2)
+        # cut at the closing paren of the call (args never nest parens
+        # except in replica_groups={{...}} which comes after ')')
+        depth, end = 1, len(args)
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        ops = args[:end]
+        b = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(ops))
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in COLLECTIVES)
+    out["counts"] = counts  # type: ignore[assignment]
+    return out

@@ -1,0 +1,377 @@
+"""HLO-text cost analysis with while-loop trip-count scaling.
+
+``compiled.cost_analysis()`` counts a while-loop body ONCE, so a scanned
+48-layer transformer reports ~1/48th of its real FLOPs; collectives inside
+the scan are similarly undercounted.  This module parses the post-SPMD
+optimized HLO (``compiled.as_text()``) and evaluates costs bottom-up,
+multiplying while bodies by their trip counts:
+
+* **flops**: every ``dot`` (2 * prod(result dims) * contracting size) and
+  ``convolution`` — resolved through an instruction-shape map;
+* **collective bytes**: operand bytes of all-gather / all-reduce /
+  reduce-scatter / all-to-all / collective-permute (``-start`` variants
+  counted once, ``-done`` skipped);
+* **hbm bytes** (fusion-optimistic TPU model): the CPU backend materializes
+  elementwise chains that a TPU build would fuse into neighbouring matmuls,
+  so raw operand+result counting over-reports traffic by ~100x on
+  softmax-heavy decode graphs.  We count traffic only at ops that *must*
+  touch HBM at TPU fusion granularity — dot/convolution, reduce(-window),
+  gather/scatter, sort, concatenate, copy, dynamic-(update-)slice (slice
+  bytes only), and fusions whose root is one of these; pure elementwise
+  producers are treated as fused into their consumers (their buffers are
+  still counted once wherever a counted op reads them);
+* **trip counts**: parsed from each while condition's comparison constant.
+
+Known caveats (documented in EXPERIMENTS.md): CPU-backend HLO contains
+bf16->f32 legalization converts that a TPU build would not have — flops of
+converts are not counted; elementwise-dominated layers (rwkv ddlerp) may
+undercount HBM traffic by up to ~2x; conditionals take the max over
+branches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_TOKEN = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_ATTR_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_ATTR_BODY = re.compile(r"body=%?([\w.\-]+)")
+_ATTR_COND = re.compile(r"condition=%?([\w.\-]+)")
+_ATTR_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_ATTR_BRANCHES = re.compile(r"branch_computations={([^}]*)}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims={([0-9,]*)}")
+_CONST_RE = re.compile(r"constant\((-?\d+)\)")
+
+_SKIP_BYTES_OPS = ("parameter(", "constant(", "get-tuple-element(",
+                   "bitcast(", "tuple(", "after-all(", "partition-id(",
+                   "replica-id(")
+
+# ops that materialize HBM traffic at TPU fusion granularity
+_MEM_OPS = (" dot(", " convolution(", " reduce(", " reduce-window(",
+            " gather(", " scatter(", " sort(", " concatenate(", " copy(",
+            " dynamic-slice(", " cholesky(", " triangular-solve(",
+            " rng(", " rng-bit-generator(", " fft(")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    """All dtype[dims] tokens in a type string (tuples give several)."""
+    out = []
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    body: str           # everything right of '='
+    is_root: bool = False
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Optional[Dict[str, float]] = None
+    coll_counts: Optional[Dict[str, float]] = None
+
+    def __add__(self, o: "CostTotals") -> "CostTotals":
+        kinds = {k: (self.coll_by_kind or {}).get(k, 0.0)
+                 + (o.coll_by_kind or {}).get(k, 0.0)
+                 for k in COLLECTIVES}
+        counts = {k: (self.coll_counts or {}).get(k, 0.0)
+                  + (o.coll_counts or {}).get(k, 0.0)
+                  for k in COLLECTIVES}
+        return CostTotals(self.flops + o.flops,
+                          self.hbm_bytes + o.hbm_bytes,
+                          self.coll_bytes + o.coll_bytes, kinds, counts)
+
+    def scaled(self, f: float) -> "CostTotals":
+        return CostTotals(
+            self.flops * f, self.hbm_bytes * f, self.coll_bytes * f,
+            {k: v * f for k, v in (self.coll_by_kind or {}).items()},
+            {k: v * f for k, v in (self.coll_counts or {}).items()})
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, Computation] = {}
+        self.shape_of: Dict[str, str] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, CostTotals] = {}
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str) -> None:
+        cur: Optional[Computation] = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line:
+                continue
+            if line.endswith("{") and "->" in line:
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = Computation(m.group(1), [])
+                    self.computations[cur.name] = cur
+                    if line.startswith("ENTRY"):
+                        self.entry = cur.name
+                    continue
+            if line == "}":
+                cur = None
+                continue
+            m = _DEF_RE.match(line)
+            if m and cur is not None:
+                name, rhs = m.group(1), m.group(2)
+                instr = Instr(name, rhs, rhs,
+                              is_root=line.lstrip().startswith("ROOT"))
+                cur.instrs.append(instr)
+                # record result type (first shape tokens before the op call)
+                self.shape_of[name] = rhs
+
+    # -------------------------------------------------------------- helpers
+    def _result_bytes(self, instr: Instr) -> int:
+        # result type is the prefix of rhs before the op name; taking the
+        # first shape token (or tuple) is sufficient
+        paren = instr.body.find("(")
+        head = instr.body[:paren] if paren > 0 else instr.body
+        return _bytes_of(head)
+
+    def _operand_names(self, instr: Instr) -> List[str]:
+        paren = instr.body.find("(")
+        if paren < 0:
+            return []
+        depth, end = 0, len(instr.body)
+        for i in range(paren, len(instr.body)):
+            ch = instr.body[i]
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        return _OPERAND_RE.findall(instr.body[paren:end])
+
+    def _operand_bytes(self, instr: Instr) -> int:
+        total = 0
+        for name in self._operand_names(instr):
+            rhs = self.shape_of.get(name)
+            if rhs is None:
+                continue
+            paren = rhs.find("(")
+            head = rhs[:paren] if paren > 0 else rhs
+            total += _bytes_of(head)
+        return total
+
+    def _dot_flops(self, instr: Instr) -> float:
+        out_shapes = _shape_list(instr.body[:instr.body.find(" dot(") + 1]
+                                 or instr.body)
+        if not out_shapes:
+            return 0.0
+        out_elems = 1
+        for d in out_shapes[0][1]:
+            out_elems *= d
+        # contracting size from lhs operand shape + lhs_contracting_dims
+        ops = self._operand_names(instr)
+        m = _CONTRACT_RE.search(instr.body)
+        contract = 1
+        if ops and m:
+            lhs_rhs = self.shape_of.get(ops[0], "")
+            lhs_shapes = _shape_list(lhs_rhs[:lhs_rhs.find("(")]
+                                     if "(" in lhs_rhs else lhs_rhs)
+            if lhs_shapes:
+                dims = lhs_shapes[0][1]
+                for ax in m.group(1).split(","):
+                    if ax:
+                        ax_i = int(ax)
+                        if ax_i < len(dims):
+                            contract *= dims[ax_i]
+        return 2.0 * out_elems * contract
+
+    def _conv_flops(self, instr: Instr) -> float:
+        # flops ~= 2 * out_elems * (kh*kw*cin/groups); parse kernel shape
+        ops = self._operand_names(instr)
+        out_shapes = _shape_list(instr.body[:instr.body.find("(")])
+        if len(ops) < 2 or not out_shapes:
+            return 0.0
+        out_elems = 1
+        for d in out_shapes[0][1]:
+            out_elems *= d
+        k_rhs = self.shape_of.get(ops[1], "")
+        k_shapes = _shape_list(k_rhs[:k_rhs.find("(")]
+                               if "(" in k_rhs else k_rhs)
+        if not k_shapes:
+            return 0.0
+        kdims = k_shapes[0][1]
+        # HWIO kernel: prod(all) / out_features ~= kh*kw*cin
+        if not kdims:
+            return 0.0
+        per_out = 1
+        for d in kdims:
+            per_out *= d
+        # divide by output-feature dim (last by HWIO / f in dims);
+        # use max dim as feature heuristic-free: take dims[-1]
+        per_out //= max(1, kdims[-1])
+        return 2.0 * out_elems * per_out
+
+    def _fusion_bytes(self, ins: Instr, called: str) -> int:
+        """Fusion traffic at TPU granularity, decided by the fused root:
+        dus-root -> slice bytes only; mem-op root -> operands + result;
+        elementwise root -> fused away (0)."""
+        res = self._result_bytes(ins)
+        comp = self.computations.get(called)
+        if comp:
+            root = next((i for i in comp.instrs if i.is_root),
+                        comp.instrs[-1] if comp.instrs else None)
+            dus_bytes = 0
+            for inner in comp.instrs:
+                if " dynamic-update-slice(" in inner.body:
+                    ops = self._operand_names(inner)
+                    if len(ops) >= 2:
+                        upd = self.shape_of.get(ops[1], "")
+                        head = upd[:upd.find("(")] if "(" in upd else upd
+                        dus_bytes += 2 * _bytes_of(head)
+            if dus_bytes:
+                # in-place scatter-write fusion (incl. tuple roots): only
+                # the updated slices move
+                return dus_bytes
+            if any(" dynamic-slice(" in inner.body for inner in comp.instrs):
+                # gather-from-big-buffer fusion: the source buffer is not
+                # traffic, only the extracted slice (~ the fusion result)
+                return 2 * res
+            if root is not None and not any(op in root.body
+                                            for op in _MEM_OPS):
+                return 0                    # elementwise root: fused away
+        return res + self._operand_bytes(ins)
+
+    def _trip_count(self, cond_name: str) -> int:
+        comp = self.computations.get(cond_name)
+        if not comp:
+            return 1
+        consts = []
+        for ins in comp.instrs:
+            consts += [int(c) for c in _CONST_RE.findall(ins.body)]
+        pos = [c for c in consts if c > 0]
+        return max(pos) if pos else 1
+
+    # ---------------------------------------------------------------- evaluate
+    def computation_cost(self, name: str, top_level: bool = True
+                         ) -> CostTotals:
+        key = f"{name}@{top_level}"
+        if key in self._memo:
+            return self._memo[key]
+        comp = self.computations.get(name)
+        total = CostTotals(coll_by_kind={k: 0.0 for k in COLLECTIVES},
+                           coll_counts={k: 0.0 for k in COLLECTIVES})
+        if comp is None:
+            return total
+        self._memo[key] = total     # break cycles defensively
+        for ins in comp.instrs:
+            body = ins.body
+            # --- nested computations -------------------------------------
+            mb = _ATTR_BODY.search(body)
+            if " while(" in body and mb:
+                mc = _ATTR_COND.search(body)
+                trips = self._trip_count(mc.group(1)) if mc else 1
+                inner = self.computation_cost(mb.group(1), top_level=True)
+                total = total + inner.scaled(trips)
+                continue
+            mcalls = _ATTR_CALLS.search(body)
+            if " fusion(" in body and mcalls:
+                # fusion: flops from inside; bytes as a single unit
+                inner = self.computation_cost(mcalls.group(1),
+                                              top_level=False)
+                total = total + inner
+                if top_level:
+                    total.hbm_bytes += self._fusion_bytes(ins,
+                                                          mcalls.group(1))
+                continue
+            mapply = _ATTR_TO_APPLY.search(body)
+            if (" call(" in body or " custom-call(" in body) and mapply:
+                total = total + self.computation_cost(mapply.group(1),
+                                                      top_level)
+                continue
+            mbr = _ATTR_BRANCHES.search(body)
+            if " conditional(" in body and mbr:
+                branches = _OPERAND_RE.findall(mbr.group(1)) or [
+                    b.strip().lstrip("%") for b in mbr.group(1).split(",")]
+                costs = [self.computation_cost(b, top_level)
+                         for b in branches if b]
+                if costs:
+                    total = total + max(costs, key=lambda c: c.flops)
+                # fall through to count the conditional's own bytes
+            # --- flops ---------------------------------------------------------
+            if " dot(" in body:
+                total.flops += self._dot_flops(ins)
+            elif " convolution(" in body:
+                total.flops += self._conv_flops(ins)
+            # --- collectives ------------------------------------------------
+            for kind in COLLECTIVES:
+                if (f" {kind}(" in body or f" {kind}-start(" in body):
+                    b = self._operand_bytes(ins)
+                    total.coll_bytes += b
+                    total.coll_by_kind[kind] += b
+                    total.coll_counts[kind] += 1
+                    break
+            # --- hbm bytes ------------------------------------------------------
+            if top_level and not any(s in body for s in _SKIP_BYTES_OPS):
+                if " while(" in body or " tuple(" in body:
+                    continue        # loop state is not traffic; body counted
+                if " dynamic-update-slice(" in body:
+                    # in-place update: traffic = the updated slice only
+                    ops = self._operand_names(ins)
+                    if len(ops) >= 2:
+                        upd = self.shape_of.get(ops[1], "")
+                        head = upd[:upd.find("(")] if "(" in upd else upd
+                        total.hbm_bytes += 2 * _bytes_of(head)
+                    continue
+                if " dynamic-slice(" in body:
+                    # slice read + write; the source buffer is not traffic
+                    total.hbm_bytes += 2 * self._result_bytes(ins)
+                    continue
+                if any(op in body for op in _MEM_OPS):
+                    total.hbm_bytes += (self._result_bytes(ins)
+                                        + self._operand_bytes(ins))
+                # pure elementwise at top level: assume fused (TPU model)
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> CostTotals:
+        assert self.entry, "no ENTRY computation found"
+        return self.computation_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> CostTotals:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,76 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches JAX device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before its first
+jax import, and everything else must see the real (1-device) topology.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, Optional, Tuple
+
+import jax
+
+PODS = 2
+POD_SIDE = 16          # 16 x 16 = 256 chips per v5e pod
+
+# TPU v5e hardware constants (roofline denominators; see EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (PODS, POD_SIDE, POD_SIDE) if multi_pod else (POD_SIDE, POD_SIDE)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> jax.sharding.Mesh:
+    """Generic mesh helper (tests / small-scale runs)."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:
+    """Axes the batch dimension shards over (pod+data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def model_axis_size(mesh: jax.sharding.Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def data_parallel_size(mesh: jax.sharding.Mesh) -> int:
+    out = 1
+    for a in data_axes(mesh):
+        out *= mesh.shape[a]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Trace-time mesh registry.  jax.sharding.get_abstract_mesh() is EMPTY when
+# tracing under a plain ``with mesh:`` context and get_mesh() is forbidden
+# inside jit, so the in-model sharding constraints (seq_shard / attn_shard /
+# weight-gather) read the mesh from here; launchers must use mesh_context().
+# ---------------------------------------------------------------------------
+_CURRENT: Optional[jax.sharding.Mesh] = None
+
+
+@contextlib.contextmanager
+def mesh_context(mesh: jax.sharding.Mesh):
+    global _CURRENT
+    prev = _CURRENT
+    _CURRENT = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _CURRENT = prev
+
+
+def current_mesh_info() -> Optional[Tuple[Tuple[str, ...], Dict[str, int]]]:
+    if _CURRENT is None:
+        return None
+    return tuple(_CURRENT.axis_names), dict(_CURRENT.shape)

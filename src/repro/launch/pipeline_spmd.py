@@ -1,0 +1,158 @@
+"""SPMD pipeline parallelism over a mesh axis — the paper's technique at
+pod scale.
+
+The host-threaded executor (core/pipeline.py) is paper-faithful for a PCIe
+card of Edge TPUs; on a pod the stage-to-stage hop is a
+``jax.lax.ppermute`` over ICI inside ``shard_map``.  The stage->layer
+assignment comes from the same :class:`SegmentationPlan` (SEGM_BALANCED /
+SEGM_COMP over the arch's LayerGraph): per-stage *block counts may differ*
+(balanced split shifts blocks away from the embed/head stages), realized by
+padding every stage to ``max_count`` blocks with identity-masked slots.
+
+GPipe circular schedule, M microbatches over S stages::
+
+    t = 0 .. M+S-2:
+      stage 0 injects microbatch t (while t < M)
+      every stage applies its blocks to its current input
+      outputs rotate to the next stage via ppermute
+      stage S-1 emits microbatch t-S+1
+
+Embedding and unembedding run data-parallel outside the pipeline (their
+*cost* still participates in the plan: stages holding them receive fewer
+blocks).  Supported for the scan-block families (dense / moe / vlm).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..core.planner import SegmentationPlan
+from ..models import lm
+from ..models.lm import LMConfig
+
+Params = Any
+
+
+def stage_block_counts(plan: SegmentationPlan, n_blocks: int) -> List[int]:
+    """Blocks per stage from a plan over the full LayerGraph (embed +
+    block_i + final_norm/head nodes): count only block_* layers."""
+    counts = []
+    for layers in plan.stage_layers:
+        counts.append(sum(1 for l in layers if l.startswith("block_")))
+    assert sum(counts) == n_blocks, (counts, n_blocks)
+    return counts
+
+
+def build_stage_blocks(blocks: Params, counts: Sequence[int]
+                       ) -> Tuple[Params, jax.Array]:
+    """Repack the (L, ...) stacked blocks into (S, max_c, ...) + mask.
+
+    Padding slots replicate block 0 (they are identity-masked at apply
+    time, so the values never matter)."""
+    s = len(counts)
+    max_c = max(counts)
+    offsets = np.concatenate([[0], np.cumsum(counts)])
+    mask = np.zeros((s, max_c), np.bool_)
+    for i, c in enumerate(counts):
+        mask[i, :c] = True
+
+    def repack(leaf):
+        parts = []
+        for i, c in enumerate(counts):
+            seg = leaf[offsets[i]:offsets[i + 1]]
+            if c < max_c:
+                pad = jnp.broadcast_to(leaf[:1],
+                                       (max_c - c,) + leaf.shape[1:])
+                seg = jnp.concatenate([seg, pad], axis=0)
+            parts.append(seg)
+        return jnp.stack(parts, axis=0)
+
+    return jax.tree.map(repack, blocks), jnp.asarray(mask)
+
+
+def _stage_apply(cfg: LMConfig, blocks_local: Params, mask_local: jax.Array,
+                 x: jax.Array, positions: jax.Array) -> jax.Array:
+    fn = lm._block_fn(cfg)
+
+    def body(x, xs):
+        bp, m = xs
+        y = fn(x, bp, positions)
+        return jnp.where(m, y, x), None
+
+    x, _ = jax.lax.scan(body, x, (blocks_local, mask_local))
+    return x
+
+
+def make_pipeline_hidden(cfg: LMConfig, mesh: Mesh, plan: SegmentationPlan,
+                         n_microbatches: int, stage_axis: str = "model"):
+    """Returns hidden_fn(params, batch) -> (B, S, D) hidden states, with the
+    blocks executed as a `stage_axis`-wide pipeline per the plan."""
+    n_stages = mesh.shape[stage_axis]
+    assert plan.n_stages == n_stages, (plan.n_stages, n_stages)
+    counts = stage_block_counts(plan, cfg.n_layers)
+    m = n_microbatches
+
+    def hidden_fn(params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        x = lm.embed_tokens(cfg, params, batch["tokens"])
+        if cfg.family == "vlm" and "embeds" in batch:
+            x = jnp.concatenate([batch["embeds"].astype(x.dtype), x], axis=1)
+        b, s, d = x.shape
+        assert b % m == 0, (b, m)
+        mb = b // m
+        positions = jnp.arange(s)[None, :]
+        if cfg.family == "vlm":
+            positions = jnp.broadcast_to(positions[None], (3, 1, s))
+        stage_blocks, mask = build_stage_blocks(params["blocks"], counts)
+        x_mb = x.reshape(m, mb, s, d)
+
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(P(stage_axis), P(stage_axis), P()),
+            out_specs=P(),
+            check_vma=False)
+        def pipe(blocks_sh, mask_sh, x_all):
+            blocks_l = jax.tree.map(lambda a: a[0], blocks_sh)
+            mask_l = mask_sh[0]
+            sid = jax.lax.axis_index(stage_axis)
+            state = jnp.zeros((mb, s, d), x_all.dtype)
+            outputs = jnp.zeros((m, mb, s, d), x_all.dtype)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+            def step(t, carry):
+                state, outputs = carry
+                inj = x_all[jnp.clip(t, 0, m - 1)]
+                inp = jnp.where(jnp.logical_and(sid == 0, t < m), inj, state)
+                out = _stage_apply(cfg, blocks_l, mask_l, inp, positions)
+                widx = t - (n_stages - 1)
+                write = jnp.logical_and(sid == n_stages - 1,
+                                        jnp.logical_and(widx >= 0, widx < m))
+                upd = jax.lax.dynamic_update_slice(
+                    outputs, out[None], (jnp.clip(widx, 0, m - 1), 0, 0, 0))
+                outputs = jnp.where(write, upd, outputs)
+                state = jax.lax.ppermute(out, stage_axis, perm)
+                return state, outputs
+
+            _, outputs = jax.lax.fori_loop(0, m + n_stages - 1, step,
+                                           (state, outputs))
+            # outputs are valid only on the last stage; sum-over-stages
+            # broadcasts them (all other stages contribute zeros)
+            outputs = jnp.where(sid == n_stages - 1, outputs, 0.0)
+            return jax.lax.psum(outputs, stage_axis)
+
+        out = pipe(stage_blocks, mask, x_mb)
+        return out.reshape(b, s, d)
+
+    return hidden_fn
+
+
+def pipeline_logits(cfg: LMConfig, mesh: Mesh, plan: SegmentationPlan,
+                    params: Params, batch: Dict[str, jax.Array],
+                    n_microbatches: int = 4) -> jax.Array:
+    hidden_fn = make_pipeline_hidden(cfg, mesh, plan, n_microbatches)
+    h = hidden_fn(params, batch)
+    return lm.unembed(cfg, params, h)

@@ -1,0 +1,228 @@
+"""Sharding rules: param/cache/batch pytrees -> NamedSharding.
+
+Megatron-style tensor parallelism over the ``model`` axis with name-keyed
+rules and divisibility fallbacks:
+
+* column-parallel (output-feature sharded): wq/wk/wv/wu/wg (+ their biases)
+* row-parallel (input-feature sharded):     wo/wd
+* expert-parallel: MoE expert tensors shard the leading expert axis
+* vocab-parallel: embed/head shard the vocab axis when divisible
+  (granite's 49155 and whisper's 51865 are not -> fall back to d_model
+  sharding or replication, chosen by divisibility)
+* stacked layer axes (blocks/super/tail/enc/dec) are never sharded
+* KV caches shard batch over (pod, data) and head_dim over model
+  (all assigned head_dims are divisible by 16); recurrent states shard
+  their channel/head dims over model.
+
+Everything falls back to replication when nothing divides — the rules can
+never produce an invalid sharding, only a slower one (visible in the
+roofline, which is where the perf loop iterates).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .mesh import data_axes, model_axis_size
+
+# param-name -> role
+_COL = {"wq", "wk", "wv", "wu", "wg", "wr", "wx", "wgate", "maa_w1",
+        "w_lora1"}
+_ROW = {"wo", "wd", "w_lora2"}
+_COL_BIAS = {"bq", "bk", "bv", "bu"}
+_STACK_KEYS = {"blocks", "super", "tail", "enc", "dec"}
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return tuple(out)
+
+
+def _spec_for_param(names: Tuple[str, ...], shape: Tuple[int, ...],
+                    msize: int, mesh_has_model: bool) -> P:
+    stacked = any(n in _STACK_KEYS for n in names)
+    off = 1 if stacked else 0
+    nd = len(shape)
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+
+    def spec(axis: Optional[int]) -> P:
+        dims: list = [None] * nd
+        if axis is not None:
+            dims[axis] = "model"
+        return P(*dims)
+
+    if not mesh_has_model or msize <= 1:
+        return P()
+
+    def ok(axis: int) -> bool:
+        return 0 <= axis < nd and shape[axis] % msize == 0
+
+    # MoE expert tensors: (L, E, D, F) or (E, D, F) -> shard E
+    if parent == "mlp" and name in ("wg", "wu", "wd") and nd - off == 3:
+        return spec(off) if ok(off) else P()
+    if name == "router":
+        return P()
+    if name == "embed":
+        if ok(nd - 2):                      # vocab axis
+            return spec(nd - 2)
+        if ok(nd - 1):                      # d_model axis
+            return spec(nd - 1)
+        return P()
+    if name == "head":
+        if ok(nd - 1):                      # vocab axis
+            return spec(nd - 1)
+        if ok(nd - 2):
+            return spec(nd - 2)
+        return P()
+    if name in _COL and nd - off >= 2:
+        return spec(nd - 1) if ok(nd - 1) else P()
+    if name in _ROW and nd - off >= 2:
+        return spec(nd - 2) if ok(nd - 2) else P()
+    if name in _COL_BIAS:
+        return spec(nd - 1) if ok(nd - 1) else P()
+    if name in ("conv_w", "conv_b", "a_gate_w", "a_gate_b", "i_gate_w",
+                "i_gate_b", "lam"):         # rglru channel vectors
+        return spec(nd - 1) if ok(nd - 1) else P()
+    return P()                              # norms, scalars, small adapters
+
+
+def param_shardings(mesh: Mesh, params: Any, fsdp: str | bool = False) -> Any:
+    """TP rules; ``fsdp`` additionally shards weights over the data axes on
+    the first free divisible dim (gathered per layer inside the scan —
+    ZeRO-3/FSDP, used by the train path when TP-only params overflow).
+
+    fsdp="blocks" (recommended): only the stacked per-layer tensors.
+    Data-sharding the embed/head vocab tensors measurably explodes the
+    collective volume (the embedding backward's scatter and the chunked
+    unembed re-gather them constantly — see EXPERIMENTS.md §Perf,
+    qwen2.5-14b train: 13x collective-term regression), while the block
+    tensors gather once per layer per pass, which is the FSDP contract.
+    fsdp=True ("full") shards everything; False disables.
+    """
+    msize = model_axis_size(mesh)
+    has_model = "model" in mesh.axis_names
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        sp = _spec_for_param(names, leaf.shape, msize, has_model)
+        stacked = any(n in _STACK_KEYS for n in names)
+        apply_fsdp = (fsdp is True or (fsdp == "blocks" and stacked))
+        if apply_fsdp and dsize > 1:
+            dims = list(sp) + [None] * (len(leaf.shape) - len(sp))
+            start = 1 if stacked else 0
+            for ax in range(start, len(leaf.shape)):
+                if dims[ax] is None and leaf.shape[ax] % dsize == 0:
+                    dims[ax] = dspec
+                    break
+            sp = P(*dims)
+        return NamedSharding(mesh, sp)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(mesh: Mesh, opt_state: Any) -> Any:
+    """ZeRO-1: optimizer moments follow the param rules PLUS an extra
+    data-axis shard on the first free divisible dimension.  The AdamW update
+    is pointwise, so XLA turns the gradient all-reduce into reduce-scatter +
+    (next-step) all-gather — per-device optimizer memory drops by the DP
+    degree at no extra communication volume."""
+    msize = model_axis_size(mesh)
+    has_model = "model" in mesh.axis_names
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        if names and names[-1] == "step":
+            return NamedSharding(mesh, P())
+        base = _spec_for_param(names, leaf.shape, msize, has_model)
+        dims = list(base) + [None] * (len(leaf.shape) - len(base))
+        if dsize > 1:
+            stacked = any(n in _STACK_KEYS for n in names)
+            start = 1 if stacked else 0
+            for ax in range(start, len(leaf.shape)):
+                if dims[ax] is None and leaf.shape[ax] % dsize == 0:
+                    dims[ax] = dspec
+                    break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state)
+
+
+# ---------------------------------------------------------------------------
+# batches and caches
+# ---------------------------------------------------------------------------
+def batch_shardings(mesh: Mesh, batch: Any) -> Any:
+    """Shard the leading batch dim over (pod, data); positions (3,B,S) on
+    axis 1.  Falls back to replication when batch doesn't divide."""
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+
+    def one(path, leaf):
+        names = _path_names(path)
+        baxis = 1 if (names and names[-1] == "positions") else 0
+        if dsize > 1 and leaf.shape[baxis] % dsize == 0:
+            dims: list = [None] * len(leaf.shape)
+            dims[baxis] = daxes if len(daxes) > 1 else daxes[0]
+            return NamedSharding(mesh, P(*dims))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: Any, batch_axis: int = 1,
+                    mode: str = "hd") -> Any:
+    """KV caches (L,B,T,H,D): batch over data axes, plus per ``mode``:
+
+    * ``hd``  — head_dim (last axis) over model: simple, but every decode
+      attention psums fp32 scores over the hd shards (collective-heavy).
+    * ``seq`` — flash-decoding style: the cache *sequence* axis over model;
+      softmax reductions over the sharded T psum only per-token scalars and
+      the probs@V partial sums (tiny) — see EXPERIMENTS.md §Perf.
+
+    Recurrent states keep batch + channel/head-dim sharding in both modes.
+    """
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    msize = model_axis_size(mesh)
+    dspec = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nd = len(leaf.shape)
+        if names and names[-1] == "len":
+            return NamedSharding(mesh, P())
+        dims: list = [None] * nd
+        # batch axis: caches are stacked per layer -> axis 1 (or 0 for
+        # unstacked); find the first axis that divides dsize
+        if dsize > 1:
+            for ax in (batch_axis, 0):
+                if ax < nd and leaf.shape[ax] % dsize == 0:
+                    dims[ax] = dspec
+                    break
+        is_kv = names and names[-1] in ("k", "v", "mem_k", "mem_v")
+        if (mode == "seq" and is_kv and nd == 5 and msize > 1
+                and leaf.shape[2] % msize == 0):
+            dims[2] = "model"              # sequence axis
+        elif msize > 1 and nd >= 2 and leaf.shape[-1] % msize == 0:
+            dims[-1] = "model"             # head_dim / channels
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,99 @@
+"""Step builders: train_step / prefill_step / decode_step per architecture.
+
+These are the functions the dry-run lowers and the drivers execute.  They
+are pure pytree->pytree functions; distribution comes entirely from the
+in/out shardings attached at jit time (launch/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import api
+from ..models.lm import LMConfig, lm_loss
+from ..optim import AdamWConfig, adamw_init, adamw_update
+
+Params = Any
+
+
+def chunked_lm_loss(cfg: LMConfig, params: Params, hidden: jax.Array,
+                    labels: jax.Array, chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits: scan over
+    sequence chunks, unembedding one chunk at a time; jax.checkpoint makes
+    the backward recompute chunk logits instead of saving them."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def chunk_nll(h, lab):
+        logits = api.unembed(cfg, params, h)            # (B, chunk, V) fp32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return jnp.sum(logz - gold)
+
+    def body(acc, xs):
+        h, lab = xs
+        return acc + chunk_nll(h, lab), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)
+
+
+def make_train_step(cfg: LMConfig, opt_cfg: AdamWConfig,
+                    loss_chunk: int = 512):
+    def train_step(params: Params, opt_state: Params,
+                   batch: Dict[str, jax.Array]):
+        def loss_fn(p):
+            hidden = api.forward_hidden(cfg, p, batch)
+            return chunked_lm_loss(cfg, p, hidden, batch["labels"],
+                                   chunk=loss_chunk)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt_state, metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+        metrics = dict(metrics, loss=loss)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: LMConfig):
+    def prefill_step(params: Params, batch: Dict[str, jax.Array]):
+        # unembed only the last position: avoids the (B, S, V) logits buffer
+        logits = api.forward(cfg, params, batch, last_token_only=True)
+        return logits[:, -1, :]            # next-token logits (B, V)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: LMConfig):
+    def decode_step(params: Params, cache: Params, tokens: jax.Array):
+        logits, cache = api.decode(cfg, params, tokens, cache)
+        return logits[:, -1, :], cache
+
+    return decode_step
+
+
+def init_train_state(cfg: LMConfig, key: jax.Array) -> Tuple[Params, Params]:
+    params = api.init(cfg, key)
+    return params, adamw_init(params)
+
+
+def train_state_shapes(cfg: LMConfig) -> Tuple[Params, Params]:
+    """eval_shape versions (no allocation) for the dry-run."""
+    params = jax.eval_shape(lambda k: api.init(cfg, k),
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    opt = jax.eval_shape(adamw_init, params)
+    return params, opt
+
+
+def cache_shapes(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    return jax.eval_shape(
+        functools.partial(api.init_cache, cfg, batch, max_len))

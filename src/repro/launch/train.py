@@ -1,0 +1,91 @@
+"""Training driver: fault-tolerant loop over the step builders.
+
+Runnable at smoke scale on CPU (default) and at pod scale with the same
+code path (the mesh/shardings come from launch.sharding)::
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 60 --ckpt-dir /tmp/ckpt --fail-at 25
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointStore
+from repro.configs.common import concrete_batch
+from repro.data import DataConfig, SyntheticLMDataset
+from repro.launch import steps as steps_lib
+from repro.optim import AdamWConfig
+from repro.runtime import FailureInjector, TrainSupervisor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", type=int, nargs="*", default=[],
+                    help="inject failures at these steps (FT demo)")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (pod-scale; not for CPU)")
+    args = ap.parse_args()
+
+    mod = configs.get(args.arch)
+    cfg = mod.config() if args.full else mod.smoke_config()
+    print(f"training {cfg.name} ({cfg.family}) for {args.steps} steps")
+
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=10,
+                          total_steps=args.steps)
+    data = SyntheticLMDataset(DataConfig(
+        global_batch=args.batch, seq_len=args.seq, vocab=cfg.vocab))
+    params, opt_state = steps_lib.init_train_state(cfg,
+                                                   jax.random.PRNGKey(0))
+    raw_step = jax.jit(steps_lib.make_train_step(
+        cfg, opt_cfg, loss_chunk=min(512, args.seq)))
+
+    def step_fn(state, step):
+        params, opt_state = state
+        np_batch = data.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in np_batch.items()}
+        if cfg.family == "vlm":
+            full = concrete_batch(cfg, args.seq + cfg.n_patches, args.batch,
+                                  key=jax.random.PRNGKey(step))
+            batch = full
+        elif cfg.family == "encdec":
+            frames = concrete_batch(cfg, args.seq, args.batch,
+                                    key=jax.random.PRNGKey(step))["frames"]
+            batch["frames"] = frames
+        params, opt_state, metrics = raw_step(params, opt_state, batch)
+        return (params, opt_state), {k: float(v) for k, v in metrics.items()}
+
+    store = CheckpointStore(args.ckpt_dir, keep=2)
+    injector = FailureInjector(fail_at_steps=args.fail_at)
+    sup = TrainSupervisor(store, step_fn, ckpt_every=args.ckpt_every,
+                          injector=injector)
+
+    t0 = time.time()
+    (params, opt_state), report = sup.run((params, opt_state), args.steps)
+    dt = time.time() - t0
+    losses = [m["loss"] for _, m in report.history]
+    print(f"done in {dt:.1f}s; restarts={report.restarts} "
+          f"checkpoints={report.checkpoints}")
+    print(f"loss: first={losses[0]:.4f} last={losses[-1]:.4f} "
+          f"min={min(losses):.4f}")
+    assert np.isfinite(losses).all(), "NaN loss"
+    if len(losses) > 10:
+        assert losses[-1] < losses[0], "loss did not decrease"
+        print("loss decreased — training sanity OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Perf-variant knobs (§Perf hillclimbing), read from REPRO_VARIANT.
+
+Knobs compose as a comma-separated list; ``baseline`` = the paper-faithful
++ first-green configuration recorded in the dry-run sweep.
+
+Knobs:
+* ``cache_seq``     — decode KV cache sharded over the *sequence* axis
+                      (flash-decoding style) instead of head_dim.
+* ``attn_shard``    — explicit q/k/v sharding constraints inside attention
+                      (head-sharded q where divisible, replicated kv) to
+                      stop GSPMD resharding churn.
+* ``no_fsdp``       — disable FSDP weight sharding for train (TP-only
+                      params; isolates FSDP gather cost).
+* ``no_seqshard``   — disable Megatron-SP activation sharding at block
+                      boundaries.
+* ``scores_bf16``   — attention scores in bf16 (halves score traffic;
+                      softmax stats still fp32).
+* ``rwkv_chunked``  — chunked-parallel WKV formulation (state leaves the
+                      inner loop; jnp mirror of the Pallas kernel blocking).
+* ``loss_chunk_2k`` — chunked-loss block 2048 instead of 512.
+"""
+from __future__ import annotations
+
+import os
+from typing import Set
+
+
+def active() -> Set[str]:
+    return {v.strip() for v in os.environ.get("REPRO_VARIANT", "").split(",")
+            if v.strip() and v.strip() != "baseline"}
+
+
+def on(knob: str) -> bool:
+    return knob in active()

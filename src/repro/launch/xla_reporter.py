@@ -1,0 +1,82 @@
+"""XLA-backed MemoryReporter for the §6.1.3 refinement loop.
+
+On the Edge TPU the paper re-compiles each candidate segment and reads the
+compiler's memory report.  The pod-scale analogue: compile the segment's
+stage function with ``.lower().compile()`` and read
+``memory_analysis()`` — overflow = bytes beyond the per-device budget.
+Used by tests and the serve planner when ``--refine xla`` is selected;
+the analytical GraphReporter remains the fast default.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.graph import LayerGraph
+from ..models import api, lm
+from ..models.lm import LMConfig
+
+
+class XlaSegmentReporter:
+    """MemoryReporter protocol over real XLA compiles of block ranges."""
+
+    def __init__(self, cfg: LMConfig, graph: LayerGraph, budget_bytes: int,
+                 batch: int = 1, seq: int = 128):
+        self.cfg = cfg
+        self.graph = graph
+        self.budget = budget_bytes
+        self.batch = batch
+        self.seq = seq
+        self._levels = graph.levels()
+        self._bytes_per_depth = graph.bytes_per_depth()
+        self._cache: Dict[Tuple[int, int], Tuple[int, int]] = {}
+        self.compilations = 0
+
+    def _block_range(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
+        """Map a depth range to a [lo, hi) block index range."""
+        names = [n for lvl in self._levels[depth_lo:depth_hi + 1]
+                 for n in lvl if n.startswith("block_")]
+        if not names:
+            return (0, 0)
+        idxs = sorted(int(n.split("_")[1]) for n in names)
+        return idxs[0], idxs[-1] + 1
+
+    def segment_report(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
+        key = (depth_lo, depth_hi)
+        if key in self._cache:
+            return self._cache[key]
+        cfg = self.cfg
+        lo, hi = self._block_range(depth_lo, depth_hi)
+        n_blocks = max(1, hi - lo)
+        block_shapes = jax.eval_shape(
+            lambda k: lm._stack_init(
+                k, n_blocks, lambda kk: lm.init_block_params(cfg, kk,
+                                                             cfg.dtype)),
+            jax.ShapeDtypeStruct((2,), "uint32"))
+        x_spec = jax.ShapeDtypeStruct((self.batch, self.seq, cfg.d_model),
+                                      cfg.dtype)
+        pos = jnp.arange(self.seq)[None, :]
+
+        def stage(blocks, x):
+            fn = lm._block_fn(cfg)
+
+            def body(x, bp):
+                return fn(x, bp, pos), None
+
+            x, _ = jax.lax.scan(body, x, blocks)
+            return x
+
+        compiled = jax.jit(stage).lower(block_shapes, x_spec).compile()
+        self.compilations += 1
+        mem = compiled.memory_analysis()
+        used = int(mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   + mem.temp_size_in_bytes)
+        over = max(0, used - self.budget)
+        self._cache[key] = (min(used, self.budget), over)
+        return self._cache[key]
+
+    def depth_bytes(self, depth: int) -> int:
+        return self._bytes_per_depth[depth]

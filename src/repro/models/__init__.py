@@ -1,0 +1,1 @@
+"""Model zoo: the paper's CNNs (synthetic + real) and the assigned LM archs."""

@@ -1,0 +1,116 @@
+"""Family-dispatch API: one surface for all 10 assigned architectures.
+
+    init(cfg, key)                      -> params
+    forward(cfg, params, batch)         -> fp32 logits     (train / prefill)
+    init_cache(cfg, batch, max_len)     -> decode cache
+    decode(cfg, params, tokens, cache)  -> (logits, cache) (one token)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from . import lm, rglru, rwkv6, whisper
+from .lm import LMConfig
+
+Params = Dict[str, Any]
+
+_ATTN_FAMILIES = ("dense", "moe", "vlm")
+
+
+def init(cfg: LMConfig, key: jax.Array) -> Params:
+    cfg.validate()
+    if cfg.family in _ATTN_FAMILIES:
+        return lm.init_params(cfg, key)
+    if cfg.family == "ssm":
+        return rwkv6.init_params(cfg, key)
+    if cfg.family == "hybrid":
+        return rglru.init_params(cfg, key)
+    if cfg.family == "encdec":
+        return whisper.init_params(cfg, key)
+    raise ValueError(cfg.family)
+
+
+def forward(cfg: LMConfig, params: Params, batch: Dict[str, jax.Array],
+            last_token_only: bool = False):
+    if cfg.family in _ATTN_FAMILIES:
+        return lm.forward(cfg, params, batch, last_token_only)
+    if cfg.family == "ssm":
+        return rwkv6.forward(cfg, params, batch,
+                             last_token_only=last_token_only)
+    if cfg.family == "hybrid":
+        return rglru.forward(cfg, params, batch, last_token_only)
+    if cfg.family == "encdec":
+        return whisper.forward(cfg, params, batch, last_token_only)
+    raise ValueError(cfg.family)
+
+
+def forward_hidden(cfg: LMConfig, params: Params,
+                   batch: Dict[str, jax.Array]) -> jax.Array:
+    """Post-block hidden states — pair with :func:`unembed` for the
+    memory-bounded chunked loss."""
+    if cfg.family in _ATTN_FAMILIES:
+        return lm.forward_hidden(cfg, params, batch)
+    if cfg.family == "ssm":
+        return rwkv6.forward_hidden(cfg, params, batch)
+    if cfg.family == "hybrid":
+        return rglru.forward_hidden(cfg, params, batch)
+    if cfg.family == "encdec":
+        return whisper.forward_hidden(cfg, params, batch)
+    raise ValueError(cfg.family)
+
+
+def unembed(cfg: LMConfig, params: Params, x: jax.Array) -> jax.Array:
+    if cfg.family in _ATTN_FAMILIES:
+        return lm.unembed(cfg, params, x)
+    if cfg.family == "ssm":
+        return rwkv6.unembed(cfg, params, x)
+    if cfg.family == "hybrid":
+        return rglru.unembed(cfg, params, x)
+    if cfg.family == "encdec":
+        return whisper.unembed(cfg, params, x)
+    raise ValueError(cfg.family)
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    if cfg.family in _ATTN_FAMILIES:
+        return lm.init_cache(cfg, batch, max_len)
+    if cfg.family == "ssm":
+        return rwkv6.init_cache(cfg, batch, max_len)
+    if cfg.family == "hybrid":
+        return rglru.init_cache(cfg, batch, max_len)
+    if cfg.family == "encdec":
+        return whisper.init_cache(cfg, batch, max_len)
+    raise ValueError(cfg.family)
+
+
+def decode(cfg: LMConfig, params: Params, tokens: jax.Array, cache: Params
+           ) -> Tuple[jax.Array, Params]:
+    if cfg.family in _ATTN_FAMILIES:
+        return lm.forward_decode(cfg, params, tokens, cache)
+    if cfg.family == "ssm":
+        return rwkv6.forward_decode(cfg, params, tokens, cache)
+    if cfg.family == "hybrid":
+        return rglru.forward_decode(cfg, params, tokens, cache)
+    if cfg.family == "encdec":
+        return whisper.forward_decode(cfg, params, tokens, cache)
+    raise ValueError(cfg.family)
+
+
+def param_count(cfg: LMConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    shapes = jax.eval_shape(lambda k: init(cfg, k),
+                            jax.ShapeDtypeStruct((2,), "uint32"))
+    import numpy as np
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(shapes)))
+
+
+def active_param_count(cfg: LMConfig) -> int:
+    """Active params per token (MoE: only top_k experts count)."""
+    total = param_count(cfg)
+    if cfg.family != "moe":
+        return total
+    expert_params = 3 * cfg.d_model * cfg.d_ff
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert_params
+    return total - inactive

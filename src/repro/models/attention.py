@@ -1,0 +1,187 @@
+"""Attention + norm primitives shared by the LM architecture family.
+
+Everything is pure ``jnp`` so that ``.lower().compile()`` works on any
+backend (the Pallas flash kernel in ``repro.kernels`` is the TPU hot-path
+drop-in; see kernels/ops.py).  Numerics: bf16 params/activations with fp32
+softmax and norm accumulation.
+
+Covers the features the assigned archs need: GQA, RoPE (incl. M-RoPE
+sections for qwen2-vl), qk_norm (qwen3), QKV bias (qwen2.5), sliding-window
+local attention (recurrentgemma), non-causal encoder attention + cross
+attention (whisper), chunked-query causal attention for long prefill, and
+single-token KV-cache decode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    ang = ang[..., None, :]                            # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, sections: Tuple[int, ...],
+                theta: float = 10000.0) -> jax.Array:
+    """M-RoPE (qwen2-vl): the head_dim/2 frequency slots are split into
+    `sections` (temporal, height, width); each section rotates with its own
+    position stream.  positions3: (3, ..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    assert sum(sections) == d // 2, (sections, d)
+    # build per-slot positions by section
+    parts = []
+    off = 0
+    for i, sec in enumerate(sections):
+        pos = positions3[i]                            # (..., S)
+        ang = pos[..., None].astype(jnp.float32) * freqs[off:off + sec]
+        parts.append(ang)
+        off += sec
+    ang = jnp.concatenate(parts, axis=-1)[..., None, :]   # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core attention math (GQA; q: (B,S,Hq,D), k/v: (B,T,Hkv,D))
+# ---------------------------------------------------------------------------
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """-> (B, Hkv, G, S, T) scores, scaled.  fp32 by default; bf16 under
+    the ``scores_bf16`` perf knob (halves the materialized score traffic of
+    the jnp attention path; softmax stats then run in bf16 — acceptable for
+    the roofline study, numerics documented in EXPERIMENTS.md §Perf)."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, s, hkv, g, d)
+    acc = jnp.bfloat16 if _scores_bf16() else jnp.float32
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=acc)
+    return scores / jnp.sqrt(jnp.asarray(d, acc))
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array, out_dtype) -> jax.Array:
+    """probs: (B,Hkv,G,S,T); v: (B,T,Hkv,D) -> (B,S,Hq,D)."""
+    b, hkv, g, s, t = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, hkv * g, -1).astype(out_dtype)
+
+
+def _scores_bf16() -> bool:
+    import os
+    return "scores_bf16" in os.environ.get("REPRO_VARIANT", "")
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   causal: bool = True,
+                   q_offset: int | jax.Array = 0,
+                   window: Optional[int] = None) -> jax.Array:
+    """Unchunked attention; fine for short sequences / smoke tests."""
+    s, t = q.shape[1], k.shape[1]
+    scores = _gqa_scores(q, k)
+    qpos = jnp.arange(s)[:, None] + q_offset
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    neg = jnp.asarray(-3e4 if scores.dtype == jnp.bfloat16 else NEG_INF,
+                      scores.dtype)
+    scores = jnp.where(mask, scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, q.dtype)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, q_chunk: int = 1024,
+                      window: Optional[int] = None) -> jax.Array:
+    """Query-chunked attention: peak memory O(q_chunk * T) instead of O(S*T).
+
+    The long-prefill path (32k tokens).  Equivalent to full_attention (same
+    softmax; chunking only over queries, so no online renormalization is
+    needed).  Causal masking is applied per chunk.
+    """
+    b, s, hq, d = q.shape
+    if s <= q_chunk:
+        return full_attention(q, k, v, causal=causal, window=window)
+    assert s % q_chunk == 0, (s, q_chunk)
+    n = s // q_chunk
+    qs = q.reshape(b, n, q_chunk, hq, d).transpose(1, 0, 2, 3, 4)
+    offsets = jnp.arange(n) * q_chunk
+
+    def body(carry, xs):
+        qc, off = xs
+        out = full_attention(qc, k, v, causal=causal, q_offset=off,
+                             window=window)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (qs, offsets))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, s, hq, d)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array,
+                     window: Optional[int] = None) -> jax.Array:
+    """One-token decode: q (B,1,Hq,D) against a (B,T,Hkv,D) cache.
+
+    `cache_len` is the number of valid cache entries (the new token's k/v
+    must already be written at position cache_len-1).
+    """
+    t = k_cache.shape[1]
+    scores = _gqa_scores(q, k_cache)                    # (B,Hkv,G,1,T)
+    kpos = jnp.arange(t)[None, :]
+    valid = kpos < cache_len                            # (B,T) or (1,T)
+    if window is not None:
+        valid &= kpos >= cache_len - window
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v_cache, q.dtype)
+
+
+def cross_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Non-causal attention over a fixed memory (whisper decoder)."""
+    scores = _gqa_scores(q, k)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return _gqa_out(probs, v, q.dtype)

@@ -1,0 +1,155 @@
+"""Lower an LM architecture to a :class:`LayerGraph` for the segmentation
+planner — the bridge between the assigned archs and the paper's technique.
+
+Per-node parameter counts are **exact**: they come from ``jax.eval_shape``
+over the real initializer (no allocation), so the planner balances the same
+bytes the runtime will hold.  MACs use the per-family analytical estimators.
+
+Depth structure:
+* decoder-only archs: ``embed -> block_0 .. block_{L-1} -> final_norm -> head``
+* whisper (enc-dec): encoder chain and decoder chain, with cross-attention
+  edges ``enc_final -> dec_i`` — the longest-path depth rule (paper §6.1.1)
+  then places every decoder layer after the whole encoder.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import numpy as np
+
+from ..core.costs import TransformerBlockCost
+from ..core.graph import LayerGraph
+from . import api
+from .lm import LMConfig
+from .rglru import n_super_and_tail
+
+
+def _tree_size(tree) -> int:
+    return int(sum(np.prod(l.shape) for l in jax.tree.leaves(tree)))
+
+
+def _param_shapes(cfg: LMConfig):
+    return jax.eval_shape(lambda k: api.init(cfg, k),
+                          jax.ShapeDtypeStruct((2,), "uint32"))
+
+
+def _block_cost(cfg: LMConfig) -> TransformerBlockCost:
+    return TransformerBlockCost(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        d_ff=cfg.d_ff, head_dim=cfg.hd, qkv_bias=cfg.qkv_bias,
+        n_experts=cfg.n_experts, top_k=cfg.top_k,
+        ffn_gated=cfg.mlp_kind in ("swiglu", "geglu"))
+
+
+def _rwkv_macs(cfg: LMConfig, seq: int) -> int:
+    d, f = cfg.d_model, cfg.d_ff
+    tm = 5 * d * d + d * (cfg.rwkv_head_dim * 2)       # proj + wkv per token
+    cm = 2 * d * f + d * d
+    return seq * (tm + cm)
+
+
+def _rec_macs(cfg: LMConfig, seq: int) -> int:
+    d = cfg.d_model
+    temporal = 3 * d * d + cfg.conv_width * d          # wx, wgate, wo + conv
+    mlp = 3 * d * cfg.d_ff
+    return seq * (temporal + mlp)
+
+
+def lm_layer_graph(cfg: LMConfig, seq_len: int = 4096,
+                   act_bytes_per_elt: int = 2) -> LayerGraph:
+    """Build the segmentation view of an LM arch (per single sequence)."""
+    g = LayerGraph(cfg.name)
+    shapes = _param_shapes(cfg)
+    act = seq_len * cfg.d_model * act_bytes_per_elt
+    bc = _block_cost(cfg)
+    w_bytes = 2  # bf16 weights
+
+    def wb(p):  # weight bytes for param count p
+        return p * w_bytes
+
+    if cfg.family == "encdec":
+        enc_total = _tree_size(shapes["enc"])
+        dec_total = _tree_size(shapes["dec"])
+        embed_p = _tree_size(shapes["embed"])
+        frame_act = cfg.n_frames * cfg.d_model * act_bytes_per_elt
+        g.add_layer("encoder_input", params=0, macs=0, out_bytes=frame_act,
+                    kind="stub")
+        prev = "encoder_input"
+        per_enc = enc_total // cfg.n_enc_layers
+        enc_macs = bc.block_macs(cfg.n_frames, cfg.n_frames)
+        for i in range(cfg.n_enc_layers):
+            g.add_layer(f"enc_{i}", params=per_enc, macs=enc_macs,
+                        out_bytes=frame_act, inputs=[prev],
+                        weight_bytes=wb(per_enc), kind="enc_block")
+            prev = f"enc_{i}"
+        enc_out = prev
+        g.add_layer("embed", params=embed_p, macs=seq_len * cfg.d_model,
+                    out_bytes=act, weight_bytes=wb(embed_p), kind="embed")
+        prev = "embed"
+        per_dec = dec_total // cfg.n_layers
+        dec_macs = (bc.block_macs(seq_len, seq_len)
+                    + 2 * seq_len * cfg.n_frames * cfg.n_heads * cfg.hd)
+        for i in range(cfg.n_layers):
+            g.add_layer(f"dec_{i}", params=per_dec, macs=dec_macs,
+                        out_bytes=act, inputs=[prev, enc_out],
+                        weight_bytes=wb(per_dec), kind="dec_block")
+            prev = f"dec_{i}"
+        ln = _tree_size(shapes["dec_ln"]) + _tree_size(shapes["enc_ln"])
+        # tied unembedding: weight bytes live with embed; head MACs here
+        g.add_layer("head", params=ln, macs=seq_len * cfg.d_model * cfg.vocab,
+                    out_bytes=0, inputs=[prev], weight_bytes=wb(ln),
+                    kind="head")
+        return g
+
+    embed_p = _tree_size(shapes["embed"])
+    g.add_layer("embed", params=embed_p, macs=seq_len * cfg.d_model,
+                out_bytes=act, weight_bytes=wb(embed_p), kind="embed")
+    prev = "embed"
+
+    if cfg.family == "hybrid":
+        n_super, tail = n_super_and_tail(cfg.n_layers, cfg.attn_every)
+        per_super = _tree_size(shapes["super"]) // n_super
+        one_super = jax.tree.map(lambda s: s, shapes["super"])
+        rec_p = _tree_size(one_super["rec1"]) // n_super
+        attn_p = per_super - 2 * rec_p
+        attn_macs = bc.block_macs(seq_len, min(seq_len, cfg.local_window))
+        rec_macs = _rec_macs(cfg, seq_len)
+        li = 0
+        for s in range(n_super):
+            for kind, p, m in (("rec", rec_p, rec_macs),
+                               ("rec", rec_p, rec_macs),
+                               ("attn", attn_p, attn_macs)):
+                g.add_layer(f"block_{li}_{kind}", params=p, macs=m,
+                            out_bytes=act, inputs=[prev], weight_bytes=wb(p),
+                            kind=f"{kind}_block")
+                prev = f"block_{li}_{kind}"
+                li += 1
+        if tail:
+            tail_p = _tree_size(shapes["tail"]) // tail
+            for t in range(tail):
+                g.add_layer(f"block_{li}_rec", params=tail_p, macs=rec_macs,
+                            out_bytes=act, inputs=[prev],
+                            weight_bytes=wb(tail_p), kind="rec_block")
+                prev = f"block_{li}_rec"
+                li += 1
+    else:
+        per_block = _tree_size(shapes["blocks"]) // cfg.n_layers
+        if cfg.family == "ssm":
+            macs = _rwkv_macs(cfg, seq_len)
+        else:
+            macs = bc.block_macs(seq_len, seq_len)
+        for i in range(cfg.n_layers):
+            g.add_layer(f"block_{i}", params=per_block, macs=macs,
+                        out_bytes=act, inputs=[prev],
+                        weight_bytes=wb(per_block), kind="block")
+            prev = f"block_{i}"
+
+    norm_p = _tree_size(shapes["final_norm"])
+    g.add_layer("final_norm", params=norm_p, macs=0, out_bytes=act,
+                inputs=[prev], weight_bytes=wb(norm_p), kind="norm")
+    head_p = (_tree_size(shapes["head"]) if "head" in shapes else 0)
+    g.add_layer("head", params=head_p, macs=seq_len * cfg.d_model * cfg.vocab,
+                out_bytes=0, inputs=["final_norm"], weight_bytes=wb(head_p),
+                kind="head")
+    return g

@@ -1,0 +1,269 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427).
+
+38 layers in a 1:2 attention:recurrence pattern — layer i is **local sliding-
+window attention** (window 2048, MQA kv=1, head_dim 256) when ``i % 3 == 2``,
+otherwise a **recurrent block**: dual projections (value + GeLU gate), a
+short causal depthwise conv (width 4) and the RG-LRU diagonal recurrence
+
+    r_t = sigma(w_a . x_t + b_a)          (recurrence gate, diagonal)
+    i_t = sigma(w_i . x_t + b_i)          (input gate, diagonal)
+    log a_t = -c * softplus(Lambda) * r_t  (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Every layer carries its own GeGLU MLP (d_ff 12288).  Gates are diagonal
+(per-channel) — the official model uses block-diagonal; the simplification
+is parameter-neutral at the reported scale and noted in DESIGN.md.
+
+For scan-friendliness layers are grouped into stacked **super-blocks** of
+(rec, rec, attn) x12 plus a stacked (rec, rec) tail = 38 layers.
+
+Decode state: conv tail (W-1 inputs) + fp32 LRU h per rec layer; a ring KV
+cache of min(seq, window) per attn layer — O(window) memory, which is why
+this arch runs ``long_500k``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .lm import (LMConfig, _dense_init, _stack_init, _norm, init_attn_params,
+                 init_mlp_params, attn_block, attn_block_decode, mlp_block)
+
+Params = Dict[str, Any]
+LRU_C = 8.0
+
+
+def n_super_and_tail(n_layers: int, attn_every: int) -> Tuple[int, int]:
+    n_super = n_layers // attn_every
+    tail = n_layers - n_super * attn_every          # trailing rec layers
+    return n_super, tail
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_rec_block(cfg: LMConfig, key, dtype) -> Params:
+    d = cfg.d_model
+    r = d                                           # lru width == d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "ln1": {"scale": jnp.zeros((d,), dtype)},
+        "ln2": {"scale": jnp.zeros((d,), dtype)},
+        "rec": {
+            "wx": _dense_init(ks[0], (d, r), dtype),
+            "wgate": _dense_init(ks[1], (d, r), dtype),
+            "conv_w": _dense_init(ks[2], (cfg.conv_width, r), dtype, 0.3),
+            "conv_b": jnp.zeros((r,), dtype),
+            "a_gate_w": jnp.ones((r,), jnp.float32),
+            "a_gate_b": jnp.zeros((r,), jnp.float32),
+            "i_gate_w": jnp.ones((r,), jnp.float32),
+            "i_gate_b": jnp.zeros((r,), jnp.float32),
+            "lam": jnp.full((r,), 1.0, jnp.float32),
+            "wo": _dense_init(ks[3], (r, d), dtype),
+        },
+        "mlp": init_mlp_params(cfg, ks[4], dtype),
+    }
+
+
+def init_attn_layer(cfg: LMConfig, key, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+            "attn": init_attn_params(cfg, k1, dtype),
+            "ln2": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+            "mlp": init_mlp_params(cfg, k2, dtype)}
+
+
+def init_params(cfg: LMConfig, key) -> Params:
+    dtype = cfg.dtype
+    n_super, tail = n_super_and_tail(cfg.n_layers, cfg.attn_every)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def super_block(k):
+        ka, kb, kc = jax.random.split(k, 3)
+        return {"rec1": init_rec_block(cfg, ka, dtype),
+                "rec2": init_rec_block(cfg, kb, dtype),
+                "attn": init_attn_layer(cfg, kc, dtype)}
+
+    params: Params = {
+        "embed": _dense_init(k1, (cfg.vocab, cfg.d_model), dtype, 0.02),
+        "super": _stack_init(k2, n_super, super_block),
+        "final_norm": {"scale": jnp.zeros((cfg.d_model,), dtype)},
+    }
+    if tail:
+        params["tail"] = _stack_init(
+            k3, tail, lambda k: init_rec_block(cfg, k, dtype))
+    if not cfg.tie_embeddings:
+        params["head"] = _dense_init(k4, (cfg.d_model, cfg.vocab), dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+# ---------------------------------------------------------------------------
+def _causal_conv(p: Params, x: jax.Array,
+                 carry: Optional[jax.Array] = None):
+    """Per-channel causal conv, width W.  carry: (B, W-1, R) previous inputs.
+    Returns (y, new_carry)."""
+    w = p["conv_w"].shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], w - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)         # (B, S+W-1, R)
+    y = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(w))
+    y = y + p["conv_b"]
+    return y, xp[:, -(w - 1):]
+
+
+def rg_lru(p: Params, x: jax.Array, h0: jax.Array):
+    """x: (B,S,R); h0: (B,R) fp32.  Returns (y, h_last)."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf * p["a_gate_w"] + p["a_gate_b"])
+    i = jax.nn.sigmoid(xf * p["i_gate_w"] + p["i_gate_b"])
+    log_a = -LRU_C * jax.nn.softplus(p["lam"]) * r          # (B,S,R)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    def step(h, xs):
+        a_t, g_t = xs
+        h = a_t * h + g_t
+        return h, h
+
+    h_last, ys = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2), gated.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype), h_last
+
+
+def rec_temporal(cfg: LMConfig, p: Params, x: jax.Array, state: Params):
+    """Recurrent temporal mixing.  state: {"conv": (B,W-1,R), "h": (B,R)}."""
+    val = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wgate"])
+    val, conv_carry = _causal_conv(p, val, state["conv"])
+    y, h_last = rg_lru(p, val, state["h"])
+    out = (y * gate) @ p["wo"]
+    return out, {"conv": conv_carry, "h": h_last}
+
+
+def _zero_rec_state(cfg: LMConfig, b: int) -> Params:
+    r = cfg.d_model
+    return {"conv": jnp.zeros((b, cfg.conv_width - 1, r), cfg.dtype),
+            "h": jnp.zeros((b, r), jnp.float32)}
+
+
+def rec_layer(cfg: LMConfig, bp: Params, x: jax.Array, state: Params):
+    out, state = rec_temporal(cfg, bp["rec"], _norm(cfg, bp["ln1"], x), state)
+    x = x + out
+    x = x + mlp_block(cfg, bp["mlp"], _norm(cfg, bp["ln2"], x))
+    return x, state
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(cfg: LMConfig, params: Params, batch: Dict[str, jax.Array],
+            last_token_only: bool = False,
+            _hidden_only: bool = False) -> jax.Array:
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.arange(s)[None, :]
+    zero_state = _zero_rec_state(cfg, b)
+
+    def super_fn(x, bp):
+        if cfg.seq_shard_acts:
+            from .lm import seq_shard_constraint
+            x = seq_shard_constraint(x)
+        x, _ = rec_layer(cfg, bp["rec1"], x, zero_state)
+        x, _ = rec_layer(cfg, bp["rec2"], x, zero_state)
+        ab = bp["attn"]
+        x = x + attn_block(cfg, ab["attn"], _norm(cfg, ab["ln1"], x),
+                           positions, window=cfg.local_window)
+        x = x + mlp_block(cfg, ab["mlp"], _norm(cfg, ab["ln2"], x))
+        return x, None
+
+    fn = jax.checkpoint(super_fn) if cfg.remat else super_fn
+    x, _ = jax.lax.scan(lambda c, bp: fn(c, bp), x, params["super"])
+
+    if "tail" in params:
+        def tail_fn(x, bp):
+            x, _ = rec_layer(cfg, bp, x, zero_state)
+            return x, None
+        tfn = jax.checkpoint(tail_fn) if cfg.remat else tail_fn
+        x, _ = jax.lax.scan(lambda c, bp: tfn(c, bp), x, params["tail"])
+
+    if _hidden_only:
+        return x
+    if last_token_only:
+        x = x[:, -1:]
+    return unembed(cfg, params, x)
+
+
+def forward_hidden(cfg: LMConfig, params: Params,
+                   batch: Dict[str, jax.Array]) -> jax.Array:
+    return forward(cfg, params, batch, _hidden_only=True)
+
+
+def unembed(cfg: LMConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = _norm(cfg, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ w).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    n_super, tail = n_super_and_tail(cfg.n_layers, cfg.attn_every)
+    w = min(max_len, cfg.local_window)
+    rec = _zero_rec_state(cfg, batch)
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    cache: Params = {
+        "rec1": stack(rec, n_super),
+        "rec2": stack(rec, n_super),
+        "k": jnp.zeros((n_super, batch, w, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "v": jnp.zeros((n_super, batch, w, cfg.n_kv_heads, cfg.hd), cfg.dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = stack(rec, tail)
+    return cache
+
+
+def forward_decode(cfg: LMConfig, params: Params, tokens: jax.Array,
+                   cache: Params) -> Tuple[jax.Array, Params]:
+    x = jnp.take(params["embed"], tokens, axis=0)
+    new_len = cache["len"] + 1
+    pos = (new_len - 1)[None, None]
+
+    def super_fn(x, xs):
+        bp, st1, st2, kc, vc = xs
+        x, st1 = rec_layer(cfg, bp["rec1"], x, st1)
+        x, st2 = rec_layer(cfg, bp["rec2"], x, st2)
+        ab = bp["attn"]
+        h = _norm(cfg, ab["ln1"], x)
+        out, kc, vc = attn_block_decode(cfg, ab["attn"], h, kc, vc, new_len,
+                                        pos, window=cfg.local_window)
+        x = x + out
+        x = x + mlp_block(cfg, ab["mlp"], _norm(cfg, ab["ln2"], x))
+        return x, (st1, st2, kc, vc)
+
+    x, (st1, st2, kc, vc) = jax.lax.scan(
+        super_fn, x,
+        (params["super"], cache["rec1"], cache["rec2"], cache["k"], cache["v"]))
+    new_cache = dict(cache, rec1=st1, rec2=st2, k=kc, v=vc, len=new_len)
+
+    if "tail" in params:
+        def tail_fn(x, xs):
+            bp, st = xs
+            x, st = rec_layer(cfg, bp, x, st)
+            return x, st
+        x, st_tail = jax.lax.scan(tail_fn, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = st_tail
+
+    x = _norm(cfg, params["final_norm"], x)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ w).astype(jnp.float32), new_cache

@@ -1,0 +1,287 @@
+"""RWKV6 "Finch" (arXiv:2404.05892) — attention-free token mixer.
+
+Structure per layer (faithful to Finch at the tensor level):
+* **time-mix**: token-shift with data-dependent interpolation (ddlerp via a
+  low-rank adapter), projections r/k/v/gate, *data-dependent per-channel
+  decay* ``w_t = exp(-exp(w0 + lora_w(x)))`` and the WKV state recurrence
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+      y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+  evaluated per head (head_dim 64), fp32 state.
+* **channel-mix**: token-shifted squared-ReLU MLP with a sigmoid gate.
+
+Training/prefill scans over time inside each layer (the Pallas kernel
+``repro.kernels.rwkv6_scan`` is the blocked TPU version of the same
+recurrence; ``kernels/ref.py`` mirrors this module).  Decode carries
+(shift_tm, shift_cm, S) per layer — O(1) per token, which is why this arch
+runs the ``long_500k`` shape.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .lm import LMConfig, _dense_init, _stack_init
+
+Params = Dict[str, Any]
+
+LORA_TM = 32      # token-shift ddlerp adapter rank
+LORA_W = 64       # decay adapter rank
+N_MIX = 5         # r, k, v, w, g
+
+
+def init_rwkv_block(cfg: LMConfig, key, dtype) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 12)
+    h = d // cfg.rwkv_head_dim
+    return {
+        "ln1": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "ln2": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        "tm": {
+            "mu": 0.5 * jnp.ones((N_MIX, d), dtype),
+            "mu_x": 0.5 * jnp.ones((d,), dtype),
+            "maa_w1": _dense_init(ks[0], (d, N_MIX * LORA_TM), dtype, 0.01),
+            "maa_w2": _dense_init(ks[1], (N_MIX, LORA_TM, d), dtype, 0.01),
+            "wr": _dense_init(ks[2], (d, d), dtype),
+            "wk": _dense_init(ks[3], (d, d), dtype),
+            "wv": _dense_init(ks[4], (d, d), dtype),
+            "wg": _dense_init(ks[5], (d, d), dtype),
+            "wo": _dense_init(ks[6], (d, d), dtype),
+            "w0": jnp.full((d,), -6.0, jnp.float32),     # slow decay init
+            "w_lora1": _dense_init(ks[7], (d, LORA_W), dtype, 0.01),
+            "w_lora2": _dense_init(ks[8], (LORA_W, d), dtype, 0.01),
+            "u": _dense_init(ks[9], (h, cfg.rwkv_head_dim), jnp.float32, 0.1),
+            "ln_x": {"scale": jnp.ones((d,), dtype),
+                     "bias": jnp.zeros((d,), dtype)},
+        },
+        "cm": {
+            "mu_k": 0.5 * jnp.ones((d,), dtype),
+            "mu_r": 0.5 * jnp.ones((d,), dtype),
+            "wk": _dense_init(ks[10], (d, f), dtype),
+            "wv": _dense_init(ks[11], (f, d), dtype),
+            "wr": _dense_init(jax.random.fold_in(key, 99), (d, d), dtype),
+        },
+    }
+
+
+def init_params(cfg: LMConfig, key) -> Params:
+    dtype = cfg.dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embed": _dense_init(k1, (cfg.vocab, cfg.d_model), dtype, 0.02),
+        "blocks": _stack_init(k2, cfg.n_layers,
+                              lambda k: init_rwkv_block(cfg, k, dtype)),
+        "final_norm": {"scale": jnp.ones((cfg.d_model,), dtype),
+                       "bias": jnp.zeros((cfg.d_model,), dtype)},
+        "head": _dense_init(k3, (cfg.d_model, cfg.vocab), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time-mix
+# ---------------------------------------------------------------------------
+def _ddlerp(tm: Params, x: jax.Array, x_prev: jax.Array):
+    """Finch data-dependent token-shift: returns (x_r, x_k, x_v, x_w, x_g)."""
+    dx = x_prev - x
+    xx = x + dx * tm["mu_x"]
+    z = jnp.tanh(xx @ tm["maa_w1"])                        # (..., 5*LORA)
+    z = z.reshape(z.shape[:-1] + (N_MIX, LORA_TM))
+    m = jnp.einsum("...nl,nld->...nd", z, tm["maa_w2"])    # (..., 5, D)
+    mixed = x[..., None, :] + dx[..., None, :] * (tm["mu"] + m)
+    return [mixed[..., i, :] for i in range(N_MIX)]
+
+
+def _decay(tm: Params, x_w: jax.Array) -> jax.Array:
+    lora = jnp.tanh(x_w @ tm["w_lora1"]) @ tm["w_lora2"]
+    return jnp.exp(-jnp.exp(tm["w0"] + lora.astype(jnp.float32)))  # (.., D) in (0,1)
+
+
+def wkv_step(state: jax.Array, r, k, v, w, u) -> Tuple[jax.Array, jax.Array]:
+    """One WKV step, all heads.  state: (B,H,K,V) fp32; r/k/v/w: (B,H,Kdim)."""
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)                 # outer product
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + u[None, :, :, None] * kv)
+    state = w[..., None] * state + kv
+    return state, y
+
+
+def wkv_chunked(r, k, v, w, u, state, chunk: int = 64):
+    """Chunked-parallel WKV (the jnp mirror of kernels/rwkv6_scan.py's
+    blocking): the fp32 state crosses HBM once per *chunk* instead of once
+    per token; within a chunk the recurrence becomes decay-weighted
+    matmuls.  r/k/v/w: (B,S,H,D) fp32, state: (B,H,K,V) fp32.
+
+    Math per chunk (L_t = prod_{i<=t} w_i, E_t = L_t / w_t exclusive):
+        y_t = (r_t*E_t) . S_in  +  sum_{s<t} [(r_t*E_t).(k_s/L_s)] v_s
+              + (r_t.(u*k_t)) v_t
+        S_out = L_T * S_in + sum_s (k_s * L_T/L_s) (x) v_s
+    Numerics: safe for chunk<=64 with the model's decay scale (w ~ 0.99+);
+    documented in EXPERIMENTS.md §Perf."""
+    b, s, h, d = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    n = s // chunk
+    rc, kc, vc, wc = (x.reshape(b, n, chunk, h, d).transpose(1, 0, 2, 3, 4)
+                      for x in (r, k, v, w))
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.float32), k=-1)
+
+    def body(S, xs):
+        rt, kt, vt, wt = xs                       # (B,T,H,D)
+        logw = jnp.log(jnp.maximum(wt, 1e-30))
+        clog = jnp.cumsum(logw, axis=1)           # log L_t (inclusive)
+        L = jnp.exp(clog)
+        E = jnp.exp(clog - logw)                  # exclusive cumprod
+        a = rt * E                                # (B,T,H,K)
+        bs = kt * jnp.exp(-clog)                  # k_s / L_s
+        Amat = jnp.einsum("bthk,bshk->bhts", a, bs) * tri
+        diag = jnp.einsum("bthk,hk,bthk->bth", rt, u, kt)
+        y = (jnp.einsum("bhts,bshv->bthv", Amat, vt)
+             + diag[..., None] * vt
+             + jnp.einsum("bthk,bhkv->bthv", a, S))
+        LT = L[:, -1]                             # (B,H,K)
+        c = kt * jnp.exp(clog[:, -1:] - clog)     # k_s * L_T/L_s
+        S = LT[..., None] * S + jnp.einsum("bthk,bthv->bhkv", c, vt)
+        return S, y
+
+    state, ys = jax.lax.scan(body, state, (rc, kc, vc, wc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+    return y, state
+
+
+def time_mix(cfg: LMConfig, tm: Params, x: jax.Array, x_prev: jax.Array,
+             state: jax.Array):
+    """x: (B,S,D) (S>=1).  x_prev: (B,D) shift carry.  state: (B,H,K,V) fp32.
+    Returns (out, new_x_prev, new_state)."""
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    prev = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    x_r, x_k, x_v, x_w, x_g = _ddlerp(tm, x, prev)
+    r = (x_r @ tm["wr"]).reshape(b, s, h, hd).astype(jnp.float32)
+    k = (x_k @ tm["wk"]).reshape(b, s, h, hd).astype(jnp.float32)
+    v = (x_v @ tm["wv"]).reshape(b, s, h, hd).astype(jnp.float32)
+    g = jax.nn.silu(x_g @ tm["wg"])
+    w = _decay(tm, x_w).reshape(b, s, h, hd)               # fp32
+
+    from ..launch import variants
+    # chunked-parallel WKV is the default (measured 5-10x memory-term win,
+    # EXPERIMENTS.md §Perf); `rwkv_scan` knob reverts to per-token scan
+    if not variants.on("rwkv_scan") and s > 1:
+        chunk = 64 if s % 64 == 0 else s
+        ys4, state = wkv_chunked(r, k, v, w, tm["u"], state, chunk=chunk)
+        y = ys4.reshape(b, s, d).astype(x.dtype)
+    else:
+        def body(st, xs):
+            r_t, k_t, v_t, w_t = xs
+            st, y = wkv_step(st, r_t, k_t, v_t, w_t, tm["u"])
+            return st, y
+
+        xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+              v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+        state, ys = jax.lax.scan(body, state, xs)          # ys: (S,B,H,V)
+        y = ys.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    y = A.layer_norm(y, tm["ln_x"]["scale"], tm["ln_x"]["bias"])
+    out = (y * g) @ tm["wo"]
+    return out, x[:, -1], state
+
+
+def channel_mix(cm: Params, x: jax.Array, x_prev: jax.Array):
+    prev = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    x_k = x + (prev - x) * cm["mu_k"]
+    x_r = x + (prev - x) * cm["mu_r"]
+    k = jnp.square(jax.nn.relu(x_k @ cm["wk"]))
+    return jax.nn.sigmoid(x_r @ cm["wr"]) * (k @ cm["wv"]), x[:, -1]
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+def _zero_layer_state(cfg: LMConfig, b: int):
+    d = cfg.d_model
+    h = d // cfg.rwkv_head_dim
+    return {"wkv": jnp.zeros((b, h, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+                             jnp.float32),
+            "shift_tm": jnp.zeros((b, d), cfg.dtype),
+            "shift_cm": jnp.zeros((b, d), cfg.dtype)}
+
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int = 0) -> Params:
+    st = _zero_layer_state(cfg, batch)
+    return {"layers": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+                st),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def _block(cfg: LMConfig, bp: Params, x: jax.Array, st: Params):
+    h = A.layer_norm(x, bp["ln1"]["scale"], bp["ln1"]["bias"])
+    out, sh_tm, wkv = time_mix(cfg, bp["tm"], h, st["shift_tm"], st["wkv"])
+    x = x + out
+    h = A.layer_norm(x, bp["ln2"]["scale"], bp["ln2"]["bias"])
+    out, sh_cm = channel_mix(bp["cm"], h, st["shift_cm"])
+    x = x + out
+    return x, {"wkv": wkv, "shift_tm": sh_tm, "shift_cm": sh_cm}
+
+
+def forward(cfg: LMConfig, params: Params, batch: Dict[str, jax.Array],
+            cache: Optional[Params] = None, last_token_only: bool = False):
+    """Full-sequence forward.  Returns logits; with cache, also new cache."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    init_st = (cache["layers"] if cache is not None
+               else jax.tree.map(
+                   lambda y: jnp.broadcast_to(y, (cfg.n_layers,) + y.shape),
+                   _zero_layer_state(cfg, b)))
+
+    def body(x, xs):
+        bp, st = xs
+        if cfg.seq_shard_acts and tokens.shape[1] > 1:
+            from .lm import seq_shard_constraint
+            x = seq_shard_constraint(x)
+        x, st = _block(cfg, bp, x, st)
+        return x, st
+
+    blk = jax.checkpoint(body) if cfg.remat else body
+    x, new_st = jax.lax.scan(blk, x, (params["blocks"], init_st))
+    if last_token_only:
+        x = x[:, -1:]
+    x = A.layer_norm(x, params["final_norm"]["scale"],
+                     params["final_norm"]["bias"])
+    logits = (x @ params["head"]).astype(jnp.float32)
+    if cache is not None:
+        return logits, {"layers": new_st, "len": cache["len"] + tokens.shape[1]}
+    return logits
+
+
+def forward_decode(cfg: LMConfig, params: Params, tokens: jax.Array,
+                   cache: Params):
+    """tokens (B,1); O(1) per step — state-based decode."""
+    return forward(cfg, params, {"tokens": tokens}, cache=cache)
+
+
+def forward_hidden(cfg: LMConfig, params: Params,
+                   batch: Dict[str, jax.Array]) -> jax.Array:
+    """Post-block hidden states (B, S, D) — pair with :func:`unembed`."""
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    init_st = jax.tree.map(
+        lambda y: jnp.broadcast_to(y, (cfg.n_layers,) + y.shape),
+        _zero_layer_state(cfg, b))
+
+    def body(x, xs):
+        bp, st = xs
+        x, st = _block(cfg, bp, x, st)
+        return x, st
+
+    blk = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(blk, x, (params["blocks"], init_st))
+    return x
+
+
+def unembed(cfg: LMConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = A.layer_norm(x, params["final_norm"]["scale"],
+                     params["final_norm"]["bias"])
+    return (x @ params["head"]).astype(jnp.float32)

@@ -1,0 +1,247 @@
+"""Whisper-tiny backbone (arXiv:2212.04356) — encoder-decoder transformer.
+
+Per the assignment the conv audio frontend is a **stub**: ``input_specs()``
+supplies precomputed mel-frame embeddings (B, n_frames=1500, d=384); the
+backbone (4 encoder layers, 4 decoder layers with cross-attention, LayerNorm,
+GELU MLP, bias on projections, tied unembedding) is fully modeled.
+
+Deviation noted in DESIGN.md: positions are sinusoidal for both encoder and
+decoder (real Whisper uses learned decoder positions capped at 448) so the
+stress decode shapes (32k cache) remain well-defined.
+
+DAG note (paper §6.1.1): cross-attention edges make every decoder layer
+*deeper* than the last encoder layer, so horizontal cuts naturally split
+encoder stages first — the LayerGraph in lm_graph.py encodes those edges.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as A
+from .lm import LMConfig, _dense_init, _stack_init
+
+Params = Dict[str, Any]
+
+
+def _ln_params(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def _ln(p: Params, x: jax.Array) -> jax.Array:
+    return A.layer_norm(x, p["scale"], p["bias"])
+
+
+def _attn_params(cfg: LMConfig, key, dtype) -> Params:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": _dense_init(ks[0], (d, qd), dtype),
+            "bq": jnp.zeros((qd,), dtype),
+            "wk": _dense_init(ks[1], (d, kvd), dtype),
+            "wv": _dense_init(ks[2], (d, kvd), dtype),
+            "bv": jnp.zeros((kvd,), dtype),
+            "wo": _dense_init(ks[3], (qd, d), dtype),
+            "bo": jnp.zeros((d,), dtype)}
+
+
+def _mlp_params(cfg: LMConfig, key, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {"wu": _dense_init(k1, (cfg.d_model, cfg.d_ff), dtype),
+            "bu": jnp.zeros((cfg.d_ff,), dtype),
+            "wd": _dense_init(k2, (cfg.d_ff, cfg.d_model), dtype),
+            "bd": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def init_params(cfg: LMConfig, key) -> Params:
+    dtype = cfg.dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    def enc_layer(k):
+        ka, kb = jax.random.split(k)
+        return {"ln1": _ln_params(cfg.d_model, dtype),
+                "attn": _attn_params(cfg, ka, dtype),
+                "ln2": _ln_params(cfg.d_model, dtype),
+                "mlp": _mlp_params(cfg, kb, dtype)}
+
+    def dec_layer(k):
+        ka, kb, kc = jax.random.split(k, 3)
+        return {"ln1": _ln_params(cfg.d_model, dtype),
+                "attn": _attn_params(cfg, ka, dtype),
+                "ln_x": _ln_params(cfg.d_model, dtype),
+                "xattn": _attn_params(cfg, kb, dtype),
+                "ln2": _ln_params(cfg.d_model, dtype),
+                "mlp": _mlp_params(cfg, kc, dtype)}
+
+    return {
+        "embed": _dense_init(k1, (cfg.vocab, cfg.d_model), dtype, 0.02),
+        "enc": _stack_init(k2, cfg.n_enc_layers, enc_layer),
+        "enc_ln": _ln_params(cfg.d_model, dtype),
+        "dec": _stack_init(k3, cfg.n_layers, dec_layer),
+        "dec_ln": _ln_params(cfg.d_model, dtype),
+    }
+
+
+def _sinusoid(seq: int, d: int, offset=0) -> jax.Array:
+    pos = jnp.arange(seq)[:, None] + offset
+    dim = jnp.arange(0, d, 2)[None, :] / d
+    ang = pos / jnp.power(10000.0, dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _split_heads(cfg: LMConfig, x: jax.Array, n: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, cfg.hd)
+
+
+def _self_attn(cfg: LMConfig, p: Params, x: jax.Array, causal: bool) -> jax.Array:
+    q = _split_heads(cfg, x @ p["wq"] + p["bq"], cfg.n_heads)
+    k = _split_heads(cfg, x @ p["wk"], cfg.n_kv_heads)
+    v = _split_heads(cfg, x @ p["wv"] + p["bv"], cfg.n_kv_heads)
+    out = A.full_attention(q, k, v, causal=causal)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"] + p["bo"]
+
+
+def _cross_attn(cfg: LMConfig, p: Params, x: jax.Array,
+                mem_k: jax.Array, mem_v: jax.Array) -> jax.Array:
+    q = _split_heads(cfg, x @ p["wq"] + p["bq"], cfg.n_heads)
+    out = A.cross_attention(q, mem_k, mem_v)
+    b, s = x.shape[:2]
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"] + p["bo"]
+
+
+def _mlp(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["wu"] + p["bu"]) @ p["wd"] + p["bd"]
+
+
+def encode(cfg: LMConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """frames: (B, n_frames, D) stub embeddings -> encoder memory."""
+    x = frames.astype(cfg.dtype) + _sinusoid(frames.shape[1],
+                                             cfg.d_model).astype(cfg.dtype)
+
+    def body(x, lp):
+        x = x + _self_attn(cfg, lp["attn"], _ln(lp["ln1"], x), causal=False)
+        x = x + _mlp(lp["mlp"], _ln(lp["ln2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return _ln(params["enc_ln"], x)
+
+
+def _mem_kv(cfg: LMConfig, params: Params, memory: jax.Array):
+    """Precompute per-decoder-layer cross K/V from encoder memory."""
+    def one(lp):
+        k = _split_heads(cfg, memory @ lp["xattn"]["wk"], cfg.n_kv_heads)
+        v = _split_heads(cfg, memory @ lp["xattn"]["wv"] + lp["xattn"]["bv"],
+                         cfg.n_kv_heads)
+        return k, v
+    return jax.vmap(one)(params["dec"])     # stacked over layers
+
+
+def decode_train(cfg: LMConfig, params: Params, tokens: jax.Array,
+                 memory: jax.Array, last_token_only: bool = False
+                 ) -> jax.Array:
+    """Teacher-forced decoder pass -> fp32 logits."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + _sinusoid(s, cfg.d_model).astype(cfg.dtype)
+    mem_k, mem_v = _mem_kv(cfg, params, memory)
+
+    def body(x, xs):
+        lp, mk, mv = xs
+        x = x + _self_attn(cfg, lp["attn"], _ln(lp["ln1"], x), causal=True)
+        x = x + _cross_attn(cfg, lp["xattn"], _ln(lp["ln_x"], x), mk, mv)
+        x = x + _mlp(lp["mlp"], _ln(lp["ln2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["dec"], mem_k, mem_v))
+    if last_token_only:
+        x = x[:, -1:]
+    x = _ln(params["dec_ln"], x)
+    return (x @ params["embed"].T).astype(jnp.float32)   # tied unembedding
+
+
+def forward(cfg: LMConfig, params: Params, batch: Dict[str, jax.Array],
+            last_token_only: bool = False) -> jax.Array:
+    memory = encode(cfg, params, batch["frames"])
+    return decode_train(cfg, params, batch["tokens"], memory,
+                        last_token_only=last_token_only)
+
+
+def forward_hidden(cfg: LMConfig, params: Params,
+                   batch: Dict[str, jax.Array]) -> jax.Array:
+    memory = encode(cfg, params, batch["frames"])
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + _sinusoid(tokens.shape[1], cfg.d_model).astype(cfg.dtype)
+    mem_k, mem_v = _mem_kv(cfg, params, memory)
+
+    def body(x, xs):
+        lp, mk, mv = xs
+        x = x + _self_attn(cfg, lp["attn"], _ln(lp["ln1"], x), causal=True)
+        x = x + _cross_attn(cfg, lp["xattn"], _ln(lp["ln_x"], x), mk, mv)
+        x = x + _mlp(lp["mlp"], _ln(lp["ln2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, (params["dec"], mem_k, mem_v))
+    return x
+
+
+def unembed(cfg: LMConfig, params: Params, x: jax.Array) -> jax.Array:
+    x = _ln(params["dec_ln"], x)
+    return (x @ params["embed"].T).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: LMConfig, batch: int, max_len: int,
+               memory: Optional[jax.Array] = None,
+               params: Optional[Params] = None) -> Params:
+    L = cfg.n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    cache: Params = {"k": jnp.zeros(shape, cfg.dtype),
+                     "v": jnp.zeros(shape, cfg.dtype),
+                     "len": jnp.zeros((), jnp.int32)}
+    if memory is not None and params is not None:
+        mk, mv = _mem_kv(cfg, params, memory)
+        cache["mem_k"], cache["mem_v"] = mk, mv
+    else:
+        mshape = (L, batch, cfg.n_frames, cfg.n_kv_heads, cfg.hd)
+        cache["mem_k"] = jnp.zeros(mshape, cfg.dtype)
+        cache["mem_v"] = jnp.zeros(mshape, cfg.dtype)
+    return cache
+
+
+def forward_decode(cfg: LMConfig, params: Params, tokens: jax.Array,
+                   cache: Params) -> Tuple[jax.Array, Params]:
+    b = tokens.shape[0]
+    new_len = cache["len"] + 1
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + _sinusoid(1, cfg.d_model, offset=new_len - 1).astype(cfg.dtype)
+
+    def body(x, xs):
+        lp, kc, vc, mk, mv = xs
+        h = _ln(lp["ln1"], x)
+        q = _split_heads(cfg, h @ lp["attn"]["wq"] + lp["attn"]["bq"],
+                         cfg.n_heads)
+        k = _split_heads(cfg, h @ lp["attn"]["wk"], cfg.n_kv_heads)
+        v = _split_heads(cfg, h @ lp["attn"]["wv"] + lp["attn"]["bv"],
+                         cfg.n_kv_heads)
+        slot = new_len - 1
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        out = A.decode_attention(q, kc, vc, new_len[None])
+        x = x + out.reshape(b, 1, cfg.q_dim) @ lp["attn"]["wo"] + lp["attn"]["bo"]
+        x = x + _cross_attn(cfg, lp["xattn"], _ln(lp["ln_x"], x), mk, mv)
+        x = x + _mlp(lp["mlp"], _ln(lp["ln2"], x))
+        return x, (kc, vc)
+
+    x, (kc, vc) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["mem_k"], cache["mem_v"]))
+    x = _ln(params["dec_ln"], x)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    return logits, dict(cache, k=kc, v=vc, len=new_len)

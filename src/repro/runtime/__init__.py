@@ -1,0 +1,5 @@
+from .ft import ElasticPlanner, FailureInjector, TrainSupervisor
+from .straggler import SpeculativeExecutor
+
+__all__ = ["TrainSupervisor", "FailureInjector", "ElasticPlanner",
+           "SpeculativeExecutor"]

@@ -1,0 +1,47 @@
+"""Straggler mitigation: speculative duplicate dispatch.
+
+For inference pipelines the slowest stage paces the whole pipeline (paper
+Fig. 10).  Transient stragglers (thermal throttling on the Edge TPU — §4 —
+or preempted hosts at pod scale) are mitigated by hedged execution: if a
+work item has not completed within ``hedge_after`` seconds, the same item is
+dispatched to a backup executor and the first result wins.  Duplicates are
+safe because stages are pure functions.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, wait, FIRST_COMPLETED
+from typing import Any, Callable, Sequence
+
+
+class SpeculativeExecutor:
+    def __init__(self, fn: Callable[[Any], Any], hedge_after: float = 0.05,
+                 max_workers: int = 4):
+        self.fn = fn
+        self.hedge_after = hedge_after
+        self.pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.hedged = 0          # number of duplicate dispatches issued
+        self.completed = 0
+
+    def submit(self, item: Any) -> Any:
+        primary = self.pool.submit(self.fn, item)
+        done, _ = wait([primary], timeout=self.hedge_after,
+                       return_when=FIRST_COMPLETED)
+        if done:
+            self.completed += 1
+            return primary.result()
+        # primary is straggling: hedge
+        self.hedged += 1
+        backup = self.pool.submit(self.fn, item)
+        done, _ = wait([primary, backup], return_when=FIRST_COMPLETED)
+        self.completed += 1
+        winner = next(iter(done))
+        # leave the loser running (pure fn, result discarded)
+        return winner.result()
+
+    def map(self, items: Sequence[Any]):
+        return [self.submit(x) for x in items]
+
+    def shutdown(self):
+        self.pool.shutdown(wait=False)

@@ -1,0 +1,3 @@
+from .server import MicroBatcher, PipelinedModelServer, Request
+
+__all__ = ["Request", "MicroBatcher", "PipelinedModelServer"]

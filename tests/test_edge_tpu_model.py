@@ -1,0 +1,114 @@
+"""Analytical Edge TPU model must reproduce the paper's single-TPU and
+multi-TPU phenomenology (Figs. 2/4/6/7, Tables 2/4/6)."""
+import pytest
+
+from repro.core import (EdgeTPUModel, EdgeTPUSpec, GraphReporter, plan)
+from repro.core.segmentation import comp_split, balanced_split, segment_ranges
+from repro.models.cnn import synthetic_cnn
+
+MIB = 2 ** 20
+
+
+def model_for(f):
+    return EdgeTPUModel(synthetic_cnn(f).to_layer_graph())
+
+
+def _spill_boundary():
+    """Largest f that fits fully on-device, first f that spills."""
+    prev = None
+    for f in range(380, 700, 10):
+        if model_for(f).whole_model_memory().host_bytes > 0:
+            return prev, f
+        prev = f
+    raise AssertionError("no spill found")
+
+
+def test_fig4_stepped_performance_curve():
+    """Throughput collapses when the model crosses the on-chip boundary
+    (host spill) — the paper's Fig. 4 signature.  (The modelled drop is
+    smaller than the measured one; see EXPERIMENTS.md §Paper-model.)"""
+    f_fit, f_spill = _spill_boundary()
+    t_fit = model_for(f_fit).single_tpu_tops()
+    t_spill = model_for(f_spill).single_tpu_tops()
+    assert t_spill < 0.9 * t_fit          # a clear drop at the spill
+    # the boundary sits near the 8 MiB on-chip size (paper: ~7-8 MiB)
+    size = model_for(f_fit).graph.total_bytes / MIB
+    assert 5.0 < size < 8.0
+
+
+def test_table2_layer_granularity_spill():
+    """Host usage jumps in whole-layer (~25%) steps (Table 2)."""
+    _, f_spill = _spill_boundary()
+    m = model_for(f_spill + 10)           # just past the first drop
+    rep = m.whole_model_memory()
+    frac = rep.host_bytes / m.graph.total_bytes
+    assert 0.10 < frac < 0.35             # ~one of four big layers
+
+
+def test_segment_memory_zero_host_when_fits():
+    m = model_for(480)
+    cuts = balanced_split(m.graph.params_per_depth(), 2)
+    for lo, hi in segment_ranges(m.graph.depth, cuts):
+        assert m.segment_memory(lo, hi).host_bytes == 0
+
+
+def test_fig6_comp_split_keeps_host_usage():
+    """SEGM_COMP on 4 TPUs still spills for some synthetic models that
+    balanced segmentation fits (paper Table 4, right columns)."""
+    found = False
+    for f in range(560, 760, 20):
+        m = model_for(f)
+        P = m.graph.params_per_depth()
+        comp_spills = any(r.host_bytes > 0
+                          for r in m.stage_memories(comp_split(P, 4)))
+        bal_spills = any(r.host_bytes > 0
+                         for r in m.stage_memories(balanced_split(P, 4)))
+        if comp_spills and not bal_spills:
+            found = True
+            break
+    assert found, "no synthetic size where comp spills but balanced fits"
+
+
+def test_balanced_speedup_beats_comp_synthetic():
+    """Fig. 6 vs Fig. 7: balanced > comp for spilling synthetic models."""
+    m = model_for(700)                    # ~17 MiB: host spill on 1 TPU
+    P = m.graph.params_per_depth()
+    sp_bal = m.speedup(balanced_split(P, 4), batch=15)
+    sp_comp = m.speedup(comp_split(P, 4), batch=15)
+    assert sp_bal > sp_comp
+    assert sp_bal > 3.0                   # near-linear at minimum
+
+
+def test_table7_superlinear_speedup_real_models():
+    """Paper Table 7 headline: on real CNNs, SEGM_BALANCED beats a single
+    TPU super-linearly (ResNet101), and near-linearly at worst for the
+    deepest models whose first stage is MAC-heavy (ResNet152; the
+    beyond-paper cost-balanced planner closes that gap — see
+    benchmarks/segm_real.py)."""
+    from repro.core.planner import min_stages_no_spill, plan
+    from repro.models.cnn import REAL_CNNS
+    for name, floor in (("ResNet101", 1.0), ("ResNet152", 0.85),
+                        ("DenseNet121", 1.0)):
+        g = REAL_CNNS[name]().to_layer_graph()
+        m = EdgeTPUModel(g)
+        n = min_stages_no_spill(g, m)
+        pl = plan(g, n, "balanced", tpu_model=m)
+        sp = m.speedup(pl.cuts, batch=15)
+        assert sp > floor * n, (name, n, sp)
+
+
+def test_prof_equals_balanced_on_synthetic():
+    """Paper §6.2: for the synthetic family the balanced scheme finds the
+    same partition the exhaustive profiler picks."""
+    m = model_for(560)
+    pl_b = plan(m.graph, 4, "balanced", tpu_model=m)
+    pl_p = plan(m.graph, 4, "prof", tpu_model=m)
+    t_b = m.pipeline_batch_time(pl_b.cuts)
+    t_p = m.pipeline_batch_time(pl_p.cuts)
+    assert t_b <= t_p * 1.001
+
+
+def test_peak_tops_bound():
+    spec = EdgeTPUSpec()
+    m = model_for(200)
+    assert m.single_tpu_tops() < spec.peak_tops

@@ -1,0 +1,77 @@
+"""LayerGraph DAG tests: depths, levels, cut-crossing bytes."""
+import pytest
+
+from repro.core.graph import LayerGraph, chain_graph
+
+
+def diamond():
+    g = LayerGraph("diamond")
+    g.add_layer("in", params=1, macs=1, out_bytes=10)
+    g.add_layer("a", params=2, macs=2, out_bytes=10, inputs=["in"])
+    g.add_layer("b1", params=3, macs=3, out_bytes=10, inputs=["a"])
+    g.add_layer("b2", params=4, macs=4, out_bytes=20, inputs=["a"])
+    g.add_layer("c", params=5, macs=5, out_bytes=10, inputs=["b1", "b2"])
+    return g
+
+
+def test_depths_longest_path():
+    g = LayerGraph("g")
+    g.add_layer("in", out_bytes=1)
+    g.add_layer("long1", inputs=["in"])
+    g.add_layer("long2", inputs=["long1"])
+    g.add_layer("short", inputs=["in"])
+    # join: depth = 1 + max(depth(long2)=2, depth(short)=1) = 3
+    g.add_layer("join", inputs=["long2", "short"])
+    assert g.depths()["join"] == 3
+    assert g.depth == 4
+
+
+def test_levels_and_params_per_depth():
+    g = diamond()
+    assert g.params_per_depth() == [1, 2, 7, 5]
+    assert [sorted(l) for l in g.levels()] == [["in"], ["a"], ["b1", "b2"],
+                                               ["c"]]
+
+
+def test_out_bytes_crossing_cuts():
+    g = diamond()
+    # cut after depth 0: only "in"->a crosses (10)
+    # cut after depth 1: a feeds b1,b2 (10); cut after 2: b1+b2 (30)
+    assert g.out_bytes_per_depth() == [10, 10, 30, 0]
+
+
+def test_skip_connection_crosses_multiple_cuts():
+    g = LayerGraph("skip")
+    g.add_layer("in", out_bytes=5)
+    g.add_layer("m1", inputs=["in"], out_bytes=7)
+    g.add_layer("m2", inputs=["m1"], out_bytes=7)
+    g.add_layer("end", inputs=["m2", "in"])   # skip from depth 0 to 3
+    # cut after d0: only "in" crosses (5, counted once though used twice);
+    # cuts after d1/d2: m1 or m2 (7) + the live skip tensor "in" (5)
+    assert g.out_bytes_per_depth() == [5, 12, 12, 0]
+
+
+def test_cycle_detection():
+    g = LayerGraph("c")
+    g.add_layer("a")
+    g.add_layer("b", inputs=["a"])
+    g._edges["b"].append("a")
+    g._redges["a"].append("b")
+    with pytest.raises(ValueError, match="cycle"):
+        g.topological_order()
+
+
+def test_duplicate_and_unknown():
+    g = LayerGraph("d")
+    g.add_layer("a")
+    with pytest.raises(ValueError):
+        g.add_layer("a")
+    with pytest.raises(ValueError):
+        g.add_layer("b", inputs=["zzz"])
+
+
+def test_chain_graph_and_ranges():
+    g = chain_graph("ch", [(f"l{i}", i, i, 1) for i in range(5)])
+    assert g.depth == 5
+    assert g.layers_in_depth_range(1, 3) == ["l1", "l2", "l3"]
+    assert g.total_params == 10

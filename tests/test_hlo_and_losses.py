@@ -1,0 +1,130 @@
+"""HLO cost-model tests (trip-count scaling, collectives parsing) and the
+chunked-loss equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import HloCostModel, analyze
+from repro.launch.collectives import collective_bytes
+
+
+def test_flops_single_matmul():
+    n = 128
+    f = jax.jit(lambda a, b: a @ b)
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    compiled = f.lower(x, x).compile()
+    tot = analyze(compiled.as_text())
+    assert tot.flops == pytest.approx(2 * n ** 3, rel=0.01)
+
+
+def test_flops_scan_scales_by_trip_count():
+    """cost_analysis counts a while body once; the analyzer must multiply
+    by the trip count."""
+    n, trips = 64, 12
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        c, _ = jax.lax.scan(body, x, None, length=trips)
+        return c
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    compiled = jax.jit(f).lower(x, x).compile()
+    tot = analyze(compiled.as_text())
+    assert tot.flops == pytest.approx(trips * 2 * n ** 3, rel=0.05)
+
+
+def test_collectives_parser_on_crafted_hlo():
+    hlo = """
+HLO module m
+
+ENTRY %main (p0: f32[8,128]) -> f32[8,128] {
+  %p0 = f32[8,128]{1,0} parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %p0), replica_groups={}
+  %ag = f32[16,128]{1,0} all-gather(f32[8,128]{1,0} %ar), dimensions={0}
+  ROOT %out = f32[8,128]{1,0} reduce-scatter(f32[16,128]{1,0} %ag), dimensions={0}
+}
+"""
+    out = collective_bytes(hlo)
+    assert out["all-reduce"] == 8 * 128 * 4
+    assert out["all-gather"] == 8 * 128 * 4
+    assert out["reduce-scatter"] == 16 * 128 * 4
+    assert out["total"] == (8 + 8 + 16) * 128 * 4
+
+
+def test_hlo_model_nested_while():
+    hlo_model_entry_check = """
+HLO module m
+
+%inner_cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%inner_body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[4,4]{1,0} get-tuple-element(%p), index=1
+  %d = f32[4,4]{1,0} dot(f32[4,4]{1,0} %x, f32[4,4]{1,0} %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[4,4]) tuple(%ip, %d)
+}
+
+ENTRY %main (p0: f32[4,4]) -> f32[4,4] {
+  %p0 = f32[4,4]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[4,4]) tuple(%zero, %p0)
+  %w = (s32[], f32[4,4]) while(%init), condition=%inner_cond, body=%inner_body
+  ROOT %out = f32[4,4]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    tot = analyze(hlo_model_entry_check)
+    assert tot.flops == pytest.approx(5 * 2 * 4 ** 3)
+
+
+def test_chunked_loss_equals_direct():
+    from repro import configs
+    from repro.configs.common import concrete_batch
+    from repro.launch.steps import chunked_lm_loss
+    from repro.models import api
+    from repro.models.lm import lm_loss
+
+    cfg = configs.get("qwen3-1.7b").smoke_config()
+    params = api.init(cfg, jax.random.PRNGKey(0))
+    batch = concrete_batch(cfg, 32, 2, kind="train")
+    direct = lm_loss(api.forward(cfg, params, batch), batch["labels"])
+    hidden = api.forward_hidden(cfg, params, batch)
+    for chunk in (8, 16, 32):
+        chunked = chunked_lm_loss(cfg, params, hidden, batch["labels"],
+                                  chunk=chunk)
+        assert float(chunked) == pytest.approx(float(direct), rel=1e-5)
+
+
+def test_chunked_loss_grads_match():
+    from repro import configs
+    from repro.configs.common import concrete_batch
+    from repro.launch.steps import chunked_lm_loss
+    from repro.models import api
+    from repro.models.lm import lm_loss
+
+    cfg = configs.get("qwen3-1.7b").smoke_config()
+    params = api.init(cfg, jax.random.PRNGKey(1))
+    batch = concrete_batch(cfg, 16, 2, kind="train")
+
+    def loss_direct(p):
+        return lm_loss(api.forward(cfg, p, batch), batch["labels"])
+
+    def loss_chunked(p):
+        h = api.forward_hidden(cfg, p, batch)
+        return chunked_lm_loss(cfg, p, h, batch["labels"], chunk=8)
+
+    g1 = jax.grad(loss_direct)(params)
+    g2 = jax.grad(loss_chunked)(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-5)

@@ -1,0 +1,163 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul_qi8 import matmul_qi8
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.ops import quantize_int8, quantized_dense
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------------------------------------------------------------------
+# int8 matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n,block", [
+    (128, 128, 128, (128, 128, 128)),
+    (256, 384, 128, (128, 128, 128)),
+    (384, 256, 512, (128, 128, 128)),
+    (256, 256, 256, (128, 128, 64)),
+    (512, 128, 256, (256, 128, 128)),
+])
+def test_matmul_qi8_exact(m, k, n, block):
+    x = jnp.asarray(RNG.integers(-128, 128, (m, k), dtype=np.int8))
+    w = jnp.asarray(RNG.integers(-128, 128, (k, n), dtype=np.int8))
+    out = matmul_qi8(x, w, block=block, interpret=True)
+    assert out.dtype == jnp.int32
+    assert jnp.array_equal(out, ref.matmul_qi8_ref(x, w))
+
+
+def test_matmul_qi8_block_mismatch_raises():
+    x = jnp.zeros((100, 128), jnp.int8)
+    w = jnp.zeros((128, 128), jnp.int8)
+    with pytest.raises(AssertionError):
+        matmul_qi8(x, w, interpret=True)
+
+
+def test_quantize_roundtrip():
+    x = jnp.asarray(RNG.normal(size=(64, 64)), jnp.float32)
+    q, s = quantize_int8(x)
+    np.testing.assert_allclose(np.asarray(q * s), np.asarray(x),
+                               atol=float(s) * 0.51)
+    y = quantized_dense(x, x.T)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x @ x.T),
+                               rtol=0.05, atol=0.5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,hq,hkv,s,t,d,causal,dtype", [
+    (1, 2, 2, 128, 128, 64, True, jnp.float32),
+    (2, 4, 2, 256, 256, 64, True, jnp.float32),
+    (1, 8, 1, 128, 256, 128, True, jnp.float32),     # MQA, s != t
+    (2, 2, 2, 128, 128, 64, False, jnp.float32),
+    (1, 4, 4, 256, 256, 64, True, jnp.bfloat16),
+])
+def test_flash_attention_vs_ref(b, hq, hkv, s, t, d, causal, dtype):
+    q = jnp.asarray(RNG.normal(size=(b, hq, s, d)), dtype)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), dtype)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_block_sizes():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 256, 64)), jnp.float32)
+    base = ref.flash_attention_ref(q, k, v)
+    for bq, bk in ((64, 64), (128, 64), (64, 128), (256, 256)):
+        out = flash_attention(q, k, v, bq=bq, bk=bk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=2e-6, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,s,r,chunk", [
+    (1, 128, 128, 64), (2, 256, 256, 128), (2, 512, 128, 512),
+    (1, 256, 128, 256),
+])
+def test_rglru_scan_vs_ref(b, s, r, chunk):
+    a = jnp.asarray(RNG.uniform(0.3, 1.0, (b, s, r)), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(b, s, r)) * 0.2, jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(b, r)), jnp.float32)
+    y, h = rglru_scan(a, g, h0, chunk=chunk, interpret=True)
+    yr, hr = ref.rglru_scan_ref(a, g, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-5, atol=1e-5)
+
+
+@given(st.integers(1, 3), st.integers(1, 4), st.data())
+@settings(max_examples=20, deadline=None)
+def test_rglru_recurrence_property(b, nchunks, data):
+    """Chunked kernel == plain python recurrence for arbitrary sizes."""
+    s, r = nchunks * 32, 8
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 16)))
+    a = rng.uniform(0.0, 1.0, (b, s, r)).astype(np.float32)
+    g = rng.normal(size=(b, s, r)).astype(np.float32) * 0.5
+    h0 = rng.normal(size=(b, r)).astype(np.float32)
+    y, h = rglru_scan(jnp.asarray(a), jnp.asarray(g), jnp.asarray(h0),
+                      chunk=32, interpret=True)
+    href = h0.copy()
+    ys = np.empty_like(a)
+    for t in range(s):
+        href = a[:, t] * href + g[:, t]
+        ys[:, t] = href
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h), href, rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("b,h,s,d,chunk", [
+    (1, 1, 128, 64, 64), (2, 2, 128, 64, 128), (1, 2, 256, 32, 64),
+])
+def test_rwkv6_scan_vs_ref(b, h, s, d, chunk):
+    r = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, h, s, d)) * 0.2, jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.7, 1.0, (b, h, s, d)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(h, d)) * 0.2, jnp.float32)
+    s0 = jnp.asarray(RNG.normal(size=(b, h, d, d)) * 0.1, jnp.float32)
+    y, sl = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk, interpret=True)
+    yr, slr = ref.rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(slr),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv6_state_carries_across_chunks():
+    """Same input split into chunks must equal one-shot (state handoff)."""
+    b, h, s, d = 1, 1, 64, 16
+    r = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, h, s, d)) * 0.2, jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, h, s, d)), jnp.float32)
+    w = jnp.asarray(RNG.uniform(0.7, 1.0, (b, h, s, d)), jnp.float32)
+    u = jnp.asarray(RNG.normal(size=(h, d)) * 0.2, jnp.float32)
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    y1, st1 = rwkv6_scan(r, k, v, w, u, s0, chunk=64, interpret=True)
+    ya, sta = rwkv6_scan(r[:, :, :32], k[:, :, :32], v[:, :, :32],
+                         w[:, :, :32], u, s0, chunk=32, interpret=True)
+    yb, stb = rwkv6_scan(r[:, :, 32:], k[:, :, 32:], v[:, :, 32:],
+                         w[:, :, 32:], u, sta, chunk=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([ya, yb], 2)),
+                               np.asarray(y1), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(stb), np.asarray(st1),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,90 @@
+"""Property + unit tests for the segmentation algorithms (paper Alg. 1)."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.segmentation import (balanced_split, comp_split, dp_split,
+                                     imbalance, max_segment, prof_split,
+                                     segment_ranges, segment_sums,
+                                     split_check)
+
+arrays = st.lists(st.integers(min_value=0, max_value=10_000), min_size=1,
+                  max_size=60)
+
+
+@given(arrays, st.data())
+@settings(max_examples=200, deadline=None)
+def test_balanced_split_is_minimax_optimal(P, data):
+    """Algorithm 1's binary search must equal the exact DP optimum."""
+    s = data.draw(st.integers(min_value=1, max_value=len(P)))
+    cuts = balanced_split(P, s)
+    assert max_segment(P, cuts) == max_segment(P, dp_split(P, s))
+
+
+@given(arrays, st.data())
+@settings(max_examples=200, deadline=None)
+def test_split_structure_invariants(P, data):
+    s = data.draw(st.integers(min_value=1, max_value=len(P)))
+    for fn in (balanced_split, comp_split):
+        cuts = fn(P, s)
+        assert len(cuts) == s - 1
+        assert cuts == sorted(cuts)
+        assert len(set(cuts)) == len(cuts)
+        assert all(0 <= c < len(P) - 1 for c in cuts)
+        sums = segment_sums(P, cuts)
+        assert len(sums) == s
+        assert sum(sums) == sum(P)
+        ranges = segment_ranges(len(P), cuts)
+        assert ranges[0][0] == 0 and ranges[-1][1] == len(P) - 1
+        # contiguity
+        for (a, b), (c, d) in zip(ranges[:-1], ranges[1:]):
+            assert c == b + 1
+
+
+@given(arrays, st.integers(min_value=0, max_value=100_000), st.data())
+@settings(max_examples=200, deadline=None)
+def test_split_check_greedy_consistency(P, bound, data):
+    s = data.draw(st.integers(min_value=1, max_value=len(P)))
+    ok, cuts = split_check(P, bound, s)
+    if ok and bound >= max(P):
+        # greedy found <= s segments, each within bound
+        assert all(x <= bound for x in segment_sums(P, cuts))
+
+
+def test_paper_synthetic_comp_vs_balanced():
+    """Paper Table 4 vs Table 6: the compiler splits 5 layers 1-1-1-2 (tiny
+    first segment, double last); balanced gives the small layer away."""
+    small, big = 8_640, 921_600          # f=320 synthetic: 3f*9 and f^2*9
+    P = [small, big, big, big, big]
+    comp = comp_split(P, 4)
+    assert segment_sums(P, comp) == [small, big, big, 2 * big]
+    bal = balanced_split(P, 4)
+    assert max(segment_sums(P, bal)) == small + big
+    assert imbalance(P, bal) < imbalance(P, comp)
+
+
+def test_prof_split_matches_balanced_for_minimax_cost():
+    P = [5, 1, 9, 2, 2, 7, 3]
+    cost = lambda cuts: max_segment(P, cuts)
+    cuts = prof_split(P, 3, cost)
+    assert max_segment(P, cuts) == max_segment(P, balanced_split(P, 3))
+
+
+def test_prof_split_explodes_on_deep_models():
+    """Paper §5.3: C(d-1, s-1) is infeasible for deep models."""
+    d, s = 209, 6                        # ResNet101 example from the paper
+    assert math.comb(d - 1, s - 1) > 3e9
+    with pytest.raises(ValueError, match="infeasible"):
+        prof_split([1] * d, s, lambda c: 0.0)
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError):
+        balanced_split([], 1)
+    with pytest.raises(ValueError):
+        balanced_split([1, 2], 3)
+    with pytest.raises(ValueError):
+        balanced_split([1, -2, 3], 2)
+    with pytest.raises(ValueError):
+        comp_split([1, 2, 3], 0)
