@@ -1,0 +1,166 @@
+"""Plan-search wall-time benchmark over the paper's Table-1 model zoo.
+
+Per model, measures end-to-end ``plan(graph, s, strategy)`` for:
+
+* ``balanced`` on the *seed* path — ``LayerGraph(cache=False)`` +
+  ``EdgeTPUModel(use_engine=False)``, i.e. per-depth arrays recomputed per
+  query and every segment cost a full layer walk (the pre-engine behaviour);
+* ``balanced`` on the engine path (acceptance floor: >= 10x on ResNet152);
+* ``comp`` and the beyond-paper ``opt`` minimax-time DP;
+* ``prof`` feasibility (C(d-1, s-1) candidate count — the paper's point is
+  that it explodes for deep models).
+
+It also runs the exact O(d^2 s) DP oracle to confirm ``opt`` achieves a max
+modeled stage time <= ``balanced``'s on every model, and folds in the
+persistent-executor throughput microbenchmark.  Summary lands in
+``BENCH_planner.json`` at the repo root (plus the usual artifacts JSON).
+
+    PYTHONPATH=src python -m benchmarks.planner_bench
+    PYTHONPATH=src python -m benchmarks.planner_bench --models ResNet152 --repeats 5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import time
+from typing import Dict, List
+
+from repro.core import EdgeTPUModel, plan
+from repro.core.planner import min_stages_no_spill
+from repro.core.segmentation import minimax_time_split
+from repro.models.cnn import REAL_CNNS
+
+from .common import emit
+from .pipeline_serving import run_executor_bench
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+EXACT_ORACLE_MAX_DEPTH = 600          # O(d^2 s) — skip only absurd depths
+
+
+def _time_plan(graph, s, strategy, model, repeats: int) -> float:
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        plan(graph, s, strategy, tpu_model=model)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_model(name: str, repeats: int = 3) -> Dict:
+    build = REAL_CNNS[name]
+    g_fast = build().to_layer_graph()
+    m_fast = EdgeTPUModel(g_fast)
+    s = min_stages_no_spill(g_fast, m_fast)
+    s = max(2, min(s, g_fast.depth - 1))
+
+    # seed baseline: uncached graph + naive layer-walk model
+    g_seed = build().to_layer_graph()
+    g_seed.set_cache_enabled(False)
+    m_seed = EdgeTPUModel(g_seed, spec=m_fast.spec, use_engine=False)
+    t_seed = _time_plan(g_seed, s, "balanced", m_seed, max(1, repeats - 2))
+    t_engine = _time_plan(g_fast, s, "balanced", m_fast, repeats)
+    t_comp = _time_plan(g_fast, s, "comp", m_fast, repeats)
+    t_opt = _time_plan(g_fast, s, "opt", m_fast, repeats)
+
+    # plans + quality
+    p_bal = plan(g_fast, s, "balanced", tpu_model=m_fast)
+    p_opt = plan(g_fast, s, "opt", tpu_model=m_fast)
+    max_bal = max(m_fast.stage_times(p_bal.cuts))
+    max_opt = max(m_fast.stage_times(p_opt.cuts))
+
+    # exact-DP oracle (the dp_split analog over modeled stage time)
+    d = g_fast.depth
+    if d <= EXACT_ORACLE_MAX_DEPTH:
+        oracle_cuts = minimax_time_split(d, s, m_fast.segment_time,
+                                         exact=True)
+        max_oracle = max(m_fast.stage_times(oracle_cuts))
+    else:
+        max_oracle = float("nan")
+
+    prof_candidates = math.comb(d - 1, s - 1)
+    return {
+        "model": name, "depth": d, "stages": s,
+        "seed_balanced_ms": round(t_seed * 1e3, 2),
+        "engine_balanced_ms": round(t_engine * 1e3, 3),
+        "speedup": round(t_seed / t_engine, 1),
+        "comp_ms": round(t_comp * 1e3, 3),
+        "opt_ms": round(t_opt * 1e3, 3),
+        "prof_candidates": prof_candidates,
+        "prof_feasible": prof_candidates <= 2_000_000,
+        "max_stage_balanced_ms": round(max_bal * 1e3, 4),
+        "max_stage_opt_ms": round(max_opt * 1e3, 4),
+        "max_stage_oracle_ms": (round(max_oracle * 1e3, 4)
+                                if max_oracle == max_oracle else None),
+        "opt_le_balanced": bool(max_opt <= max_bal + 1e-15),
+        "opt_gain_pct": round((1 - max_opt / max_bal) * 100, 2),
+    }
+
+
+def run(models: List[str] | None = None, repeats: int = 3) -> Dict:
+    names = models or list(REAL_CNNS)
+    unknown = [n for n in names if n not in REAL_CNNS]
+    if unknown:
+        raise SystemExit(f"unknown model(s) {unknown}; "
+                         f"pick from {sorted(REAL_CNNS)}")
+    results = []
+    for name in names:
+        r = bench_model(name, repeats=repeats)
+        results.append(r)
+        print(f"{name:22s} d={r['depth']:3d} s={r['stages']}  "
+              f"balanced {r['seed_balanced_ms']:8.2f} -> "
+              f"{r['engine_balanced_ms']:6.3f} ms ({r['speedup']:6.1f}x)  "
+              f"opt {r['opt_ms']:7.3f} ms  "
+              f"max-stage opt/bal {r['opt_gain_pct']:+.2f}%  "
+              f"oracle_ok={r['opt_le_balanced']}")
+
+    rows = [{"name": f"plan_balanced_{r['model']}",
+             "us_per_call": round(r["engine_balanced_ms"] * 1e3, 1),
+             "derived": f"seed_ms={r['seed_balanced_ms']},"
+                        f"speedup={r['speedup']}x,"
+                        f"opt_gain={r['opt_gain_pct']}%"}
+            for r in results]
+    emit("planner_bench", rows, ["name", "us_per_call", "derived"])
+
+    exec_summary = run_executor_bench(emit_rows=False)
+    summary = {
+        "note": "plan-search wall time per strategy (analytical Edge TPU "
+                "model) + persistent-executor throughput; see EXPERIMENTS.md",
+        "models": results,
+        "executor": exec_summary,
+        "acceptance": {
+            "resnet152_speedup": next((r["speedup"] for r in results
+                                       if r["model"] == "ResNet152"), None),
+            "all_opt_le_balanced": all(r["opt_le_balanced"]
+                                       for r in results),
+            "executor_speedup": exec_summary["speedup"],
+            "executor_threads_created_steady_state":
+                exec_summary["threads_created_steady_state"],
+        },
+    }
+    out = os.path.join(REPO_ROOT, "BENCH_planner.json")
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"\nwrote {out}")
+    print(f"executor: {exec_summary['speedup']}x, "
+          f"{exec_summary['threads_created_steady_state']} threads created "
+          f"in steady state")
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of Table-1 names (default: full zoo)")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    summary = run(args.models, repeats=args.repeats)
+    acc = summary["acceptance"]
+    if acc["resnet152_speedup"] is not None:
+        assert acc["resnet152_speedup"] >= 10, acc
+    assert acc["all_opt_le_balanced"], acc
+
+
+if __name__ == "__main__":
+    main()

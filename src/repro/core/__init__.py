@@ -2,20 +2,25 @@
 multi-accelerator pipelined inference (SEGM_COMP / SEGM_PROF / SEGM_BALANCED)."""
 from .graph import LayerGraph, LayerNode, chain_graph
 from .segmentation import (balanced_split, comp_split, dp_split, imbalance,
-                           max_segment, prof_split, segment_ranges,
-                           segment_sums, split_check)
+                           max_segment, minimax_time_split, prof_split,
+                           segment_ranges, segment_sums, split_check)
+from .cost_engine import SegmentCostEngine
 from .refine import GraphReporter, RefinementResult, refine_cuts
 from .planner import (SegmentationPlan, min_stages_no_spill,
                       min_stages_to_fit, plan)
 from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec, MemoryReport
-from .pipeline import PipelineExecutor, simulated_stage, stage_balance_metrics
+from .pipeline import (PipelineExecutor, ShapeKeyedStageCache,
+                       simulated_stage, stage_balance_metrics)
 
 __all__ = [
     "LayerGraph", "LayerNode", "chain_graph",
-    "balanced_split", "comp_split", "dp_split", "prof_split", "split_check",
+    "balanced_split", "comp_split", "dp_split", "minimax_time_split",
+    "prof_split", "split_check",
     "segment_sums", "segment_ranges", "max_segment", "imbalance",
+    "SegmentCostEngine",
     "GraphReporter", "RefinementResult", "refine_cuts",
     "SegmentationPlan", "plan", "min_stages_to_fit", "min_stages_no_spill",
     "EdgeTPUModel", "EdgeTPUSpec", "MemoryReport",
-    "PipelineExecutor", "simulated_stage", "stage_balance_metrics",
+    "PipelineExecutor", "ShapeKeyedStageCache", "simulated_stage",
+    "stage_balance_metrics",
 ]

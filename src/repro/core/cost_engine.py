@@ -1,0 +1,216 @@
+"""O(1) segment-cost engine: the fast path under the planner and refiner.
+
+The paper's plan search evaluates thousands of candidate segments.  The seed
+implementation re-walked every layer of the graph per candidate (and rebuilt
+the cut-crossing activation array twice per ``segment_time`` call), making
+``plan()`` quadratic-ish in model depth.  :class:`SegmentCostEngine`
+precomputes, once per (graph, spec):
+
+* per-depth prefix sums of params / MACs / weight bytes, so any contiguous
+  segment's totals are two array reads;
+* the flat layer order (depth-major, insertion order within a depth — the
+  exact order the greedy whole-layer placement of paper §4.2 visits) plus a
+  prefix-sum over per-layer weight bytes, so the greedy *spill point* of a
+  segment is a binary search instead of a scan;
+* a sparse table over the per-depth maximum single-layer activation, so the
+  activation-reserve term of the capacity formula is an O(1) range-max;
+* the cut-crossing activation bytes array (stage I/O term), computed once.
+
+With these, ``segment_time`` is O(1) and the memory split is O(log L) plus a
+short tail scan only when the segment actually spills (greedy placement may
+still fit later-but-smaller layers after the first rejection, so the tail is
+walked layer-by-layer to stay bit-identical with the naive placement).
+
+Results are bit-identical to ``EdgeTPUModel``'s naive paths — the arithmetic
+is performed in the same order on the same integers — which the tests in
+tests/test_cost_engine.py assert over random segments of real Table-1 models.
+"""
+from __future__ import annotations
+
+import bisect
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+from .graph import LayerGraph
+
+
+def _prefix(vals: Sequence[int]) -> List[int]:
+    return list(itertools.accumulate(vals, initial=0))
+
+
+class SegmentCostEngine:
+    """Precomputed range queries over one :class:`LayerGraph` + device spec.
+
+    ``spec`` is duck-typed (an :class:`~repro.core.edge_tpu_model.EdgeTPUSpec`
+    in practice) to keep this module free of circular imports.
+    """
+
+    def __init__(self, graph: LayerGraph, spec):
+        self.graph = graph
+        self.spec = spec
+        levels = graph.levels()
+        self.depth = len(levels)
+        nodes = graph.nodes
+
+        # flat layer order = greedy placement order (depth-major)
+        self._flat: List[str] = [n for lvl in levels for n in lvl]
+        self._level_start: List[int] = [0] * (self.depth + 1)
+        pos = 0
+        for d, lvl in enumerate(levels):
+            self._level_start[d] = pos
+            pos += len(lvl)
+        self._level_start[self.depth] = pos
+        self._layer_bytes: List[int] = [nodes[n].bytes for n in self._flat]
+        self._layer_prefix: List[int] = _prefix(self._layer_bytes)
+
+        # per-depth prefix sums
+        self._params_prefix = _prefix(graph.params_per_depth())
+        self._macs_prefix = _prefix(graph.macs_per_depth())
+        self._bytes_prefix = _prefix(graph.bytes_per_depth())
+        self._cut_bytes = list(graph.out_bytes_per_depth())
+
+        # sparse table over per-depth max single-layer activation
+        amax = [max((nodes[n].out_bytes for n in lvl), default=0)
+                for lvl in levels]
+        self._build_sparse(amax)
+
+        self._split_cache: Dict[Tuple[int, int], Tuple[int, int]] = {}
+
+    # -- sparse-table range max ---------------------------------------------
+    def _build_sparse(self, vals: Sequence[int]) -> None:
+        n = len(vals)
+        log = [0] * (n + 1)
+        for i in range(2, n + 1):
+            log[i] = log[i // 2] + 1
+        table = [list(vals)]
+        k = 1
+        while (1 << k) <= n:
+            prev = table[-1]
+            half = 1 << (k - 1)
+            table.append([max(prev[i], prev[i + half])
+                          for i in range(n - (1 << k) + 1)])
+            k += 1
+        self._log2 = log
+        self._sparse = table
+
+    def segment_max_activation(self, depth_lo: int, depth_hi: int) -> int:
+        """Largest single-layer activation in the depth range — O(1)."""
+        if depth_hi < depth_lo:
+            return 0
+        k = self._log2[depth_hi - depth_lo + 1]
+        row = self._sparse[k]
+        return max(row[depth_lo], row[depth_hi - (1 << k) + 1])
+
+    # -- O(1) range sums -----------------------------------------------------
+    def segment_params(self, depth_lo: int, depth_hi: int) -> int:
+        return self._params_prefix[depth_hi + 1] - self._params_prefix[depth_lo]
+
+    def segment_macs(self, depth_lo: int, depth_hi: int) -> int:
+        return self._macs_prefix[depth_hi + 1] - self._macs_prefix[depth_lo]
+
+    def segment_weight_bytes(self, depth_lo: int, depth_hi: int) -> int:
+        return self._bytes_prefix[depth_hi + 1] - self._bytes_prefix[depth_lo]
+
+    def cut_io_bytes(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
+        """(input, output) activation bytes crossing the segment boundaries."""
+        in_b = self._cut_bytes[depth_lo - 1] if depth_lo > 0 else 0
+        out_b = (self._cut_bytes[depth_hi]
+                 if depth_hi < self.depth - 1 else 0)
+        return in_b, out_b
+
+    # -- memory (paper §4.2 greedy placement) --------------------------------
+    def segment_capacity(self, depth_lo: int, depth_hi: int) -> int:
+        """Weight capacity after the fixed + activation reserves."""
+        spec = self.spec
+        act = self.segment_max_activation(depth_lo, depth_hi)
+        return int(spec.onchip_bytes - spec.fixed_reserve
+                   - spec.act_reserve_factor * act)
+
+    def segment_split(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
+        """(device_bytes, host_bytes) of the greedy whole-layer placement.
+
+        Binary search over the weight-bytes prefix array finds the greedy
+        spill point (the first rejected layer); only the tail after it is
+        scanned, because already-rejected capacity never recovers but smaller
+        later layers may still fit.
+        """
+        key = (depth_lo, depth_hi)
+        hit = self._split_cache.get(key)
+        if hit is not None:
+            return hit
+        a = self._level_start[depth_lo]
+        b = self._level_start[depth_hi + 1]
+        cap = self.segment_capacity(depth_lo, depth_hi)
+        prefix = self._layer_prefix
+        base = prefix[a]
+        # largest m with sum(bytes of first m layers) <= cap
+        idx = bisect.bisect_right(prefix, base + cap, a, b + 1) - 1
+        if idx >= b:                      # everything fits on-device
+            result = (prefix[b] - base, 0)
+            self._split_cache[key] = result
+            return result
+        idx = max(idx, a)
+        device = prefix[idx] - base
+        host = 0
+        layer_bytes = self._layer_bytes
+        for t in range(idx, b):           # tail: greedy continues per-layer
+            bt = layer_bytes[t]
+            if device + bt <= cap:
+                device += bt
+            else:
+                host += bt
+        result = (device, host)
+        self._split_cache[key] = result
+        return result
+
+    def segment_host_bytes(self, depth_lo: int, depth_hi: int) -> int:
+        return self.segment_split(depth_lo, depth_hi)[1]
+
+    def segment_placement(self, depth_lo: int, depth_hi: int
+                          ) -> Tuple[int, int, Dict[str, str]]:
+        """Full (device, host, {layer: placement}) report — O(segment)."""
+        a = self._level_start[depth_lo]
+        b = self._level_start[depth_hi + 1]
+        cap = self.segment_capacity(depth_lo, depth_hi)
+        device = 0
+        host = 0
+        placement: Dict[str, str] = {}
+        for t in range(a, b):
+            bt = self._layer_bytes[t]
+            if device + bt <= cap:
+                device += bt
+                placement[self._flat[t]] = "device"
+            else:
+                host += bt
+                placement[self._flat[t]] = "host"
+        return device, host, placement
+
+    # -- time ----------------------------------------------------------------
+    def segment_time(self, depth_lo: int, depth_hi: int) -> float:
+        """Per-inference latency of one segment on one TPU — O(1).
+
+        Same expression (and float evaluation order) as the naive
+        ``EdgeTPUModel.segment_time``: systolic compute + weight load +
+        host-resident weight streaming + spill overhead + stage I/O +
+        per-inference overhead.
+        """
+        spec = self.spec
+        macs = self.segment_macs(depth_lo, depth_hi)
+        weight_bytes = self.segment_weight_bytes(depth_lo, depth_hi)
+        host_bytes = self.segment_host_bytes(depth_lo, depth_hi)
+        t_compute = (macs / spec.macs_per_s
+                     + weight_bytes / (spec.weight_load_gbps * 1e9))
+        t_stream = host_bytes / (spec.pcie_gbps * 1e9)
+        t_spill = spec.spill_event_overhead_s if host_bytes > 0 else 0.0
+        in_bytes, out_bytes = self.cut_io_bytes(depth_lo, depth_hi)
+        t_io = (in_bytes + out_bytes) / (spec.pcie_gbps * 1e9)
+        return (t_compute + t_stream + t_spill + t_io
+                + spec.per_inference_overhead_s)
+
+    def stage_times(self, cuts: Sequence[int]) -> List[float]:
+        from .segmentation import segment_ranges
+        return [self.segment_time(lo, hi)
+                for lo, hi in segment_ranges(self.depth, cuts)]
+
+    def max_stage_time(self, cuts: Sequence[int]) -> float:
+        return max(self.stage_times(cuts))

@@ -28,6 +28,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from .cost_engine import SegmentCostEngine
 from .graph import LayerGraph
 from .segmentation import segment_ranges
 
@@ -90,18 +91,40 @@ class MemoryReport:
 
 
 class EdgeTPUModel:
-    """Analytical device model bound to a :class:`LayerGraph`."""
+    """Analytical device model bound to a :class:`LayerGraph`.
 
-    def __init__(self, graph: LayerGraph, spec: Optional[EdgeTPUSpec] = None):
+    ``use_engine=True`` (default) answers segment queries through the
+    precomputed :class:`~repro.core.cost_engine.SegmentCostEngine` —
+    bit-identical results, O(1) instead of O(layers) per query.
+    ``use_engine=False`` keeps the naive walk-every-layer paths (the
+    before/after baseline for benchmarks/planner_bench.py).
+    """
+
+    def __init__(self, graph: LayerGraph, spec: Optional[EdgeTPUSpec] = None,
+                 use_engine: bool = True):
         self.graph = graph
         self.spec = spec or EdgeTPUSpec()
+        self.use_engine = use_engine
+        self._engine: Optional[SegmentCostEngine] = None
         self._depths = graph.depths()
         self._levels = graph.levels()
+
+    @property
+    def engine(self) -> SegmentCostEngine:
+        """Lazily built segment-cost fast path (always available)."""
+        if self._engine is None:
+            self._engine = SegmentCostEngine(self.graph, self.spec)
+        return self._engine
 
     # -- memory -------------------------------------------------------------
     def segment_memory(self, depth_lo: int, depth_hi: int) -> MemoryReport:
         """Whole-layer greedy placement in depth order (paper §4.2: 'the
         neural layer is the minimal storage unit')."""
+        if self.use_engine:
+            device, host, placement = self.engine.segment_placement(
+                depth_lo, depth_hi)
+            return MemoryReport(device_bytes=device, host_bytes=host,
+                                layer_placement=placement)
         spec = self.spec
         layers = [n for lvl in self._levels[depth_lo:depth_hi + 1] for n in lvl]
         act = max([self.graph.nodes[n].out_bytes for n in layers] + [0])
@@ -121,6 +144,15 @@ class EdgeTPUModel:
         return MemoryReport(device_bytes=device_used, host_bytes=host_used,
                             layer_placement=placement)
 
+    def segment_report_bytes(self, depth_lo: int, depth_hi: int
+                             ) -> Tuple[int, int]:
+        """(device, host) bytes only — the refiner's hot query; skips the
+        per-layer placement dict on the engine path."""
+        if self.use_engine:
+            return self.engine.segment_split(depth_lo, depth_hi)
+        rep = self.segment_memory(depth_lo, depth_hi)
+        return rep.device_bytes, rep.host_bytes
+
     def whole_model_memory(self) -> MemoryReport:
         return self.segment_memory(0, self.graph.depth - 1)
 
@@ -128,6 +160,8 @@ class EdgeTPUModel:
     def segment_time(self, depth_lo: int, depth_hi: int,
                      mem: Optional[MemoryReport] = None) -> float:
         """Per-inference latency of one segment on one TPU (seconds)."""
+        if self.use_engine and mem is None:
+            return self.engine.segment_time(depth_lo, depth_hi)
         spec = self.spec
         mem = mem or self.segment_memory(depth_lo, depth_hi)
         layers = [n for lvl in self._levels[depth_lo:depth_hi + 1] for n in lvl]
@@ -137,11 +171,11 @@ class EdgeTPUModel:
                      + weight_bytes / (spec.weight_load_gbps * 1e9))
         t_stream = mem.host_bytes / (spec.pcie_gbps * 1e9)
         t_spill = spec.spill_event_overhead_s if mem.host_bytes > 0 else 0.0
-        # stage input/output transfer through host queues
-        in_bytes = (self.graph.out_bytes_per_depth()[depth_lo - 1]
-                    if depth_lo > 0 else 0)
-        out_bytes = (self.graph.out_bytes_per_depth()[depth_hi]
-                     if depth_hi < self.graph.depth - 1 else 0)
+        # stage input/output transfer through host queues (hoisted: the seed
+        # rebuilt this O(depth * layers) array twice per call)
+        obd = self.graph.out_bytes_per_depth()
+        in_bytes = obd[depth_lo - 1] if depth_lo > 0 else 0
+        out_bytes = obd[depth_hi] if depth_hi < self.graph.depth - 1 else 0
         t_io = (in_bytes + out_bytes) / (spec.pcie_gbps * 1e9)
         return (t_compute + t_stream + t_spill + t_io
                 + spec.per_inference_overhead_s)

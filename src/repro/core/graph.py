@@ -43,14 +43,39 @@ class LayerNode:
 
 
 class LayerGraph:
-    """Feed-forward DAG of :class:`LayerNode` with topological-depth utilities."""
+    """Feed-forward DAG of :class:`LayerNode` with topological-depth utilities.
 
-    def __init__(self, name: str = "model"):
+    Depth/level/per-depth aggregates are memoized after the first query and
+    invalidated by :meth:`add` — the planner and the analytical device model
+    query them thousands of times per plan search, so recomputing the
+    topological order each call dominated plan-search wall time in profiles.
+    Mutating ``_edges``/``_redges`` directly bypasses the invalidation and is
+    unsupported after the first query.  ``cache=False`` restores the
+    recompute-every-call behaviour (used by benchmarks/planner_bench.py to
+    measure the uncached baseline).
+    """
+
+    def __init__(self, name: str = "model", cache: bool = True):
         self.name = name
         self.nodes: Dict[str, LayerNode] = {}
         self._edges: Dict[str, List[str]] = {}      # src -> [dst]
         self._redges: Dict[str, List[str]] = {}     # dst -> [src]
         self._order: List[str] = []                 # insertion order
+        self._cache_enabled = cache
+        self._cache: Dict[str, object] = {}
+
+    def set_cache_enabled(self, enabled: bool) -> None:
+        self._cache_enabled = enabled
+        self._cache.clear()
+
+    def _cached(self, key: str, compute):
+        """Memoize `compute()` under `key`; results are shared — treat them
+        as immutable."""
+        if not self._cache_enabled:
+            return compute()
+        if key not in self._cache:
+            self._cache[key] = compute()
+        return self._cache[key]
 
     # -- construction -------------------------------------------------------
     def add(self, node: LayerNode, inputs: Sequence[str] = ()) -> str:
@@ -59,6 +84,7 @@ class LayerGraph:
         for src in inputs:
             if src not in self.nodes:
                 raise ValueError(f"unknown input {src!r} for layer {node.name!r}")
+        self._cache.clear()
         self.nodes[node.name] = node
         self._order.append(node.name)
         self._edges[node.name] = []
@@ -88,6 +114,9 @@ class LayerGraph:
 
     def topological_order(self) -> List[str]:
         """Kahn's algorithm; raises on cycles (models must be feed-forward)."""
+        return self._cached("topo", self._topological_order)
+
+    def _topological_order(self) -> List[str]:
         indeg = {n: len(self._redges[n]) for n in self.nodes}
         # deterministic: seed queue in insertion order
         q = deque(n for n in self._order if indeg[n] == 0)
@@ -105,6 +134,9 @@ class LayerGraph:
 
     def depths(self) -> Dict[str, int]:
         """Depth of each layer = max distance from any input (paper §6.1.1)."""
+        return self._cached("depths", self._depths)
+
+    def _depths(self) -> Dict[str, int]:
         depth: Dict[str, int] = {}
         for n in self.topological_order():
             preds = self._redges[n]
@@ -120,6 +152,9 @@ class LayerGraph:
     # -- per-depth aggregation (the P array of Algorithm 1) ------------------
     def levels(self) -> List[List[str]]:
         """Layer names grouped by depth, ascending."""
+        return self._cached("levels", self._levels)
+
+    def _levels(self) -> List[List[str]]:
         d = self.depths()
         levels: List[List[str]] = [[] for _ in range(self.depth)]
         for n in self._order:
@@ -128,13 +163,16 @@ class LayerGraph:
 
     def params_per_depth(self) -> List[int]:
         """P[i] = number of parameters at depth i (paper §6.1.2)."""
-        return [sum(self.nodes[n].params for n in lvl) for lvl in self.levels()]
+        return self._cached("params_per_depth", lambda: [
+            sum(self.nodes[n].params for n in lvl) for lvl in self.levels()])
 
     def bytes_per_depth(self) -> List[int]:
-        return [sum(self.nodes[n].bytes for n in lvl) for lvl in self.levels()]
+        return self._cached("bytes_per_depth", lambda: [
+            sum(self.nodes[n].bytes for n in lvl) for lvl in self.levels()])
 
     def macs_per_depth(self) -> List[int]:
-        return [sum(self.nodes[n].macs for n in lvl) for lvl in self.levels()]
+        return self._cached("macs_per_depth", lambda: [
+            sum(self.nodes[n].macs for n in lvl) for lvl in self.levels()])
 
     def out_bytes_per_depth(self) -> List[int]:
         """Activation bytes crossing a horizontal cut placed after each depth.
@@ -142,6 +180,9 @@ class LayerGraph:
         For a cut after depth i, the transferred tensors are the outputs of
         every layer at depth <= i that feeds a layer at depth > i.
         """
+        return self._cached("out_bytes_per_depth", self._out_bytes_per_depth)
+
+    def _out_bytes_per_depth(self) -> List[int]:
         d = self.depths()
         out = [0] * self.depth
         for n in self._order:

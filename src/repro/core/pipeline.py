@@ -10,6 +10,15 @@ queue.  Stage functions are arbitrary callables: the CNN benchmarks bind them
 to real JAX forwards of the stage's layers; tests bind simulated latencies to
 validate the analytical pipeline model.
 
+The executor is *persistent*: worker threads and their bounded queues are
+created once (on first :meth:`PipelineExecutor.run_batch` or an explicit
+:meth:`PipelineExecutor.start`) and reused across batches, so steady-state
+serving creates **zero** threads per batch — the seed spawned and joined one
+thread per stage per batch, which dominated small-batch throughput.  A batch
+is delimited by an end-marker flowing through the queues; stage failures are
+wrapped and forwarded so the pipeline stays drained and reusable after an
+error.  Lifecycle: ``start()`` / ``stop()`` or a ``with`` block.
+
 This executor is the *paper-faithful* path (host-mediated transfers).  The
 pod-scale SPMD path (shard_map + ppermute over ICI) lives in
 launch/pipeline_spmd.py and consumes the same SegmentationPlan.
@@ -19,74 +28,175 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from typing import Any, Callable, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-_SENTINEL = object()
+_BATCH_END = object()     # delimits one batch; forwarded by every stage
+_SHUTDOWN = object()      # terminates workers; forwarded by every stage
+
+
+class _Failed:
+    """A stage exception travelling the pipeline in the failed item's slot.
+
+    Downstream stages forward it untouched, so one bad input neither kills
+    the worker threads nor stalls the rest of the batch."""
+
+    __slots__ = ("error",)
+
+    def __init__(self, error: BaseException):
+        self.error = error
 
 
 class PipelineExecutor:
-    """Run inputs through a chain of stage functions with one thread/stage."""
+    """Run inputs through a chain of stage functions with one persistent
+    thread per stage and reusable bounded queues between stages."""
 
     def __init__(self, stage_fns: Sequence[Callable[[Any], Any]],
-                 queue_size: int = 64):
+                 queue_size: int = 64, name: str = "pipeline"):
         if not stage_fns:
             raise ValueError("need at least one stage")
         self.stage_fns = list(stage_fns)
         self.queue_size = queue_size
+        self.name = name
+        self._lock = threading.RLock()
+        self._queues: List[queue.Queue] = []
+        self._threads: List[threading.Thread] = []
+        self._busy = [0.0] * len(self.stage_fns)
+        self._started = False
 
     @property
     def n_stages(self) -> int:
         return len(self.stage_fns)
 
+    @property
+    def started(self) -> bool:
+        return self._started
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "PipelineExecutor":
+        """Create the queues and spawn the persistent worker threads."""
+        with self._lock:
+            if self._started:
+                return self
+            n = self.n_stages
+            self._queues = [queue.Queue(self.queue_size) for _ in range(n + 1)]
+            self._threads = [
+                threading.Thread(target=self._worker, args=(i,), daemon=True,
+                                 name=f"{self.name}-stage{i}")
+                for i in range(n)
+            ]
+            for t in self._threads:
+                t.start()
+            self._started = True
+            return self
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Drain and join the worker threads; the executor may be restarted.
+
+        Bounded: if a stage hangs and the shutdown marker never cascades to
+        the tail within ``timeout``, the (daemon) workers are abandoned
+        rather than blocking the caller forever."""
+        with self._lock:
+            if not self._started:
+                return
+            self._queues[0].put(_SHUTDOWN)
+            # the marker cascades stage-to-stage; swallow it at the tail
+            deadline = time.monotonic() + timeout
+            try:
+                while self._queues[-1].get(
+                        timeout=max(0.0, deadline - time.monotonic())
+                ) is not _SHUTDOWN:
+                    pass
+            except queue.Empty:
+                pass                      # stuck stage: abandon daemon workers
+            for t in self._threads:
+                t.join(timeout=max(0.0, deadline - time.monotonic()))
+            self._threads = []
+            self._queues = []
+            self._started = False
+
+    def __enter__(self) -> "PipelineExecutor":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- workers -------------------------------------------------------------
+    def _worker(self, i: int) -> None:
+        fn = self.stage_fns[i]
+        q_in = self._queues[i]
+        q_out = self._queues[i + 1]
+        while True:
+            item = q_in.get()
+            if item is _SHUTDOWN:
+                q_out.put(_SHUTDOWN)
+                return
+            if item is _BATCH_END or isinstance(item, _Failed):
+                q_out.put(item)
+                continue
+            try:
+                t0 = time.perf_counter()
+                out = fn(item)
+                self._busy[i] += time.perf_counter() - t0
+            except BaseException as e:   # surface worker failures per item
+                q_out.put(_Failed(e))
+                continue
+            q_out.put(out)
+
+    # -- batches -------------------------------------------------------------
     def run_batch(self, inputs: Sequence[Any],
                   collect_stage_times: bool = False
                   ) -> Tuple[List[Any], Optional[List[float]]]:
         """Push `inputs` through the pipeline; returns (outputs, stage_busy_s).
 
         Outputs preserve input order (in-order queues).  ``stage_busy_s[i]``
-        is the total busy time of stage i — the paper's Fig. 10 metric.
+        is the total busy time of stage i *for this batch* — the paper's
+        Fig. 10 metric.  If any stage raised, the first exception is
+        re-raised after the batch fully drains (so the executor stays
+        reusable).  Creates no threads: feeding interleaves with collection
+        (non-blocking puts), so batches larger than the queue capacity
+        cannot deadlock the single caller thread.
         """
-        n = self.n_stages
-        qs: List[queue.Queue] = [queue.Queue(self.queue_size) for _ in range(n + 1)]
-        busy = [0.0] * n
-        errors: List[BaseException] = []
-
-        def worker(i: int) -> None:
-            fn = self.stage_fns[i]
+        with self._lock:
+            if not self._started:
+                self.start()
+            n = self.n_stages
+            for j in range(n):
+                self._busy[j] = 0.0
+            q_in, q_out = self._queues[0], self._queues[n]
+            items = list(inputs)
+            fed = 0
+            end_sent = False
+            outputs: List[Any] = []
+            errors: List[BaseException] = []
             while True:
-                item = qs[i].get()
-                if item is _SENTINEL:
-                    qs[i + 1].put(_SENTINEL)
-                    return
+                # feed as much as fits without blocking
+                while fed < len(items):
+                    try:
+                        q_in.put_nowait(items[fed])
+                    except queue.Full:
+                        break
+                    fed += 1
+                if fed == len(items) and not end_sent:
+                    try:
+                        q_in.put_nowait(_BATCH_END)
+                        end_sent = True
+                    except queue.Full:
+                        pass
+                # collect; poll only while we still owe the pipeline input
                 try:
-                    t0 = time.perf_counter()
-                    out = fn(item)
-                    busy[i] += time.perf_counter() - t0
-                except BaseException as e:   # surface worker failures
-                    errors.append(e)
-                    qs[i + 1].put(_SENTINEL)
-                    return
-                qs[i + 1].put(out)
-
-        threads = [threading.Thread(target=worker, args=(i,), daemon=True)
-                   for i in range(n)]
-        for t in threads:
-            t.start()
-        for x in inputs:
-            qs[0].put(x)
-        qs[0].put(_SENTINEL)
-
-        outputs: List[Any] = []
-        while True:
-            item = qs[n].get()
-            if item is _SENTINEL:
-                break
-            outputs.append(item)
-        for t in threads:
-            t.join(timeout=30)
-        if errors:
-            raise errors[0]
-        return outputs, (busy if collect_stage_times else None)
+                    item = q_out.get() if end_sent else q_out.get(timeout=0.02)
+                except queue.Empty:
+                    continue
+                if item is _BATCH_END:
+                    break
+                if isinstance(item, _Failed):
+                    errors.append(item.error)
+                else:
+                    outputs.append(item)
+            if errors:
+                raise errors[0]
+            busy = list(self._busy) if collect_stage_times else None
+            return outputs, busy
 
     def timed_run(self, inputs: Sequence[Any]) -> Tuple[List[Any], float, List[float]]:
         t0 = time.perf_counter()
@@ -95,7 +205,13 @@ class PipelineExecutor:
 
 
 def simulated_stage(latency_s: float) -> Callable[[Any], Any]:
-    """A stage that just sleeps — used to validate the pipeline time model."""
+    """A stage that just sleeps — used to validate the pipeline time model.
+
+    Zero latency skips the sleep syscall entirely (``time.sleep(0)`` still
+    forces a scheduler yield per item, which would swamp executor-overhead
+    measurements)."""
+    if latency_s <= 0.0:
+        return lambda x: x
     def fn(x: Any) -> Any:
         time.sleep(latency_s)
         return x
@@ -109,3 +225,48 @@ def stage_balance_metrics(stage_times: Sequence[float]) -> dict:
     return {"max_stage_s": mx, "mean_stage_s": mean,
             "max_minus_mean_s": mx - mean,
             "balance": mean / mx if mx > 0 else 1.0}
+
+
+def _shape_key(x: Any) -> Any:
+    """Hashable signature of a stage input: (shape, dtype) for arrays."""
+    shape = getattr(x, "shape", None)
+    if shape is not None:
+        return (tuple(shape), str(getattr(x, "dtype", "")))
+    return type(x).__name__
+
+
+class ShapeKeyedStageCache:
+    """Memoize built (typically jitted) stage callables per input signature.
+
+    Stage builders close over sliced parameters and ``jax.jit`` wrappers;
+    rebuilding them per server restart (or eagerly for shapes never served)
+    wastes startup time and tracing.  ``get(name, x, build)`` builds the
+    stage callable at most once per (stage name, input shape/dtype) and
+    returns the cached callable afterwards, so steady-state batches reuse
+    the already-traced function.
+    """
+
+    def __init__(self) -> None:
+        self._fns: Dict[Any, Callable[[Any], Any]] = {}
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._fns)
+
+    def get(self, name: str, x: Any,
+            build: Callable[[], Callable[[Any], Any]]) -> Callable[[Any], Any]:
+        key = (name, _shape_key(x))
+        fn = self._fns.get(key)
+        if fn is None:
+            with self._lock:
+                fn = self._fns.get(key)
+                if fn is None:
+                    fn = self._fns[key] = build()
+        return fn
+
+    def wrap(self, name: str,
+             build: Callable[[], Callable[[Any], Any]]) -> Callable[[Any], Any]:
+        """A stage function that lazily builds/caches per input signature."""
+        def stage(x: Any) -> Any:
+            return self.get(name, x, build)(x)
+        return stage

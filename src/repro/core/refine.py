@@ -155,6 +155,10 @@ class GraphReporter:
         self._bytes_per_depth = tpu_model.graph.bytes_per_depth()
 
     def segment_report(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
+        # fast path: bytes-only query, no per-layer placement dict
+        fast = getattr(self._m, "segment_report_bytes", None)
+        if fast is not None:
+            return fast(depth_lo, depth_hi)
         rep = self._m.segment_memory(depth_lo, depth_hi)
         return rep.device_bytes, rep.host_bytes
 

@@ -23,6 +23,7 @@ Strategies:
 """
 from __future__ import annotations
 
+import bisect
 import itertools
 from typing import Callable, List, Optional, Sequence, Tuple
 
@@ -57,6 +58,30 @@ def split_check(P: Sequence[int], bound: int, s: int) -> Tuple[bool, List[int]]:
             params_sum = p
     min_segms += 1                       # the last segment
     return min_segms <= s, split_pos
+
+
+def _prefix_split_check(prefix: Sequence[int], bound: int,
+                        s: int) -> Tuple[bool, List[int]]:
+    """`split_check` over a precomputed prefix-sum array, one bisect per
+    segment instead of a full traversal: O(s log d).
+
+    Exactly equivalent to the greedy when ``bound >= max(P)`` (each greedy
+    segment is the maximal prefix summing to <= bound) — which
+    ``balanced_split``'s binary search guarantees.
+    """
+    d = len(prefix) - 1
+    segs = 0
+    start = 0
+    cuts: List[int] = []
+    while start < d:
+        i = bisect.bisect_right(prefix, prefix[start] + bound,
+                                start + 1, d + 1) - 1
+        segs += 1
+        if i >= d:
+            break
+        cuts.append(i - 1)
+        start = i
+    return segs <= s, cuts
 
 
 def _greedy_cuts_exact(P: Sequence[int], bound: int, s: int) -> List[int]:
@@ -106,12 +131,13 @@ def balanced_split(P: Sequence[int], s: int,
     _validate(P, s)
     if s == 1:
         return []
+    prefix = list(itertools.accumulate(P, initial=0))
     lo = max(P)                 # an upper bound must exceed every element
-    hi = sum(P)                 # the array sum is an obvious upper bound
+    hi = prefix[-1]             # the array sum is an obvious upper bound
     best_bound = hi
     while lo <= hi:
         bound = (lo + hi) // 2
-        ok, _ = split_check(P, bound, s)
+        ok, _ = _prefix_split_check(prefix, bound, s)
         if ok:
             best_bound = bound
             hi = bound - 1      # search for smaller upper bounds
@@ -119,7 +145,8 @@ def balanced_split(P: Sequence[int], s: int,
             lo = bound + 1
     if tie_break == "late":
         d = len(P)
-        ok, rcuts = split_check(list(P)[::-1], best_bound, s)
+        rprefix = list(itertools.accumulate(reversed(P), initial=0))
+        ok, rcuts = _prefix_split_check(rprefix, best_bound, s)
         if ok:
             cuts = sorted(d - 2 - c for c in rcuts)
             if all(0 <= c < d - 1 for c in cuts):
@@ -235,6 +262,90 @@ def prof_split(
             best_cost, best_cuts = c, cuts
     assert best_cuts is not None
     return best_cuts
+
+
+def minimax_time_split(
+    d: int,
+    s: int,
+    cost_fn: Callable[[int, int], float],
+    exact: bool = False,
+) -> List[int]:
+    """Minimax partition of depths [0..d-1] under an arbitrary range cost.
+
+    ``cost_fn(lo, hi)`` is the modeled *stage time* of the segment covering
+    depths [lo, hi] inclusive (compute + weight-load + stream + I/O via the
+    SegmentCostEngine); the DP minimizes the maximum stage cost over all
+    contiguous s-way partitions — the quantity that paces a pipeline.
+
+    dp[k][i] = min over j of max(dp[k-1][j], cost(j+1, i)).  The fast path
+    exploits that dp[k-1][j] is non-decreasing in j while cost(j+1, i) is
+    non-increasing in j (both hold exactly for cumulative costs; the stage
+    I/O boundary term can perturb them locally), binary-searching the
+    crossing point per cell: O(d·s·log d) cost evaluations, each O(1) on the
+    engine.  ``exact=True`` scans every j — O(d²·s) — and is the oracle the
+    tests compare against.  Callers wanting a hard never-worse-than-balanced
+    guarantee compare the result against Algorithm 1's cuts (planner "opt"
+    does exactly that).
+    """
+    if s < 1:
+        raise ValueError(f"segments must be >= 1, got {s}")
+    if d < 1:
+        raise ValueError("empty depth range")
+    if s > d:
+        raise ValueError(f"cannot split {d} depth levels into {s} segments")
+    if s == 1:
+        return []
+
+    memo: dict = {}
+
+    def cost(lo: int, hi: int) -> float:
+        key = (lo, hi)
+        v = memo.get(key)
+        if v is None:
+            v = memo[key] = cost_fn(lo, hi)
+        return v
+
+    INF = float("inf")
+    prev = [cost(0, i) for i in range(d)]        # k = 1
+    back: List[List[int]] = [[-1] * d for _ in range(s + 1)]
+    for k in range(2, s + 1):
+        cur = [INF] * d
+        for i in range(k - 1, d):
+            jlo, jhi = k - 2, i - 1
+            if exact:
+                best, best_j = INF, jlo
+                for j in range(jlo, jhi + 1):
+                    c = max(prev[j], cost(j + 1, i))
+                    if c < best:
+                        best, best_j = c, j
+            else:
+                # smallest j where the (non-decreasing) prefix optimum
+                # overtakes the (non-increasing) last-segment cost
+                lo_j, hi_j = jlo, jhi
+                while lo_j < hi_j:
+                    mid = (lo_j + hi_j) // 2
+                    if prev[mid] >= cost(mid + 1, i):
+                        hi_j = mid
+                    else:
+                        lo_j = mid + 1
+                best, best_j = INF, jlo
+                for j in (lo_j - 1, lo_j, lo_j + 1):   # hedge local wobbles
+                    if jlo <= j <= jhi:
+                        c = max(prev[j], cost(j + 1, i))
+                        if c < best:
+                            best, best_j = c, j
+            cur[i] = best
+            back[k][i] = best_j
+        prev = cur
+
+    cuts: List[int] = []
+    i = d - 1
+    for k in range(s, 1, -1):
+        j = back[k][i]
+        cuts.append(j)
+        i = j
+    cuts.reverse()
+    return cuts
 
 
 def dp_split(P: Sequence[int], s: int) -> List[int]:

@@ -25,40 +25,52 @@ import numpy as np
 from repro import configs
 from repro.configs.common import concrete_batch
 from repro.core import plan
-from repro.core.pipeline import PipelineExecutor, stage_balance_metrics
+from repro.core.pipeline import (PipelineExecutor, ShapeKeyedStageCache,
+                                 stage_balance_metrics)
 from repro.models import api, lm, lm_graph
 from repro.serving import PipelinedModelServer
 
 
-def make_stage_fns(cfg, params, counts):
+def make_stage_fns(cfg, params, counts, stage_cache=None):
     """Per-stage callables applying a contiguous block range (+ embed on
-    stage 0, unembed on the last stage)."""
+    stage 0, unembed on the last stage).
+
+    Stage bodies are built lazily through a :class:`ShapeKeyedStageCache`:
+    the jitted closure for a stage is constructed once per input
+    shape/dtype and reused for every subsequent batch (pass a shared
+    ``stage_cache`` to also reuse across executor/server restarts)."""
     offsets = np.concatenate([[0], np.cumsum(counts)]).astype(int)
-    pos_cache = {}
+    cache = stage_cache if stage_cache is not None else ShapeKeyedStageCache()
 
     def block_range_fn(lo, hi, first, last):
-        blocks = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
+        def build():
+            blocks = jax.tree.map(lambda a: a[lo:hi], params["blocks"])
 
-        @jax.jit
-        def run(x_or_tokens):
-            if first:
-                x = lm.embed_tokens(cfg, params, x_or_tokens)
-            else:
-                x = x_or_tokens
-            s = x.shape[1]
-            positions = jnp.arange(s)[None, :]
-            fn = lm._block_fn(cfg)
+            @jax.jit
+            def run(x_or_tokens):
+                if first:
+                    x = lm.embed_tokens(cfg, params, x_or_tokens)
+                else:
+                    x = x_or_tokens
+                s = x.shape[1]
+                positions = jnp.arange(s)[None, :]
+                fn = lm._block_fn(cfg)
 
-            def body(x, bp):
-                return fn(x, bp, positions), None
+                def body(x, bp):
+                    return fn(x, bp, positions), None
 
-            if hi > lo:
-                x, _ = jax.lax.scan(body, x, blocks)
-            if last:
-                return lm.unembed(cfg, params, x[:, -1:])
-            return x
+                if hi > lo:
+                    x, _ = jax.lax.scan(body, x, blocks)
+                if last:
+                    return lm.unembed(cfg, params, x[:, -1:])
+                return x
 
-        return run
+            return run
+
+        # first/last must be part of the key: two empty block ranges (e.g.
+        # a final_norm-only stage vs the head stage) share lo == hi
+        return cache.wrap(f"blocks[{lo}:{hi}]:f{int(first)}l{int(last)}",
+                          build)
 
     fns = []
     for i, c in enumerate(counts):
@@ -92,30 +104,32 @@ def main() -> None:
     print("blocks per stage:", counts)
 
     fns = make_stage_fns(cfg, params, counts)
-    server = PipelinedModelServer(pl, fns, max_batch=args.requests)
 
     reqs = [concrete_batch(cfg, args.seq, 1,
                            key=jax.random.PRNGKey(i),
                            kind="prefill")["tokens"]
             for i in range(args.requests)]
-    # warmup (jit) then timed batch
-    server.serve_batch(reqs[:1])
-    t0 = time.perf_counter()
-    outs = server.serve_batch(reqs)
-    dt = time.perf_counter() - t0
-    busy = server.stats["stage_busy_s"]
-    metrics = stage_balance_metrics(busy)
-    print(f"{len(outs)} requests in {dt*1e3:.1f} ms "
-          f"({len(outs)/dt:.1f} req/s)")
-    print(f"stage busy (s): {[round(b,4) for b in busy]}")
-    print(f"balance (mean/max): {metrics['balance']:.3f}")
+    # persistent executor: stage workers live for the whole serving session;
+    # steady-state batches create zero threads
+    with PipelinedModelServer(pl, fns, max_batch=args.requests) as server:
+        # warmup (jit) then timed batch
+        server.serve_batch(reqs[:1])
+        t0 = time.perf_counter()
+        outs = server.serve_batch(reqs)
+        dt = time.perf_counter() - t0
+        busy = server.stats["stage_busy_s"]
+        metrics = stage_balance_metrics(busy)
+        print(f"{len(outs)} requests in {dt*1e3:.1f} ms "
+              f"({len(outs)/dt:.1f} req/s)")
+        print(f"stage busy (s): {[round(b,4) for b in busy]}")
+        print(f"balance (mean/max): {metrics['balance']:.3f}")
 
-    # reference check
-    ref = api.forward(cfg, params, {"tokens": reqs[0]},
-                      last_token_only=True)
-    err = float(jnp.max(jnp.abs(outs[0] - ref)))
-    print(f"pipeline vs direct max err: {err:.2e}")
-    assert err < 2e-2
+        # reference check
+        ref = api.forward(cfg, params, {"tokens": reqs[0]},
+                          last_token_only=True)
+        err = float(jnp.max(jnp.abs(outs[0] - ref)))
+        print(f"pipeline vs direct max err: {err:.2e}")
+        assert err < 2e-2
 
 
 if __name__ == "__main__":

@@ -71,19 +71,32 @@ class MicroBatcher:
 
 
 class PipelinedModelServer:
-    """Serve batched requests through the stage pipeline of a plan."""
+    """Serve batched requests through the stage pipeline of a plan.
+
+    Owns a *persistent* :class:`PipelineExecutor`: stage worker threads and
+    queues are created once and reused for every batch, so the steady-state
+    serving loop creates zero threads per batch.  Use as a context manager
+    (or call :meth:`stop`) for a clean shutdown."""
 
     def __init__(self, plan: SegmentationPlan,
                  stage_fns: Sequence[Callable[[Any], Any]],
                  max_batch: int = 15, max_wait_s: float = 0.02):
         assert len(stage_fns) == plan.n_stages
         self.plan = plan
-        self.executor = PipelineExecutor(stage_fns)
+        self.executor = PipelineExecutor(stage_fns,
+                                         name=f"serve-{plan.graph_name}")
         self.batcher = MicroBatcher(max_batch, max_wait_s)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
                                       "stage_busy_s": [0.0] * plan.n_stages}
+
+    def __enter__(self) -> "PipelinedModelServer":
+        self.executor.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
 
     # -- synchronous API ------------------------------------------------------
     def serve_batch(self, payloads: Sequence[Any]) -> List[Any]:
@@ -115,6 +128,11 @@ class PipelinedModelServer:
         return self.batcher.submit(payload)
 
     def stop(self) -> None:
+        """Stop the background loop and shut down the stage workers."""
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=5)
+            self._thread = None
+        self.executor.stop()
+
+    close = stop

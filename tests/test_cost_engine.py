@@ -1,0 +1,160 @@
+"""SegmentCostEngine fast path + "opt" minimax DP planner tests.
+
+The engine must be *bit-identical* to the naive EdgeTPUModel walks (it is the
+same arithmetic over precomputed prefix sums), and the "opt" strategy must
+never exceed the balanced plan's max modeled stage time — verified against
+the exact O(d²·s) DP oracle."""
+import random
+
+import pytest
+
+from repro.core import EdgeTPUModel, LayerGraph, chain_graph, plan
+from repro.core.cost_engine import SegmentCostEngine
+from repro.core.segmentation import minimax_time_split, segment_ranges
+from repro.models.cnn import REAL_CNNS, synthetic_cnn
+
+ZOO_SAMPLE = ("ResNet50", "InceptionV3", "DenseNet121")
+
+
+@pytest.fixture(scope="module", params=ZOO_SAMPLE + ("synthetic700",))
+def model_pair(request):
+    if request.param == "synthetic700":
+        g = synthetic_cnn(700).to_layer_graph()
+    else:
+        g = REAL_CNNS[request.param]().to_layer_graph()
+    return EdgeTPUModel(g), EdgeTPUModel(g, use_engine=False)
+
+
+# ---------------------------------------------------------------------------
+# engine == naive, bit for bit
+# ---------------------------------------------------------------------------
+def test_engine_matches_naive_over_random_segments(model_pair):
+    fast, naive = model_pair
+    d = fast.graph.depth
+    rng = random.Random(1234)
+    for _ in range(100):
+        lo = rng.randrange(d)
+        hi = rng.randrange(lo, d)
+        assert fast.segment_time(lo, hi) == naive.segment_time(lo, hi)
+        mf = fast.segment_memory(lo, hi)
+        mn = naive.segment_memory(lo, hi)
+        assert mf.device_bytes == mn.device_bytes
+        assert mf.host_bytes == mn.host_bytes
+        assert mf.layer_placement == mn.layer_placement
+
+
+def test_engine_range_sums_and_max_activation(model_pair):
+    fast, _ = model_pair
+    g = fast.graph
+    eng = fast.engine
+    P = g.params_per_depth()
+    levels = g.levels()
+    d = g.depth
+    rng = random.Random(7)
+    for _ in range(50):
+        lo = rng.randrange(d)
+        hi = rng.randrange(lo, d)
+        assert eng.segment_params(lo, hi) == sum(P[lo:hi + 1])
+        want_act = max((g.nodes[n].out_bytes
+                        for lvl in levels[lo:hi + 1] for n in lvl), default=0)
+        assert eng.segment_max_activation(lo, hi) == want_act
+
+
+def test_engine_bytes_only_report_matches_full_report(model_pair):
+    fast, _ = model_pair
+    d = fast.graph.depth
+    for lo, hi in ((0, d - 1), (0, d // 2), (d // 3, 2 * d // 3)):
+        rep = fast.segment_memory(lo, hi)
+        assert fast.segment_report_bytes(lo, hi) == (rep.device_bytes,
+                                                     rep.host_bytes)
+
+
+# ---------------------------------------------------------------------------
+# graph-level caching (satellite: per-depth arrays cached + invalidated)
+# ---------------------------------------------------------------------------
+def test_graph_cache_returns_same_object_and_invalidates():
+    g = chain_graph("c", [("a", 10, 1, 4), ("b", 20, 1, 4)])
+    first = g.out_bytes_per_depth()
+    assert g.out_bytes_per_depth() is first          # cached
+    assert g.params_per_depth() is g.params_per_depth()
+    g.add_layer("c", params=30, macs=1, out_bytes=4, inputs=["b"])
+    assert g.params_per_depth() == [10, 20, 30]      # invalidated on add
+    assert len(g.out_bytes_per_depth()) == 3
+
+
+def test_graph_cache_disabled_recomputes():
+    g = LayerGraph("nc", cache=False)
+    g.add_layer("a", params=1)
+    g.add_layer("b", params=2, inputs=["a"])
+    assert g.params_per_depth() is not g.params_per_depth()
+    assert g.params_per_depth() == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# "opt": exact time-balanced minimax DP
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ZOO_SAMPLE)
+@pytest.mark.parametrize("s", [4, 6])
+def test_opt_never_worse_than_balanced(name, s):
+    g = REAL_CNNS[name]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    po = plan(g, s, "opt", tpu_model=m)
+    pb = plan(g, s, "balanced", tpu_model=m)
+    assert max(m.stage_times(po.cuts)) <= max(m.stage_times(pb.cuts)) + 1e-15
+
+
+@pytest.mark.parametrize("name", ZOO_SAMPLE)
+def test_opt_within_oracle_bound(name):
+    """dp_split-style oracle: the exact O(d²·s) DP lower-bounds the fast
+    path; the fast path must sit between the oracle and balanced."""
+    g = REAL_CNNS[name]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    s = 4
+    fast_cuts = minimax_time_split(g.depth, s, m.segment_time)
+    exact_cuts = minimax_time_split(g.depth, s, m.segment_time, exact=True)
+    t_fast = max(m.stage_times(fast_cuts))
+    t_exact = max(m.stage_times(exact_cuts))
+    t_bal = max(m.stage_times(plan(g, s, "balanced", tpu_model=m).cuts))
+    assert t_exact <= t_fast + 1e-15
+    assert min(t_fast, t_bal) <= t_bal          # opt strategy takes the min
+    # the crossing-point search stays within a few percent of the optimum
+    assert t_fast <= 1.05 * t_exact
+
+
+def test_opt_plan_structure_invariants():
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    pl = plan(g, 5, "opt")
+    assert pl.n_stages == 5
+    assert len(pl.cuts) == 4 and pl.cuts == sorted(set(pl.cuts))
+    seen = [l for layers in pl.stage_layers for l in layers]
+    assert sorted(seen) == sorted(g.nodes.keys())
+    assert sum(pl.stage_params) == g.total_params
+
+
+def test_minimax_time_split_degenerate_and_validation():
+    cost = lambda lo, hi: float(hi - lo + 1)
+    assert minimax_time_split(5, 1, cost) == []
+    cuts = minimax_time_split(6, 6, cost)
+    assert cuts == [0, 1, 2, 3, 4]              # all singleton segments
+    with pytest.raises(ValueError):
+        minimax_time_split(3, 4, cost)
+    with pytest.raises(ValueError):
+        minimax_time_split(3, 0, cost)
+
+
+def test_minimax_time_split_exact_on_additive_chain():
+    """On a purely additive cost the DP must reproduce the known minimax
+    partition of the underlying array."""
+    P = [5, 1, 9, 2, 2, 7, 3]
+    prefix = [0]
+    for p in P:
+        prefix.append(prefix[-1] + p)
+    cost = lambda lo, hi: float(prefix[hi + 1] - prefix[lo])
+    for s in (2, 3, 4):
+        cuts = minimax_time_split(len(P), s, cost)
+        ranges = segment_ranges(len(P), cuts)
+        got = max(sum(P[lo:hi + 1]) for lo, hi in ranges)
+        exact = minimax_time_split(len(P), s, cost, exact=True)
+        want = max(sum(P[lo:hi + 1])
+                   for lo, hi in segment_ranges(len(P), exact))
+        assert got == want

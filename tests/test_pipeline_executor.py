@@ -1,0 +1,132 @@
+"""Persistent PipelineExecutor lifecycle tests: zero thread growth in steady
+state, error propagation without killing the workers, clean shutdown under
+``with``, restart, and large-batch (bigger than queue capacity) safety."""
+import threading
+import time
+
+import pytest
+
+from repro.core.pipeline import (PipelineExecutor, ShapeKeyedStageCache,
+                                 simulated_stage)
+from repro.serving import PipelinedModelServer
+from repro.core import plan
+from repro.models.cnn import synthetic_cnn
+
+
+def test_steady_state_creates_no_threads():
+    ex = PipelineExecutor([lambda x: x + 1, lambda x: x * 2, lambda x: x - 1])
+    ex.run_batch([0])                       # warm: spawns the 3 stage workers
+    n0 = threading.active_count()
+    for _ in range(20):
+        outs, _ = ex.run_batch(list(range(15)))
+        assert outs == [(i + 1) * 2 - 1 for i in range(15)]
+        assert threading.active_count() == n0
+    ex.stop()
+    assert threading.active_count() == n0 - ex.n_stages
+
+
+def test_context_manager_clean_shutdown():
+    baseline = threading.active_count()
+    with PipelineExecutor([simulated_stage(0.001), simulated_stage(0.001)]) as ex:
+        assert ex.started
+        assert threading.active_count() == baseline + 2
+        outs, _ = ex.run_batch([1, 2, 3])
+        assert outs == [1, 2, 3]
+    assert not ex.started
+    assert threading.active_count() == baseline
+
+
+def test_error_propagates_and_executor_stays_usable():
+    def boom(x):
+        if x == "bad":
+            raise ValueError("stage died")
+        return x
+
+    ex = PipelineExecutor([lambda x: x, boom, lambda x: x])
+    with pytest.raises(ValueError, match="stage died"):
+        ex.run_batch([1, "bad", 3])
+    n0 = threading.active_count()
+    # workers survived the failure; good items still flow, in order
+    outs, _ = ex.run_batch([4, 5, 6])
+    assert outs == [4, 5, 6]
+    assert threading.active_count() == n0
+    ex.stop()
+
+
+def test_partial_failure_keeps_good_items_ordered():
+    def boom(x):
+        if x % 3 == 0:
+            raise RuntimeError(f"item {x}")
+        return x * 10
+
+    ex = PipelineExecutor([boom])
+    with pytest.raises(RuntimeError):
+        ex.run_batch(list(range(7)))
+    outs, _ = ex.run_batch([1, 2, 4])
+    assert outs == [10, 20, 40]
+    ex.stop()
+
+
+def test_batch_larger_than_queue_capacity():
+    ex = PipelineExecutor([lambda x: x + 1, lambda x: x * 2], queue_size=4)
+    outs, _ = ex.run_batch(list(range(100)))
+    assert outs == [(i + 1) * 2 for i in range(100)]
+    ex.stop()
+
+
+def test_restart_after_stop():
+    ex = PipelineExecutor([lambda x: x * 3])
+    assert ex.run_batch([1, 2])[0] == [3, 6]
+    ex.stop()
+    assert ex.run_batch([3])[0] == [9]      # auto-restarts
+    ex.stop()
+
+
+def test_busy_times_are_per_batch():
+    ex = PipelineExecutor([simulated_stage(0.01), simulated_stage(0.002)])
+    _, busy1 = ex.run_batch([0] * 5, collect_stage_times=True)
+    _, busy2 = ex.run_batch([0] * 5, collect_stage_times=True)
+    # counters reset between batches (not cumulative)
+    assert busy1[0] == pytest.approx(0.05, rel=0.5)
+    assert busy2[0] == pytest.approx(0.05, rel=0.5)
+    assert busy1[0] > busy1[1]
+    ex.stop()
+
+
+def test_server_owns_persistent_executor_and_closes_it():
+    g = synthetic_cnn(600).to_layer_graph()
+    pl = plan(g, 2, "balanced_norefine")
+    baseline = threading.active_count()
+    with PipelinedModelServer(pl, [lambda x: x + 1, lambda x: x * 2]) as srv:
+        srv.serve_batch([1])
+        n0 = threading.active_count()
+        for _ in range(5):
+            assert srv.serve_batch([1, 2, 3]) == [4, 6, 8]
+            assert threading.active_count() == n0
+    assert threading.active_count() == baseline
+
+
+def test_shape_keyed_stage_cache_builds_once_per_signature():
+    cache = ShapeKeyedStageCache()
+    builds = []
+
+    def build():
+        builds.append(1)
+        return lambda x: x * 2
+
+    stage = cache.wrap("s0", build)
+    assert stage(3) == 6 and stage(4) == 8
+    assert len(builds) == 1                 # same signature -> one build
+
+    class Arr:                              # array-like with shape/dtype
+        def __init__(self, shape):
+            self.shape, self.dtype = shape, "f32"
+
+        def __mul__(self, k):
+            return ("arr", self.shape, k)
+
+    assert stage(Arr((1, 8)))[1] == (1, 8)
+    assert stage(Arr((1, 16)))[1] == (1, 16)
+    assert stage(Arr((1, 8)))[1] == (1, 8)
+    assert len(builds) == 3                 # one more per new shape only
+    assert len(cache) == 3
