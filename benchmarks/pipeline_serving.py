@@ -5,7 +5,9 @@ host-threaded pipeline for an LM smoke model, comp vs balanced plans
 Also hosts the executor steady-state microbenchmark: the persistent
 PipelineExecutor (long-lived workers, reusable queues, zero threads per
 batch) vs a seed-style executor that spawns one thread per stage per batch —
-the paper's Fig. 5 shape, many small camera batches."""
+the paper's Fig. 5 shape, many small camera batches.  Stage fns come from a
+PlacementPlan; replicated-stage throughput is measured in
+benchmarks/placement_bench.py."""
 from __future__ import annotations
 
 import math

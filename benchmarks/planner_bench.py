@@ -14,6 +14,9 @@ It also runs the exact O(d^2 s) DP oracle to confirm ``opt`` achieves a max
 modeled stage time <= ``balanced``'s on every model, and folds in the
 persistent-executor throughput microbenchmark.  Summary lands in
 ``BENCH_planner.json`` at the repo root (plus the usual artifacts JSON).
+All plans are :class:`~repro.core.planner.PlacementPlan` objects; the
+replicated-placement comparison (joint cuts+replicas DP vs. the best
+non-replicated plan) lives in ``benchmarks/placement_bench.py``.
 
     PYTHONPATH=src python -m benchmarks.planner_bench
     PYTHONPATH=src python -m benchmarks.planner_bench --models ResNet152 --repeats 5

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.configs.common import concrete_batch
-from repro.core import plan
+from repro.core import PlacementPlan, plan
 from repro.core.pipeline import stage_balance_metrics
 from repro.launch.pipeline_spmd import stage_block_counts
 from repro.launch.serve import make_stage_fns
@@ -48,6 +48,30 @@ def main() -> None:
     err = float(jnp.max(jnp.abs(outs[0] - ref)))
     assert err < 2e-2, err
     print(f"pipeline output matches direct forward (err {err:.2e})")
+
+    # --- replicated bottleneck stage ----------------------------------------
+    # Hand-build a placement replicating the slowest stage across 2 devices:
+    # the executor round-robins its traffic over 2 workers and restores
+    # submission order, so outputs match the unreplicated run bit-for-bit.
+    slowest = max(range(stages), key=lambda i: pl.stages[i].time_s)
+    reps = [1] * stages
+    reps[slowest] = 2
+    pl_rep = PlacementPlan.from_cuts(g, pl.cuts, strategy="replicated",
+                                     replicas=reps)
+    print(f"\nreplicated plan: {pl_rep.describe()}")
+    with PipelinedModelServer(pl_rep, fns, max_batch=n_req) as srv:
+        srv.serve_batch(reqs[:1])
+        outs_rep = srv.serve_batch(reqs)
+    same = all(bool(jnp.array_equal(a, b))
+               for a, b in zip(outs, outs_rep))
+    print(f"replicated outputs match unreplicated bit-for-bit: {same}")
+    assert same
+
+    # plans serialize: ship them instead of re-planning at startup
+    pl_back = PlacementPlan.from_json(pl_rep.to_json())
+    assert pl_back.cuts == pl_rep.cuts
+    assert pl_back.replica_counts == pl_rep.replica_counts
+    print("plan JSON round-trip OK")
 
     # --- elastic: a device leaves, replan in milliseconds -------------------
     ep = ElasticPlanner(g, "balanced_norefine")

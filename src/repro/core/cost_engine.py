@@ -76,6 +76,21 @@ class SegmentCostEngine:
 
         self._split_cache: Dict[Tuple[int, int], Tuple[int, int]] = {}
 
+    def with_spec(self, spec) -> "SegmentCostEngine":
+        """An engine for the same graph under a different device spec.
+
+        Every precompute except the split cache is spec-independent
+        (prefix sums, sparse table, flat layer order), so the clone shares
+        them by reference — per-stage device limits (heterogeneous
+        topologies) cost O(1) per device class instead of another O(L)
+        build.  Only the capacity/time queries see the new spec.
+        """
+        clone = object.__new__(SegmentCostEngine)
+        clone.__dict__.update(self.__dict__)
+        clone.spec = spec
+        clone._split_cache = {}          # capacity differs under the new spec
+        return clone
+
     # -- sparse-table range max ---------------------------------------------
     def _build_sparse(self, vals: Sequence[int]) -> None:
         n = len(vals)
@@ -186,6 +201,13 @@ class SegmentCostEngine:
         return device, host, placement
 
     # -- time ----------------------------------------------------------------
+    def segment_weight_load_time(self, depth_lo: int, depth_hi: int) -> float:
+        """Systolic-array weight-fill time of the segment — the stage-time
+        term that does NOT amortize when a stage is replicated (every
+        replica re-fills its array per inference it serves)."""
+        weight_bytes = self.segment_weight_bytes(depth_lo, depth_hi)
+        return weight_bytes / (self.spec.weight_load_gbps * 1e9)
+
     def segment_time(self, depth_lo: int, depth_hi: int) -> float:
         """Per-inference latency of one segment on one TPU — O(1).
 

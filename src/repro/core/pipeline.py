@@ -1,11 +1,12 @@
-"""Host-threaded pipeline executor — faithful to the paper's implementation.
+"""Host-threaded pipeline executor — faithful to the paper's implementation,
+extended with replicated stages.
 
 Paper §5.1 / Fig. 5: "we deploy a host thread per Edge TPU that is in charge
 of handling it, and a queue (implementing thread-safe mechanisms) on the host
 to communicate intermediate results among devices."
 
-Here each *stage* owns a worker thread and an input queue; stage ``i`` pops an
-item, applies its stage function, and pushes the result to stage ``i+1``'s
+Here each *stage* owns worker thread(s) and an input queue; stage ``i`` pops
+an item, applies its stage function, and pushes the result to stage ``i+1``'s
 queue.  Stage functions are arbitrary callables: the CNN benchmarks bind them
 to real JAX forwards of the stage's layers; tests bind simulated latencies to
 validate the analytical pipeline model.
@@ -13,15 +14,25 @@ validate the analytical pipeline model.
 The executor is *persistent*: worker threads and their bounded queues are
 created once (on first :meth:`PipelineExecutor.run_batch` or an explicit
 :meth:`PipelineExecutor.start`) and reused across batches, so steady-state
-serving creates **zero** threads per batch — the seed spawned and joined one
-thread per stage per batch, which dominated small-batch throughput.  A batch
-is delimited by an end-marker flowing through the queues; stage failures are
-wrapped and forwarded so the pipeline stays drained and reusable after an
-error.  Lifecycle: ``start()`` / ``stop()`` or a ``with`` block.
+serving creates **zero** threads per batch.  A batch is delimited by an
+end-marker flowing through the queues; stage failures are wrapped and
+forwarded so the pipeline stays drained and reusable after an error.
+Lifecycle: ``start()`` / ``stop()`` or a ``with`` block.
+
+**Replicated stages** (``replicas=[...]``, from a
+:class:`~repro.core.planner.PlacementPlan`): a stage with ``k > 1``
+replicas — a bottleneck a single dominant layer pins, which no cut
+placement can fix — runs ``k`` workers sharing the stage function.  A
+dispatcher thread round-robins envelopes from the stage's input queue onto
+``k`` per-worker queues; workers push results into a shared queue; a merge
+thread restores submission order (items carry sequence numbers internally)
+before forwarding downstream, so the pipeline's in-order contract is
+bit-for-bit identical to the unreplicated pipeline — only the pacing
+changes.  Batch-end and shutdown markers collapse k-for-1 at the merge.
 
 This executor is the *paper-faithful* path (host-mediated transfers).  The
 pod-scale SPMD path (shard_map + ppermute over ICI) lives in
-launch/pipeline_spmd.py and consumes the same SegmentationPlan.
+launch/pipeline_spmd.py and consumes the same PlacementPlan.
 """
 from __future__ import annotations
 
@@ -46,26 +57,57 @@ class _Failed:
         self.error = error
 
 
+class _EndOfBatch:
+    """Batch-end marker on a replicated stage's merge queue: carries how
+    many data envelopes the dispatcher fanned out this batch, so the merge
+    emits it only after restoring all of them."""
+
+    __slots__ = ("count",)
+
+    def __init__(self, count: int):
+        self.count = count
+
+
 class PipelineExecutor:
-    """Run inputs through a chain of stage functions with one persistent
-    thread per stage and reusable bounded queues between stages."""
+    """Run inputs through a chain of stage functions with persistent
+    worker threads and reusable bounded queues between stages.
+
+    ``replicas[i] > 1`` replicates stage ``i`` across that many workers
+    (shared input queue via a round-robin dispatcher, order-restoring
+    fan-in).  Items travel internally as ``(seq, payload)`` envelopes;
+    user code never sees them.
+    """
 
     def __init__(self, stage_fns: Sequence[Callable[[Any], Any]],
-                 queue_size: int = 64, name: str = "pipeline"):
+                 queue_size: int = 64, name: str = "pipeline",
+                 replicas: Optional[Sequence[int]] = None):
         if not stage_fns:
             raise ValueError("need at least one stage")
         self.stage_fns = list(stage_fns)
         self.queue_size = queue_size
         self.name = name
+        if replicas is None:
+            replicas = [1] * len(self.stage_fns)
+        self.replicas = [int(r) for r in replicas]
+        if len(self.replicas) != len(self.stage_fns):
+            raise ValueError(f"need {len(self.stage_fns)} replica counts, "
+                             f"got {len(self.replicas)}")
+        if any(r < 1 for r in self.replicas):
+            raise ValueError(f"replica counts must be >= 1: {self.replicas}")
         self._lock = threading.RLock()
         self._queues: List[queue.Queue] = []
         self._threads: List[threading.Thread] = []
-        self._busy = [0.0] * len(self.stage_fns)
+        # one busy slot per (stage, replica): each written by one thread only
+        self._busy = [[0.0] * r for r in self.replicas]
         self._started = False
 
     @property
     def n_stages(self) -> int:
         return len(self.stage_fns)
+
+    @property
+    def n_workers(self) -> int:
+        return sum(self.replicas)
 
     @property
     def started(self) -> bool:
@@ -79,11 +121,29 @@ class PipelineExecutor:
                 return self
             n = self.n_stages
             self._queues = [queue.Queue(self.queue_size) for _ in range(n + 1)]
-            self._threads = [
-                threading.Thread(target=self._worker, args=(i,), daemon=True,
-                                 name=f"{self.name}-stage{i}")
-                for i in range(n)
-            ]
+            self._threads = []
+            for i in range(n):
+                k = self.replicas[i]
+                if k == 1:
+                    self._threads.append(threading.Thread(
+                        target=self._worker,
+                        args=(i, self._queues[i], self._queues[i + 1], 0),
+                        daemon=True, name=f"{self.name}-stage{i}"))
+                    continue
+                # replicated stage: dispatcher -> k workers -> merge
+                wqs = [queue.Queue(max(2, self.queue_size // k))
+                       for _ in range(k)]
+                mq: queue.Queue = queue.Queue(self.queue_size)
+                self._threads.append(threading.Thread(
+                    target=self._dispatcher, args=(self._queues[i], wqs),
+                    daemon=True, name=f"{self.name}-stage{i}-dispatch"))
+                for j in range(k):
+                    self._threads.append(threading.Thread(
+                        target=self._replica_worker, args=(i, wqs[j], mq, j),
+                        daemon=True, name=f"{self.name}-stage{i}-r{j}"))
+                self._threads.append(threading.Thread(
+                    target=self._merge, args=(mq, self._queues[i + 1], k),
+                    daemon=True, name=f"{self.name}-stage{i}-merge"))
             for t in self._threads:
                 t.start()
             self._started = True
@@ -121,26 +181,95 @@ class PipelineExecutor:
         self.stop()
 
     # -- workers -------------------------------------------------------------
-    def _worker(self, i: int) -> None:
+    def _apply(self, i: int, slot: int, envelope: Tuple[int, Any]):
+        """Run stage ``i`` on one envelope; failures become _Failed."""
         fn = self.stage_fns[i]
-        q_in = self._queues[i]
-        q_out = self._queues[i + 1]
+        seq, payload = envelope
+        if isinstance(payload, _Failed):
+            return envelope
+        try:
+            t0 = time.perf_counter()
+            out = fn(payload)
+            self._busy[i][slot] += time.perf_counter() - t0
+        except BaseException as e:   # surface worker failures per item
+            return (seq, _Failed(e))
+        return (seq, out)
+
+    def _worker(self, i: int, q_in: queue.Queue, q_out: queue.Queue,
+                slot: int) -> None:
         while True:
             item = q_in.get()
             if item is _SHUTDOWN:
                 q_out.put(_SHUTDOWN)
                 return
-            if item is _BATCH_END or isinstance(item, _Failed):
+            if item is _BATCH_END:
                 q_out.put(item)
                 continue
-            try:
-                t0 = time.perf_counter()
-                out = fn(item)
-                self._busy[i] += time.perf_counter() - t0
-            except BaseException as e:   # surface worker failures per item
-                q_out.put(_Failed(e))
+            q_out.put(self._apply(i, slot, item))
+
+    def _dispatcher(self, q_in: queue.Queue,
+                    wqs: List[queue.Queue]) -> None:
+        """Round-robin fan-out of one stage's input onto its replicas.
+
+        Batch ends travel as an _EndOfBatch carrying the per-batch envelope
+        count, routed through a worker queue like any item; the merge holds
+        it until every sequence number below the count has been emitted, so
+        it cannot overtake in-flight work on other replicas."""
+        rr = 0
+        count = 0
+        while True:
+            item = q_in.get()
+            if item is _SHUTDOWN:
+                for q in wqs:
+                    q.put(_SHUTDOWN)
+                return
+            if item is _BATCH_END:
+                wqs[rr].put(_EndOfBatch(count))
+                count = 0
                 continue
-            q_out.put(out)
+            wqs[rr].put(item)
+            rr = (rr + 1) % len(wqs)
+            count += 1
+
+    def _replica_worker(self, i: int, wq: queue.Queue, mq: queue.Queue,
+                        slot: int) -> None:
+        while True:
+            item = wq.get()
+            if item is _SHUTDOWN:
+                mq.put(_SHUTDOWN)
+                return
+            if isinstance(item, _EndOfBatch):
+                mq.put(item)
+                continue
+            mq.put(self._apply(i, slot, item))
+
+    def _merge(self, mq: queue.Queue, q_out: queue.Queue, k: int) -> None:
+        """Order-restoring fan-in: buffer out-of-order envelopes, emit by
+        sequence number; collapse k shutdown markers into one."""
+        shutdowns = 0
+        buf: Dict[int, Any] = {}
+        next_seq = 0
+        end_at: Optional[int] = None
+        while True:
+            item = mq.get()
+            if item is _SHUTDOWN:
+                shutdowns += 1
+                if shutdowns == k:
+                    q_out.put(_SHUTDOWN)
+                    return
+                continue
+            if isinstance(item, _EndOfBatch):
+                end_at = item.count
+            else:
+                seq, payload = item
+                buf[seq] = payload
+            while next_seq in buf:
+                q_out.put((next_seq, buf.pop(next_seq)))
+                next_seq += 1
+            if end_at is not None and next_seq == end_at:
+                q_out.put(_BATCH_END)
+                end_at = None
+                next_seq = 0
 
     # -- batches -------------------------------------------------------------
     def run_batch(self, inputs: Sequence[Any],
@@ -148,9 +277,12 @@ class PipelineExecutor:
                   ) -> Tuple[List[Any], Optional[List[float]]]:
         """Push `inputs` through the pipeline; returns (outputs, stage_busy_s).
 
-        Outputs preserve input order (in-order queues).  ``stage_busy_s[i]``
-        is the total busy time of stage i *for this batch* — the paper's
-        Fig. 10 metric.  If any stage raised, the first exception is
+        Outputs preserve input order: unreplicated stages are in-order
+        queues, replicated stages restore order at their merge, so the
+        output stream is identical to the unreplicated pipeline's.
+        ``stage_busy_s[i]`` is the total busy time of stage i *for this
+        batch*, summed over its replicas — the paper's Fig. 10 metric.  If
+        any stage raised, the first exception (in submission order) is
         re-raised after the batch fully drains (so the executor stays
         reusable).  Creates no threads: feeding interleaves with collection
         (non-blocking puts), so batches larger than the queue capacity
@@ -160,8 +292,9 @@ class PipelineExecutor:
             if not self._started:
                 self.start()
             n = self.n_stages
-            for j in range(n):
-                self._busy[j] = 0.0
+            for slots in self._busy:
+                for j in range(len(slots)):
+                    slots[j] = 0.0
             q_in, q_out = self._queues[0], self._queues[n]
             items = list(inputs)
             fed = 0
@@ -172,7 +305,7 @@ class PipelineExecutor:
                 # feed as much as fits without blocking
                 while fed < len(items):
                     try:
-                        q_in.put_nowait(items[fed])
+                        q_in.put_nowait((fed, items[fed]))
                     except queue.Full:
                         break
                     fed += 1
@@ -189,13 +322,15 @@ class PipelineExecutor:
                     continue
                 if item is _BATCH_END:
                     break
-                if isinstance(item, _Failed):
-                    errors.append(item.error)
+                _seq, payload = item
+                if isinstance(payload, _Failed):
+                    errors.append(payload.error)
                 else:
-                    outputs.append(item)
+                    outputs.append(payload)
             if errors:
                 raise errors[0]
-            busy = list(self._busy) if collect_stage_times else None
+            busy = ([sum(slots) for slots in self._busy]
+                    if collect_stage_times else None)
             return outputs, busy
 
     def timed_run(self, inputs: Sequence[Any]) -> Tuple[List[Any], float, List[float]]:

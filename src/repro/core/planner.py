@@ -1,37 +1,147 @@
-"""Strategy dispatch: LayerGraph + strategy name -> SegmentationPlan.
+"""Strategy dispatch: LayerGraph + strategy name -> PlacementPlan.
 
 The plan is the single hand-off object between the paper's algorithms and the
 executors: the host-threaded pipeline (core/pipeline.py), the SPMD pipeline
 (launch/pipeline_spmd.py), and the benchmarks all consume a plan.
+
+PR-1's ``SegmentationPlan`` was a bare cut list — implicitly one identical
+device per stage.  The hand-off is now a :class:`PlacementPlan`: an ordered
+list of :class:`StagePlacement` records, each carrying its depth range, its
+assigned :class:`~repro.core.topology.DeviceSpec`, and a **replica count**
+(a bottleneck stage may be replicated across k identical devices with
+round-robin fan-out/fan-in in the executor).  ``PlacementPlan.from_cuts``
+is the thin compatibility constructor: homogeneous no-replica plans carry
+the exact cuts and modeled stage times the cut-list plans did.
+``SegmentationPlan`` remains as a deprecated alias.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
 
-from .edge_tpu_model import EdgeTPUModel
+from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
 from .graph import LayerGraph
 from .refine import GraphReporter, MemoryReporter, RefinementResult, refine_cuts
 from .segmentation import (balanced_split, comp_split, imbalance,
-                           minimax_time_split, prof_split, segment_ranges,
-                           segment_sums)
+                           minimax_time_split, placement_split, prof_split,
+                           segment_ranges, segment_sums)
+from .topology import DeviceSpec, Topology, TopologyCostModel
 
 STRATEGIES = ("comp", "prof", "balanced", "balanced_norefine",
               "balanced_cost", "opt")
 
 
 @dataclasses.dataclass
-class SegmentationPlan:
-    """Stage assignment for a model pipeline."""
+class StagePlacement:
+    """One pipeline stage: a depth range placed on a device, possibly
+    replicated.
+
+    ``time_s`` is the modeled per-inference latency of the segment on ONE
+    copy of ``device`` (the analytical Edge TPU model); the *pacing* time
+    under replication is :attr:`effective_time_s` — the weight-load term
+    does not amortize across replicas (every replica re-fills its systolic
+    array per inference it serves), the rest divides by ``replicas``.
+    """
+
+    depth_lo: int
+    depth_hi: int
+    layers: List[str]
+    params: int
+    device: DeviceSpec = dataclasses.field(default_factory=DeviceSpec)
+    replicas: int = 1
+    time_s: Optional[float] = None
+    weight_load_s: Optional[float] = None
+
+    @property
+    def depth_range(self) -> Tuple[int, int]:
+        return (self.depth_lo, self.depth_hi)
+
+    @property
+    def effective_time_s(self) -> Optional[float]:
+        if self.time_s is None:
+            return None
+        if self.replicas <= 1:
+            return self.time_s
+        if self.weight_load_s is None:
+            return None    # cannot amortize without the non-amortizing term
+        t_w = self.weight_load_s
+        return t_w + (self.time_s - t_w) / self.replicas
+
+    def to_dict(self) -> Dict:
+        return {
+            "depth_lo": self.depth_lo, "depth_hi": self.depth_hi,
+            "layers": list(self.layers), "params": self.params,
+            "device": self.device.to_dict(), "replicas": self.replicas,
+            "time_s": self.time_s, "weight_load_s": self.weight_load_s,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "StagePlacement":
+        d = dict(d)
+        d["device"] = DeviceSpec.from_dict(d["device"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class PlacementPlan:
+    """Ordered stage placements for a model pipeline.
+
+    The compatibility surface of the old cut-list plan is preserved as
+    properties (``cuts``, ``stage_depth_ranges``, ``stage_layers``,
+    ``stage_params``, ``n_stages``), so code that only cares about where
+    the cuts fall keeps working; replication-aware consumers read
+    ``stages`` / ``replica_counts`` / ``n_devices``.
+    """
 
     graph_name: str
     strategy: str
-    n_stages: int
-    cuts: List[int]                       # s-1 cut depths
-    stage_depth_ranges: List[tuple]       # [(lo, hi)] inclusive
-    stage_layers: List[List[str]]         # layer names per stage
-    stage_params: List[int]
+    stages: List[StagePlacement]
     refinement: Optional[RefinementResult] = None
+
+    # -- compatibility surface (cut-list view) ------------------------------
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+    @property
+    def n_devices(self) -> int:
+        return sum(s.replicas for s in self.stages)
+
+    @property
+    def cuts(self) -> List[int]:
+        return [s.depth_hi for s in self.stages[:-1]]
+
+    @property
+    def stage_depth_ranges(self) -> List[tuple]:
+        return [(s.depth_lo, s.depth_hi) for s in self.stages]
+
+    @property
+    def stage_layers(self) -> List[List[str]]:
+        return [s.layers for s in self.stages]
+
+    @property
+    def stage_params(self) -> List[int]:
+        return [s.params for s in self.stages]
+
+    @property
+    def replica_counts(self) -> List[int]:
+        return [s.replicas for s in self.stages]
+
+    @property
+    def stage_times_s(self) -> List[Optional[float]]:
+        """Modeled per-inference stage times on one device each."""
+        return [s.time_s for s in self.stages]
+
+    @property
+    def effective_stage_times_s(self) -> List[Optional[float]]:
+        """Pacing times with replication amortization applied."""
+        return [s.effective_time_s for s in self.stages]
+
+    @property
+    def max_stage_time_s(self) -> Optional[float]:
+        eff = [t for t in self.effective_stage_times_s if t is not None]
+        return max(eff) if eff else None
 
     @property
     def imbalance(self) -> int:
@@ -39,12 +149,114 @@ class SegmentationPlan:
         return max(self.stage_params) - min(self.stage_params)
 
     def describe(self) -> str:
-        segs = ", ".join(
-            f"S{i}[d{lo}-{hi}]={p/1e6:.2f}M"
-            for i, ((lo, hi), p) in enumerate(
-                zip(self.stage_depth_ranges, self.stage_params)))
-        return (f"{self.graph_name} / {self.strategy} x{self.n_stages}: {segs} "
-                f"(Δs={self.imbalance/1e6:.2f}M)")
+        """One-line plan summary.
+
+        Homogeneous, no-replica plan (the paper's shape)::
+
+            resnet50 / opt x4: S0[d0-17]=6.31M, ... (Δs=1.05M)
+
+        Replicated / heterogeneous placements annotate stages with the
+        device and replica count::
+
+            resnet50 / opt_placement x3 (5 devs): S0[d0-17]=6.31M,
+            S1[d18-29]=8.1M@edgetpu-v1x3, S2[d30-52]=7.9M (Δs=1.79M)
+        """
+        segs = []
+        for i, st in enumerate(self.stages):
+            tag = ""
+            if not st.device.is_reference:
+                tag += f"@{st.device.name}"
+            if st.replicas > 1:
+                tag = (tag or f"@{st.device.name}") + f"x{st.replicas}"
+            segs.append(f"S{i}[d{st.depth_lo}-{st.depth_hi}]"
+                        f"={st.params/1e6:.2f}M{tag}")
+        head = f"{self.graph_name} / {self.strategy} x{self.n_stages}"
+        if self.n_devices != self.n_stages:
+            head += f" ({self.n_devices} devs)"
+        return f"{head}: {', '.join(segs)} (Δs={self.imbalance/1e6:.2f}M)"
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_cuts(
+        cls,
+        graph: LayerGraph,
+        cuts: Sequence[int],
+        strategy: str = "manual",
+        device: Optional[DeviceSpec] = None,
+        replicas: Optional[Sequence[int]] = None,
+        devices: Optional[Sequence[DeviceSpec]] = None,
+        tpu_model: Optional[EdgeTPUModel] = None,
+        refinement: Optional[RefinementResult] = None,
+    ) -> "PlacementPlan":
+        """Thin compatibility constructor: a cut list over ``graph``
+        becomes a placement on homogeneous reference devices (one per
+        stage, no replication) unless per-stage ``devices`` / ``replicas``
+        say otherwise.  Modeled stage times come from ``tpu_model`` (or a
+        default :class:`EdgeTPUModel`) — on the default device they are
+        bit-identical to the cut-list planner's, since the same engine
+        prices the same segments."""
+        d = graph.depth
+        ranges = segment_ranges(d, cuts)
+        s = len(ranges)
+        dev_list = (list(devices) if devices is not None
+                    else [device if device is not None else DeviceSpec()] * s)
+        rep_list = list(replicas) if replicas is not None else [1] * s
+        if len(dev_list) != s or len(rep_list) != s:
+            raise ValueError(f"need {s} per-stage devices/replicas, got "
+                             f"{len(dev_list)}/{len(rep_list)}")
+        model = tpu_model or EdgeTPUModel(graph)
+        # slice the cached levels (O(L) total) instead of re-scanning the
+        # whole graph per stage (O(s * L))
+        levels = graph.levels()
+        P = graph.params_per_depth()
+        params = segment_sums(P, cuts)
+        stages = []
+        for i, (lo, hi) in enumerate(ranges):
+            dev = dev_list[i]
+            eng = (model.engine if dev.is_reference
+                   else model.engine.with_spec(dev.specialize(model.spec)))
+            stages.append(StagePlacement(
+                depth_lo=lo, depth_hi=hi,
+                layers=[n for lvl in levels[lo:hi + 1] for n in lvl],
+                params=params[i], device=dev, replicas=rep_list[i],
+                time_s=eng.segment_time(lo, hi),
+                weight_load_s=eng.segment_weight_load_time(lo, hi)))
+        return cls(graph_name=graph.name, strategy=strategy, stages=stages,
+                   refinement=refinement)
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self, indent: Optional[int] = None) -> str:
+        """Persistable plan: benchmarks and serving ship plans instead of
+        re-planning at startup."""
+        doc = {
+            "format": "repro.placement_plan/v1",
+            "graph_name": self.graph_name,
+            "strategy": self.strategy,
+            "stages": [s.to_dict() for s in self.stages],
+            "refinement": (None if self.refinement is None else {
+                "cuts": list(self.refinement.cuts),
+                "compilations": self.refinement.compilations,
+                "moves": self.refinement.moves,
+                "converged": self.refinement.converged,
+            }),
+        }
+        return json.dumps(doc, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlacementPlan":
+        doc = json.loads(text)
+        fmt = doc.get("format")
+        if fmt != "repro.placement_plan/v1":
+            raise ValueError(f"not a placement plan document: {fmt!r}")
+        ref = doc.get("refinement")
+        return cls(
+            graph_name=doc["graph_name"], strategy=doc["strategy"],
+            stages=[StagePlacement.from_dict(s) for s in doc["stages"]],
+            refinement=None if ref is None else RefinementResult(**ref))
+
+
+# deprecated alias: PR-1 consumers imported the cut-list plan by this name
+SegmentationPlan = PlacementPlan
 
 
 def plan(
@@ -54,8 +266,11 @@ def plan(
     reporter: Optional[MemoryReporter] = None,
     tpu_model: Optional[EdgeTPUModel] = None,
     prof_batch: int = 15,
-) -> SegmentationPlan:
-    """Produce a SegmentationPlan with the requested paper strategy.
+) -> PlacementPlan:
+    """Produce a PlacementPlan with the requested paper strategy
+    (homogeneous devices, one per stage, no replication — the paper's
+    setting; use :func:`plan_placement` for heterogeneous topologies and
+    replicated bottleneck stages).
 
     * ``comp``               — SEGM_COMP (layer-count balanced; vendor model)
     * ``prof``               — SEGM_PROF (exhaustive; shallow models only)
@@ -89,6 +304,7 @@ def plan(
     P = graph.params_per_depth()
     d = len(P)
     refinement = None
+    model: Optional[EdgeTPUModel] = None
 
     if strategy == "comp":
         cuts = comp_split(P, n_stages)
@@ -124,24 +340,82 @@ def plan(
     else:  # balanced = Algorithm 1 + §6.1.3 refinement
         cuts = balanced_split(P, n_stages)
         if reporter is None:
-            reporter = GraphReporter(tpu_model or EdgeTPUModel(graph))
+            model = tpu_model or EdgeTPUModel(graph)
+            reporter = GraphReporter(model)
         refinement = refine_cuts(cuts, d, reporter)
         if refinement.converged:
             cuts = refinement.cuts
         # else: spill is unavoidable at this stage count — keep the
         # Algorithm-1 optimum rather than the refiner's wandering point
 
-    ranges = segment_ranges(d, cuts)
-    # slice the cached levels (O(L) total) instead of re-scanning the whole
-    # graph per stage (O(s * L))
-    levels = graph.levels()
-    layers = [[n for lvl in levels[lo:hi + 1] for n in lvl]
-              for lo, hi in ranges]
-    params = segment_sums(P, cuts)
-    return SegmentationPlan(
-        graph_name=graph.name, strategy=strategy, n_stages=n_stages,
-        cuts=list(cuts), stage_depth_ranges=ranges, stage_layers=layers,
-        stage_params=params, refinement=refinement)
+    return PlacementPlan.from_cuts(
+        graph, cuts, strategy=strategy,
+        tpu_model=model or tpu_model, refinement=refinement)
+
+
+def plan_placement(
+    graph: LayerGraph,
+    topology: Topology,
+    strategy: str = "opt",
+    replicate: bool = True,
+    max_replicas: Optional[int] = None,
+    base_spec: Optional[EdgeTPUSpec] = None,
+) -> PlacementPlan:
+    """Topology-aware planning: joint search over cuts, device assignment
+    (devices are consumed in topology order) and per-stage replica counts
+    under the topology's device budget.
+
+    * Homogeneous topology with ``replicate=False`` delegates to
+      :func:`plan` — cuts and modeled stage times are bit-identical to the
+      plain planner's output for the same stage count.
+    * ``strategy="opt"`` runs the exact joint DP
+      (:func:`~repro.core.segmentation.placement_split`) over *effective*
+      stage time: a stage replicated over k identical consecutive devices
+      paces at ``t_weight_load + (t - t_weight_load)/k`` — a bottleneck
+      stage a single dominant layer pins (no cut can fix it; the paper's
+      Table 5 residual imbalance) gets k-fold relief on its non-weight-load
+      terms instead.
+    * ``strategy="balanced"`` splits by params (Algorithm 1) and refines
+      with *per-stage* memory limits (each stage judged against its own
+      device's capacity) — no replication search.
+    """
+    n = topology.n_devices
+    tcm = TopologyCostModel(graph, topology, base_spec)
+
+    if topology.is_homogeneous and topology.devices[0].is_reference \
+            and not replicate:
+        return plan(graph, n, strategy, tpu_model=tcm.base_model)
+
+    if strategy == "balanced":
+        P = graph.params_per_depth()
+        cuts = balanced_split(P, n)
+        reporters = tcm.stage_reporters(topology.devices[:n])
+        refinement = refine_cuts(cuts, graph.depth,
+                                 stage_reporters=reporters)
+        if refinement.converged:
+            cuts = refinement.cuts
+        return PlacementPlan.from_cuts(
+            graph, cuts, strategy="balanced_placement",
+            devices=list(topology.devices[:len(cuts) + 1]),
+            tpu_model=tcm.base_model, refinement=refinement)
+
+    if strategy != "opt":
+        raise ValueError(f"plan_placement supports 'opt' and 'balanced', "
+                         f"got {strategy!r}")
+
+    rmax = n if replicate else 1
+    if max_replicas is not None:
+        rmax = min(rmax, max(1, max_replicas))
+    cuts, replicas = placement_split(graph.depth, n,
+                                     tcm.placement_cost_fn(),
+                                     max_replicas=rmax)
+    offsets = [0]
+    for r in replicas[:-1]:
+        offsets.append(offsets[-1] + r)
+    devices = [topology.devices[o] for o in offsets]
+    return PlacementPlan.from_cuts(
+        graph, cuts, strategy="opt_placement", devices=devices,
+        replicas=replicas, tpu_model=tcm.base_model)
 
 
 def min_stages_to_fit(graph: LayerGraph, capacity_bytes: int) -> int:
@@ -169,5 +443,5 @@ def min_stages_no_spill(graph: LayerGraph,
 
 
 def plan_summary_table(graph: LayerGraph, n_stages: int,
-                       strategies: Sequence[str] = ("comp", "balanced")) -> Dict[str, SegmentationPlan]:
+                       strategies: Sequence[str] = ("comp", "balanced")) -> Dict[str, PlacementPlan]:
     return {s: plan(graph, n_stages, s) for s in strategies}

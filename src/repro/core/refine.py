@@ -23,7 +23,7 @@ is implemented and on by default (``multi_step=True``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Protocol, Sequence, Tuple
+from typing import Callable, List, Optional, Protocol, Sequence, Tuple
 
 from .segmentation import segment_ranges
 
@@ -68,13 +68,29 @@ def _steps_for_spill(reporter: MemoryReporter, spill: int,
 def refine_cuts(
     cuts: Sequence[int],
     n_levels: int,
-    reporter: MemoryReporter,
+    reporter: Optional[MemoryReporter] = None,
     max_rounds: int = 8,
     multi_step: bool = True,
+    stage_reporters: Optional[Sequence[MemoryReporter]] = None,
 ) -> RefinementResult:
-    """Run forward/backward refinement sweeps until no segment spills."""
+    """Run forward/backward refinement sweeps until no segment spills.
+
+    ``reporter`` prices every segment against one device (the paper's
+    homogeneous chain).  ``stage_reporters`` instead supplies one reporter
+    *per stage* — per-stage device limits for heterogeneous topologies
+    (e.g. built by ``TopologyCostModel.stage_reporters``); stage ``i``'s
+    spill is judged against its own device's capacity.  Exactly one of the
+    two must be given.
+    """
     cuts = list(cuts)
     s = len(cuts) + 1
+    if (reporter is None) == (stage_reporters is None):
+        raise ValueError("pass exactly one of reporter / stage_reporters")
+    if stage_reporters is not None and len(stage_reporters) != s:
+        raise ValueError(f"need {s} stage reporters, got "
+                         f"{len(stage_reporters)}")
+    rep_for = ((lambda i: reporter) if stage_reporters is None
+               else (lambda i: stage_reporters[i]))
     compilations = 0
     moves = 0
 
@@ -89,14 +105,14 @@ def refine_cuts(
             while True:
                 lo, hi = ranges()[i]
                 compilations += 1
-                spill = _spill(reporter, lo, hi)
+                spill = _spill(rep_for(i), lo, hi)
                 if spill <= 0:
                     break
                 if hi <= lo:                      # cannot shrink a 1-level segment
                     break
                 if multi_step:
                     step = _steps_for_spill(
-                        reporter, spill, range(hi, lo, -1))
+                        rep_for(i), spill, range(hi, lo, -1))
                     step = min(step, hi - lo)
                 else:
                     step = 1
@@ -112,13 +128,13 @@ def refine_cuts(
             while True:
                 lo, hi = ranges()[i]
                 compilations += 1
-                spill = _spill(reporter, lo, hi)
+                spill = _spill(rep_for(i), lo, hi)
                 if spill <= 0:
                     break
                 if hi <= lo:
                     break
                 if multi_step:
-                    step = _steps_for_spill(reporter, spill, range(lo, hi))
+                    step = _steps_for_spill(rep_for(i), spill, range(lo, hi))
                     step = min(step, hi - lo)
                 else:
                     step = 1
@@ -131,9 +147,9 @@ def refine_cuts(
 
         # check convergence
         ok = True
-        for lo, hi in ranges():
+        for i, (lo, hi) in enumerate(ranges()):
             compilations += 1
-            if _spill(reporter, lo, hi) > 0:
+            if _spill(rep_for(i), lo, hi) > 0:
                 ok = False
                 break
         if ok:

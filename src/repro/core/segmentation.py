@@ -20,6 +20,10 @@ Strategies:
   pipeline model).  Only feasible for shallow models.
 * :func:`dp_split` — exact minimax partition via dynamic programming,
   O(d^2 s).  Used as a property-test oracle for ``balanced_split``.
+* :func:`placement_split` — BEYOND-PAPER joint search over cuts *and*
+  per-stage replica counts under a fixed device budget (heterogeneous
+  chain topologies; see core/topology.py and the planner's
+  ``plan_placement``).
 """
 from __future__ import annotations
 
@@ -346,6 +350,98 @@ def minimax_time_split(
         i = j
     cuts.reverse()
     return cuts
+
+
+def placement_split(
+    d: int,
+    n_devices: int,
+    cost_fn: Callable[[int, int, int, int], float],
+    max_replicas: Optional[int] = None,
+) -> Tuple[List[int], List[int]]:
+    """Joint minimax search over cuts AND per-stage replica counts.
+
+    Generalizes :func:`minimax_time_split` from "s stages, one device each"
+    to a fixed *device budget*: stages consume consecutive runs of devices
+    from an ordered topology, a stage may take ``k`` devices (``k``
+    replicas, round-robin traffic split), and the number of stages is free
+    (1..n_devices).  ``cost_fn(lo, hi, dev_lo, k)`` is the *effective*
+    pacing time of depths [lo, hi] replicated over devices
+    [dev_lo, dev_lo + k) — +inf marks an inadmissible device grouping
+    (e.g. non-identical devices in one replica group).
+
+    dp[n][i] = best max effective stage cost covering depths [0..i] with
+    exactly the first ``n`` devices; transitions try every (last-stage
+    start j+1, replica count k).  The answer takes the best ``n <=
+    n_devices`` — a trailing device that does not help stays idle.  Exact
+    search, O(d^2 · n^2) cost evaluations (each O(1) on the engine):
+    the planner runs it for single-digit device budgets where this is
+    milliseconds-to-seconds even for the deepest Table-1 models.
+
+    Returns ``(cuts, replicas)`` — ``len(replicas) == len(cuts) + 1`` and
+    ``sum(replicas) <= n_devices``.  With ``max_replicas=1`` this is an
+    exact non-replicated minimax over at most ``n_devices`` stages.
+    """
+    if d < 1:
+        raise ValueError("empty depth range")
+    if n_devices < 1:
+        raise ValueError(f"device budget must be >= 1, got {n_devices}")
+    rmax = n_devices if max_replicas is None else max(1, max_replicas)
+
+    memo: dict = {}
+
+    def cost(lo: int, hi: int, dev_lo: int, k: int) -> float:
+        key = (lo, hi, dev_lo, k)
+        v = memo.get(key)
+        if v is None:
+            v = memo[key] = cost_fn(lo, hi, dev_lo, k)
+        return v
+
+    INF = float("inf")
+    # dp[n][i]; back[n][i] = (j, k): last stage covers [j+1..i] on k devices
+    dp = [[INF] * d for _ in range(n_devices + 1)]
+    back: List[List[Optional[Tuple[int, int]]]] = [
+        [None] * d for _ in range(n_devices + 1)]
+    for n in range(1, n_devices + 1):
+        dpn, backn = dp[n], back[n]
+        for i in range(d):
+            best, best_jk = INF, None
+            for k in range(1, min(n, rmax) + 1):
+                rem = n - k                  # devices left of the last stage
+                if rem == 0:                 # single stage covers [0..i]
+                    c = cost(0, i, 0, k)
+                    if c < best:
+                        best, best_jk = c, (-1, k)
+                    continue
+                dprem = dp[rem]
+                for j in range(i):
+                    if dprem[j] >= INF:
+                        continue
+                    tail = cost(j + 1, i, rem, k)
+                    c = tail if dprem[j] < tail else dprem[j]
+                    if c < best:
+                        best, best_jk = c, (j, k)
+            dpn[i] = best
+            backn[i] = best_jk
+
+    best_n = min((n for n in range(1, n_devices + 1)
+                  if dp[n][d - 1] < INF),
+                 key=lambda n: dp[n][d - 1], default=None)
+    if best_n is None:
+        raise ValueError("no admissible placement for this topology")
+
+    cuts: List[int] = []
+    replicas: List[int] = []
+    n, i = best_n, d - 1
+    while True:
+        j, k = back[n][i]
+        replicas.append(k)
+        if j < 0:
+            break
+        cuts.append(j)
+        n, i = n - k, j
+    cuts.reverse()
+    replicas.reverse()
+    return cuts, replicas
 
 
 def dp_split(P: Sequence[int], s: int) -> List[int]:

@@ -4,7 +4,7 @@ pod scale.
 The host-threaded executor (core/pipeline.py) is paper-faithful for a PCIe
 card of Edge TPUs; on a pod the stage-to-stage hop is a
 ``jax.lax.ppermute`` over ICI inside ``shard_map``.  The stage->layer
-assignment comes from the same :class:`SegmentationPlan` (SEGM_BALANCED /
+assignment comes from the same :class:`PlacementPlan` (SEGM_BALANCED /
 SEGM_COMP over the arch's LayerGraph): per-stage *block counts may differ*
 (balanced split shifts blocks away from the embed/head stages), realized by
 padding every stage to ``max_count`` blocks with identity-masked slots.
@@ -31,14 +31,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from ..core.planner import SegmentationPlan
+if hasattr(jax, "shard_map"):                      # jax >= 0.6
+    _shard_map = jax.shard_map
+    _SHMAP_NOCHECK = {"check_vma": False}
+else:                                              # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHMAP_NOCHECK = {"check_rep": False}
+
+from ..core.planner import PlacementPlan
 from ..models import lm
 from ..models.lm import LMConfig
 
 Params = Any
 
 
-def stage_block_counts(plan: SegmentationPlan, n_blocks: int) -> List[int]:
+def stage_block_counts(plan: PlacementPlan, n_blocks: int) -> List[int]:
     """Blocks per stage from a plan over the full LayerGraph (embed +
     block_i + final_norm/head nodes): count only block_* layers."""
     counts = []
@@ -46,6 +53,17 @@ def stage_block_counts(plan: SegmentationPlan, n_blocks: int) -> List[int]:
         counts.append(sum(1 for l in layers if l.startswith("block_")))
     assert sum(counts) == n_blocks, (counts, n_blocks)
     return counts
+
+
+def _require_unreplicated(plan: PlacementPlan) -> None:
+    """The SPMD pipeline maps one stage to one mesh slice; replicated
+    stages belong to the host-threaded executor (core/pipeline.py)."""
+    reps = getattr(plan, "replica_counts", None)
+    if reps and any(r != 1 for r in reps):
+        raise NotImplementedError(
+            f"SPMD pipeline does not support replicated stages "
+            f"(replica_counts={reps}); use the host PipelineExecutor or "
+            f"re-plan with replicate=False")
 
 
 def build_stage_blocks(blocks: Params, counts: Sequence[int]
@@ -88,10 +106,11 @@ def _stage_apply(cfg: LMConfig, blocks_local: Params, mask_local: jax.Array,
     return x
 
 
-def make_pipeline_hidden(cfg: LMConfig, mesh: Mesh, plan: SegmentationPlan,
+def make_pipeline_hidden(cfg: LMConfig, mesh: Mesh, plan: PlacementPlan,
                          n_microbatches: int, stage_axis: str = "model"):
     """Returns hidden_fn(params, batch) -> (B, S, D) hidden states, with the
     blocks executed as a `stage_axis`-wide pipeline per the plan."""
+    _require_unreplicated(plan)
     n_stages = mesh.shape[stage_axis]
     assert plan.n_stages == n_stages, (plan.n_stages, n_stages)
     counts = stage_block_counts(plan, cfg.n_layers)
@@ -111,10 +130,10 @@ def make_pipeline_hidden(cfg: LMConfig, mesh: Mesh, plan: SegmentationPlan,
         x_mb = x.reshape(m, mb, s, d)
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            _shard_map, mesh=mesh,
             in_specs=(P(stage_axis), P(stage_axis), P()),
             out_specs=P(),
-            check_vma=False)
+            **_SHMAP_NOCHECK)
         def pipe(blocks_sh, mask_sh, x_all):
             blocks_l = jax.tree.map(lambda a: a[0], blocks_sh)
             mask_l = mask_sh[0]
@@ -150,7 +169,7 @@ def make_pipeline_hidden(cfg: LMConfig, mesh: Mesh, plan: SegmentationPlan,
     return hidden_fn
 
 
-def pipeline_logits(cfg: LMConfig, mesh: Mesh, plan: SegmentationPlan,
+def pipeline_logits(cfg: LMConfig, mesh: Mesh, plan: PlacementPlan,
                     params: Params, batch: Dict[str, jax.Array],
                     n_microbatches: int = 4) -> jax.Array:
     hidden_fn = make_pipeline_hidden(cfg, mesh, plan, n_microbatches)

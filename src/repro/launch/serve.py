@@ -24,7 +24,7 @@ import numpy as np
 
 from repro import configs
 from repro.configs.common import concrete_batch
-from repro.core import plan
+from repro.core import Topology, plan, plan_placement
 from repro.core.pipeline import (PipelineExecutor, ShapeKeyedStageCache,
                                  stage_balance_metrics)
 from repro.models import api, lm, lm_graph
@@ -87,6 +87,10 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--strategy", default="balanced",
                     choices=["balanced", "balanced_norefine", "comp"])
+    ap.add_argument("--device-budget", type=int, default=0,
+                    help="plan over this many devices with replicated "
+                         "bottleneck stages (plan_placement; 0 = off, use "
+                         "--stages identical devices, one per stage)")
     args = ap.parse_args()
 
     mod = configs.get(args.arch)
@@ -97,7 +101,12 @@ def main() -> None:
     params = api.init(cfg, jax.random.PRNGKey(0))
 
     g = lm_graph.lm_layer_graph(cfg, seq_len=args.seq)
-    pl = plan(g, args.stages, args.strategy)
+    if args.device_budget:
+        # joint cuts+replicas search: a bottleneck stage may get k devices
+        # (round-robin fan-out in the executor, order-restoring fan-in)
+        pl = plan_placement(g, Topology.homogeneous(args.device_budget))
+    else:
+        pl = plan(g, args.stages, args.strategy)
     print("plan:", pl.describe())
     from repro.launch.pipeline_spmd import stage_block_counts
     counts = stage_block_counts(pl, cfg.n_layers)

@@ -20,7 +20,7 @@ from typing import Any, Callable, Dict, Optional
 
 from ..checkpoint import CheckpointStore
 from ..core.graph import LayerGraph
-from ..core.planner import SegmentationPlan, plan
+from ..core.planner import PlacementPlan, plan
 
 
 class FailureInjector:
@@ -111,10 +111,10 @@ class ElasticPlanner:
     def __init__(self, graph: LayerGraph, strategy: str = "balanced"):
         self.graph = graph
         self.strategy = strategy
-        self._cache: Dict[int, SegmentationPlan] = {}
+        self._cache: Dict[int, PlacementPlan] = {}
         self.replan_times: Dict[int, float] = {}
 
-    def plan_for(self, n_devices: int) -> SegmentationPlan:
+    def plan_for(self, n_devices: int) -> PlacementPlan:
         if n_devices not in self._cache:
             t0 = time.perf_counter()
             self._cache[n_devices] = plan(self.graph, n_devices,
@@ -122,6 +122,6 @@ class ElasticPlanner:
             self.replan_times[n_devices] = time.perf_counter() - t0
         return self._cache[n_devices]
 
-    def on_resize(self, healthy_devices: int) -> SegmentationPlan:
+    def on_resize(self, healthy_devices: int) -> PlacementPlan:
         """Called by the serving loop when devices join/leave."""
         return self.plan_for(max(1, healthy_devices))

@@ -6,11 +6,14 @@ each read period (e.g., many cameras for object detection)".
 
 * :class:`MicroBatcher` — gathers requests into a batch of up to
   ``max_batch``, waiting at most ``max_wait_s`` (latency bound).
-* :class:`PipelinedModelServer` — a SegmentationPlan + per-stage functions
+* :class:`PipelinedModelServer` — a PlacementPlan + per-stage functions
   (from GraphModel.apply_subset or the LM stage executor), the host
   pipeline executor, optional straggler hedging, and an elastic hook: if a
   stage executor dies, the plan is re-derived for the surviving devices
-  (ElasticPlanner) and serving continues.
+  (ElasticPlanner) and serving continues.  Replicated stages in the plan
+  (``replicas > 1``) map onto the executor's round-robin fan-out: the
+  stage function is shared by k workers, so it must be thread-safe (jitted
+  JAX callables are).
 """
 from __future__ import annotations
 
@@ -22,7 +25,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 from ..core.pipeline import PipelineExecutor
-from ..core.planner import SegmentationPlan
+from ..core.planner import PlacementPlan
 
 
 @dataclasses.dataclass
@@ -78,13 +81,14 @@ class PipelinedModelServer:
     serving loop creates zero threads per batch.  Use as a context manager
     (or call :meth:`stop`) for a clean shutdown."""
 
-    def __init__(self, plan: SegmentationPlan,
+    def __init__(self, plan: PlacementPlan,
                  stage_fns: Sequence[Callable[[Any], Any]],
                  max_batch: int = 15, max_wait_s: float = 0.02):
         assert len(stage_fns) == plan.n_stages
         self.plan = plan
-        self.executor = PipelineExecutor(stage_fns,
-                                         name=f"serve-{plan.graph_name}")
+        self.executor = PipelineExecutor(
+            stage_fns, name=f"serve-{plan.graph_name}",
+            replicas=getattr(plan, "replica_counts", None))
         self.batcher = MicroBatcher(max_batch, max_wait_s)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None

@@ -1,0 +1,227 @@
+"""PlacementPlan tests: homogeneous no-replica plans are bit-identical to
+the cut-list planner, the joint cuts+replicas DP strictly beats the best
+non-replicated plan on pinned models, replicated executor runs preserve
+submission order bit-for-bit, and plans JSON round-trip."""
+import random
+
+import pytest
+
+from repro.core import (DeviceSpec, EdgeTPUModel, PipelineExecutor,
+                        PlacementPlan, Topology, chain_graph, plan,
+                        plan_placement)
+from repro.core.segmentation import minimax_time_split, placement_split
+from repro.core.topology import TopologyCostModel
+from repro.models.cnn import REAL_CNNS
+
+MIB = 2 ** 20
+
+
+# ---------------------------------------------------------------------------
+# bit-identical compatibility (acceptance criterion)
+# ---------------------------------------------------------------------------
+def test_homogeneous_noreplica_identical_to_opt_all_models():
+    """On homogeneous devices with replicas forced to 1, PlacementPlan cuts
+    and modeled stage times are bit-identical to strategy='opt' output for
+    every Table-1 model."""
+    for name, build in REAL_CNNS.items():
+        g = build().to_layer_graph()
+        m = EdgeTPUModel(g)
+        s = max(2, min(4, g.depth - 1))
+        base = plan(g, s, "opt", tpu_model=m)
+        placed = plan_placement(g, Topology.homogeneous(s), strategy="opt",
+                                replicate=False)
+        assert placed.cuts == base.cuts, name
+        assert placed.stage_times_s == base.stage_times_s, name
+        assert placed.replica_counts == [1] * s, name
+        # and the modeled times are exactly the device model's
+        assert placed.stage_times_s == m.stage_times(base.cuts), name
+
+
+def test_from_cuts_matches_plan_output():
+    g = REAL_CNNS["MobileNet"]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    p = plan(g, 3, "opt", tpu_model=m)
+    q = PlacementPlan.from_cuts(g, p.cuts, strategy="opt", tpu_model=m)
+    assert q.cuts == p.cuts
+    assert q.stage_params == p.stage_params
+    assert q.stage_layers == p.stage_layers
+    assert q.stage_times_s == p.stage_times_s
+
+
+# ---------------------------------------------------------------------------
+# replication wins where the DP is pinned (acceptance criterion)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name,s_pin", [("MobileNet", 5),
+                                        ("MobileNetV2", 3),
+                                        ("ResNet50", 13)])
+def test_replication_strictly_beats_best_nonreplicated(name, s_pin):
+    """At a device budget of s+1 on a model whose s-stage plan is pinned by
+    a dominant layer, the joint DP's modeled max stage time is strictly
+    lower than the best (exact-DP) non-replicated s+1-stage plan."""
+    g = REAL_CNNS[name]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    budget = s_pin + 1
+    cuts_nr = minimax_time_split(g.depth, budget, m.segment_time, exact=True)
+    best_nonrep = max(m.stage_times(cuts_nr))
+    pl = plan_placement(g, Topology.homogeneous(budget), replicate=True)
+    assert pl.n_devices <= budget
+    assert any(r > 1 for r in pl.replica_counts), name
+    assert pl.max_stage_time_s < best_nonrep, name
+
+
+def test_placement_split_unreplicated_never_worse_than_fixed_s():
+    """max_replicas=1 placement over budget N = exact minimax over <= N
+    stages: never worse than the exact N-stage DP."""
+    g = REAL_CNNS["MobileNet"]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    tcm = TopologyCostModel(g, Topology.homogeneous(4))
+    cuts, reps = placement_split(g.depth, 4, tcm.placement_cost_fn(),
+                                 max_replicas=1)
+    assert reps == [1] * len(reps)
+    exact = minimax_time_split(g.depth, 4, m.segment_time, exact=True)
+    assert max(m.stage_times(cuts)) <= max(m.stage_times(exact)) + 1e-15
+
+
+def test_replica_groups_respect_heterogeneous_boundaries():
+    """Replicas may only span identical consecutive devices."""
+    big = DeviceSpec(name="big", compute_scale=2.0)
+    topo = Topology(devices=(DeviceSpec(), DeviceSpec(), big))
+    assert topo.can_group(0, 2)
+    assert not topo.can_group(1, 2)
+    assert not topo.is_homogeneous
+    g = chain_graph("toy", [(f"l{i}", 1000, 10_000, 64) for i in range(8)])
+    pl = plan_placement(g, topo, replicate=True)
+    # stages consume devices in topology order
+    offset = 0
+    for st in pl.stages:
+        group = topo.devices[offset:offset + st.replicas]
+        assert all(d == st.device for d in group)
+        offset += st.replicas
+    assert offset <= topo.n_devices
+
+
+def test_heterogeneous_bigger_device_absorbs_more_depth():
+    """A device with 2x compute should take a larger share of a uniform
+    chain than its 1x peer."""
+    layers = [(f"l{i}", 50_000, 5_000_000, 1024) for i in range(20)]
+    g = chain_graph("uniform", layers)
+    fast_first = Topology(devices=(DeviceSpec(name="fast", compute_scale=2.0),
+                                   DeviceSpec()))
+    pl = plan_placement(g, fast_first, replicate=False)
+    lo, hi = pl.stages[0].depth_range
+    assert (hi - lo + 1) > 10          # fast device takes more than half
+    assert pl.stages[0].device.name == "fast"
+
+
+# ---------------------------------------------------------------------------
+# replicated executor (acceptance criterion: bit-for-bit output order)
+# ---------------------------------------------------------------------------
+def test_replicated_executor_outputs_bit_identical_to_unreplicated():
+    rng = random.Random(0)
+
+    def jitter(x):
+        # thread-scheduling jitter: replicas finish out of order
+        import time
+        time.sleep(rng.random() * 0.003)
+        return x * 2.0 + 1.0
+
+    fns = [lambda x: x + 0.5, jitter, lambda x: x - 0.25]
+    inputs = [i * 0.1 for i in range(40)]
+    with PipelineExecutor(fns) as base:
+        expect, _ = base.run_batch(inputs)
+    with PipelineExecutor(fns, replicas=[1, 4, 1]) as rep:
+        for _ in range(3):
+            outs, _ = rep.run_batch(inputs)
+            assert outs == expect       # same floats, same order
+
+
+def test_replicated_executor_error_propagation_and_reuse():
+    def boom(x):
+        if x == 5:
+            raise ValueError("bad item")
+        return x
+
+    ex = PipelineExecutor([boom, lambda x: x * 10], replicas=[3, 1])
+    with pytest.raises(ValueError, match="bad item"):
+        ex.run_batch(list(range(8)))
+    outs, _ = ex.run_batch([1, 2, 3])   # stays usable, in order
+    assert outs == [10, 20, 30]
+    ex.stop()
+
+
+def test_replicated_executor_busy_times_sum_over_replicas():
+    from repro.core import simulated_stage
+    ex = PipelineExecutor([simulated_stage(0.005)], replicas=[2])
+    _, busy = ex.run_batch([0] * 10, collect_stage_times=True)
+    assert busy is not None and len(busy) == 1
+    assert busy[0] == pytest.approx(0.05, rel=0.5)
+    ex.stop()
+
+
+def test_replica_validation():
+    with pytest.raises(ValueError):
+        PipelineExecutor([lambda x: x], replicas=[1, 1])
+    with pytest.raises(ValueError):
+        PipelineExecutor([lambda x: x], replicas=[0])
+
+
+# ---------------------------------------------------------------------------
+# JSON (de)serialization
+# ---------------------------------------------------------------------------
+def test_plan_json_roundtrip_with_refinement():
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    p = plan(g, 4, "balanced")
+    assert p.refinement is not None
+    q = PlacementPlan.from_json(p.to_json())
+    assert q.graph_name == p.graph_name
+    assert q.strategy == p.strategy
+    assert q.cuts == p.cuts
+    assert q.stage_params == p.stage_params
+    assert q.stage_layers == p.stage_layers
+    assert q.stage_times_s == p.stage_times_s
+    assert q.replica_counts == p.replica_counts
+    assert q.refinement.converged == p.refinement.converged
+    assert q.refinement.cuts == p.refinement.cuts
+
+
+def test_plan_json_roundtrip_replicated_heterogeneous():
+    g = chain_graph("toy", [(f"l{i}", 1000, 10_000, 64) for i in range(6)])
+    pl = PlacementPlan.from_cuts(
+        g, [1, 3], strategy="manual",
+        devices=[DeviceSpec(), DeviceSpec(name="big", onchip_bytes=16 * MIB),
+                 DeviceSpec()],
+        replicas=[1, 2, 1])
+    q = PlacementPlan.from_json(pl.to_json(indent=2))
+    assert q.replica_counts == [1, 2, 1]
+    assert q.stages[1].device.name == "big"
+    assert q.stages[1].device.onchip_bytes == 16 * MIB
+    assert q.effective_stage_times_s == pl.effective_stage_times_s
+    assert q.n_devices == 4
+
+
+def test_plan_json_rejects_foreign_documents():
+    with pytest.raises(ValueError):
+        PlacementPlan.from_json('{"format": "something/else"}')
+
+
+def test_describe_annotates_devices_and_replicas():
+    g = chain_graph("toy", [(f"l{i}", 1_000_000, 10_000, 64)
+                            for i in range(6)])
+    pl = PlacementPlan.from_cuts(g, [2], replicas=[2, 1],
+                                 devices=[DeviceSpec(),
+                                          DeviceSpec(name="tpu-v2",
+                                                     compute_scale=2.0)])
+    text = pl.describe()
+    assert "x2" in text and "@tpu-v2" in text and "(3 devs)" in text
+
+
+def test_effective_time_rule():
+    """Replication divides everything except the weight-load term."""
+    g = chain_graph("toy", [(f"l{i}", 100_000, 1_000_000, 2048)
+                            for i in range(4)])
+    pl = PlacementPlan.from_cuts(g, [1], replicas=[2, 1])
+    st = pl.stages[0]
+    assert st.time_s is not None and st.weight_load_s is not None
+    expect = st.weight_load_s + (st.time_s - st.weight_load_s) / 2
+    assert st.effective_time_s == expect
+    assert pl.stages[1].effective_time_s == pl.stages[1].time_s

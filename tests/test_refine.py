@@ -1,8 +1,13 @@
 """Refinement (paper §6.1.3) tests: convergence, sweep directions, the
-multi-position optimization."""
-from repro.core import EdgeTPUModel, GraphReporter, plan, refine_cuts
+multi-position optimization, and per-stage device limits (heterogeneous
+topologies)."""
+import pytest
+
+from repro.core import (DeviceSpec, EdgeTPUModel, GraphReporter, Topology,
+                        plan, refine_cuts)
 from repro.core.graph import chain_graph
-from repro.core.segmentation import balanced_split
+from repro.core.segmentation import balanced_split, segment_ranges
+from repro.core.topology import TopologyCostModel
 from repro.models.cnn import REAL_CNNS
 
 MIB = 2 ** 20
@@ -61,6 +66,102 @@ def test_unsatisfiable_does_not_loop_forever():
     res = refine_cuts([0, 1], 3, DictReporter(sizes, capacity=50),
                       max_rounds=3)
     assert not res.converged              # impossible; must terminate
+
+
+def test_single_stage_graph_converges_when_it_fits():
+    """s=1 (no cuts): nothing to sweep, converged iff the whole model
+    fits."""
+    res = refine_cuts([], 5, DictReporter([10] * 5, capacity=100))
+    assert res.converged and res.cuts == [] and res.moves == 0
+
+
+def test_single_stage_graph_reports_nonconvergence():
+    res = refine_cuts([], 5, DictReporter([10] * 5, capacity=30),
+                      max_rounds=3)
+    assert not res.converged and res.cuts == []
+
+
+def test_backward_sweep_when_last_segment_spills_multi_stage():
+    """Satellite case: forward sweeps leave the LAST segment over
+    capacity; the backward sweep must shed its leading depths leftward
+    across several cuts."""
+    sizes = [10, 10, 10, 10, 30, 40]
+    cap = 45
+    cuts = [0, 1]                          # last segment 10+10+30+40 > cap
+    res = refine_cuts(cuts, 6, DictReporter(sizes, cap))
+    assert res.converged
+    rep = DictReporter(sizes, cap)
+    for lo, hi in segment_ranges(6, res.cuts):
+        assert rep.segment_report(lo, hi)[1] == 0
+
+
+def test_nonconverging_reporter_terminates_with_flag():
+    """A reporter that always claims a spill must produce
+    converged=False within max_rounds rather than hang."""
+
+    class AlwaysSpills:
+        def segment_report(self, lo, hi):
+            return 0, 1                    # every segment "spills" 1 byte
+
+        def depth_bytes(self, d):
+            return 1
+
+    res = refine_cuts([2, 5], 9, AlwaysSpills(), max_rounds=4)
+    assert not res.converged
+    assert res.compilations > 0
+
+
+def test_reporter_argument_validation():
+    rep = DictReporter([10, 10], 100)
+    with pytest.raises(ValueError):
+        refine_cuts([0], 2)                          # neither
+    with pytest.raises(ValueError):
+        refine_cuts([0], 2, rep, stage_reporters=[rep, rep])   # both
+    with pytest.raises(ValueError):
+        refine_cuts([0], 2, stage_reporters=[rep])   # wrong count
+
+
+def test_per_stage_limits_heterogeneous_capacities():
+    """Per-stage device limits: the same cut list converges only when each
+    stage is judged against its own device's capacity."""
+    sizes = [30, 30, 30, 40]
+    small = DictReporter(sizes, capacity=50)
+    big = DictReporter(sizes, capacity=100)
+    # homogeneous small devices: no cut fits both stages under cap 50
+    res_small = refine_cuts([1], 4, small, max_rounds=3)
+    assert not res_small.converged
+    # big device first, small second: shed depth onto the big one
+    res_het = refine_cuts([1], 4, stage_reporters=[big, small])
+    assert res_het.converged
+    (lo0, hi0), (lo1, hi1) = segment_ranges(4, res_het.cuts)
+    assert big.segment_report(lo0, hi0)[1] == 0
+    assert small.segment_report(lo1, hi1)[1] == 0
+
+
+def test_per_stage_limits_with_device_specs():
+    """End-to-end: TopologyCostModel.stage_reporters binds each refine
+    stage to its DeviceSpec's on-chip capacity."""
+    mib = MIB
+    layers = [(f"l{i}", 2 * mib, 1000, 1024) for i in range(8)]  # 16 MiB
+    g = chain_graph("het", layers)
+    # one 12-MiB device + one default 8-MiB device: balanced halves (8 MiB
+    # each) fit the big device but spill the small one's ~7.9 MiB capacity;
+    # per-stage refinement shifts depth onto the big device and converges
+    big = DeviceSpec(name="big", onchip_bytes=12 * mib)
+    topo = Topology(devices=(big, DeviceSpec()))
+    tcm = TopologyCostModel(g, topo)
+    reporters = tcm.stage_reporters(topo.devices)
+    cuts = balanced_split(g.params_per_depth(), 2)
+    res = refine_cuts(cuts, g.depth, stage_reporters=reporters)
+    assert res.converged
+    (lo0, hi0), (lo1, hi1) = segment_ranges(g.depth, res.cuts)
+    assert reporters[0].segment_report(lo0, hi0)[1] == 0
+    assert reporters[1].segment_report(lo1, hi1)[1] == 0
+    assert (hi0 - lo0) > (hi1 - lo1)       # big device holds more depth
+    # the same plan judged against two default devices does not converge
+    small_reporter = GraphReporter(EdgeTPUModel(g))
+    res_small = refine_cuts(cuts, g.depth, small_reporter, max_rounds=3)
+    assert not res_small.converged
 
 
 def test_paper_claim_balanced_avoids_host_on_all_real_models():
