@@ -140,11 +140,11 @@ def run(arch: str = "qwen3-1.7b", stages: int = 4, requests: int = 15,
         fns = make_stage_fns(cfg, params, counts)
         with PipelinedModelServer(pl, fns, max_batch=requests) as srv:
             srv.serve_batch(reqs[:1])          # warm the jits
-            srv.stats["stage_busy_s"] = [0.0] * stages
+            srv.snapshot()                     # reset the delta window
             t0 = time.perf_counter()
             srv.serve_batch(reqs)
             dt = time.perf_counter() - t0
-            m = stage_balance_metrics(srv.stats["stage_busy_s"])
+            m = stage_balance_metrics(srv.snapshot()["stage_busy_s"])
         rows.append({"name": f"serve_{strat}",
                      "us_per_call": round(dt / requests * 1e6, 1),
                      "derived": f"balance={m['balance']:.3f},"

@@ -113,7 +113,8 @@ def _timed(ex: PipelineExecutor, inputs: List) -> float:
     return time.perf_counter() - t0
 
 
-def run(models: Optional[List[str]] = None) -> Dict:
+def run(models: Optional[List[str]] = None, rounds: int = 5,
+        write: bool = True) -> Dict:
     names = models or list(DEFAULT_MODELS)
     unknown = [n for n in names if n not in REAL_CNNS]
     if unknown:
@@ -140,7 +141,7 @@ def run(models: Optional[List[str]] = None) -> Dict:
             for r in results if r.get("pinned")]
     emit("placement_bench", rows, ["name", "us_per_call", "derived"])
 
-    exec_summary = run_replicated_executor_bench()
+    exec_summary = run_replicated_executor_bench(rounds=rounds)
     wins = sum(1 for r in results if r.get("strict_win"))
     summary = {
         "note": "replicated vs best non-replicated plan at device budget "
@@ -155,13 +156,14 @@ def run(models: Optional[List[str]] = None) -> Dict:
             "executor_speedup": exec_summary["speedup"],
         },
     }
-    out = os.path.join(REPO_ROOT, "BENCH_placement.json")
-    with open(out, "w") as f:
-        json.dump(summary, f, indent=1)
+    if write:
+        out = os.path.join(REPO_ROOT, "BENCH_placement.json")
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {out}")
     print(f"\n{wins} models with a strict replication win; "
           f"replicated executor {exec_summary['speedup']}x on the "
           f"bottleneck pipeline")
-    print(f"wrote {out}")
     return summary
 
 
@@ -169,7 +171,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--models", nargs="*", default=None,
                     help="subset of Table-1 names (default: skewed fast set)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: fastest models only, fewer "
+                         "executor rounds, no BENCH_placement.json write, "
+                         "relaxed acceptance")
     args = ap.parse_args()
+    if args.smoke:
+        summary = run(models=args.models or ["MobileNet", "MobileNetV2"],
+                      rounds=2, write=False)
+        # smoke gates on the deterministic modeled metric only; the
+        # wall-clock executor speedup is printed but not asserted (shared
+        # CI runners are too noisy — ordering correctness is asserted
+        # inside run_replicated_executor_bench regardless)
+        assert summary["acceptance"]["models_with_strict_win"] >= 1, \
+            summary["acceptance"]
+        return
     summary = run(args.models)
     assert summary["acceptance"]["win_floor_met"], summary["acceptance"]
     assert summary["acceptance"]["executor_speedup"] >= 1.5, \

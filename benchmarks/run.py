@@ -15,12 +15,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="single_tpu|segm_synth|segm_real|stage_balance|"
-                         "lm_balance|roofline|kernels|serving")
+                         "lm_balance|roofline|kernels|serving|"
+                         "serving_stream")
     args = ap.parse_args()
 
     from . import (kernel_bench, lm_pipeline_balance, pipeline_serving,
-                   roofline, segm_real, segm_synth, single_tpu_curve,
-                   stage_balance)
+                   roofline, segm_real, segm_synth, serving_bench,
+                   single_tpu_curve, stage_balance)
 
     jobs = {
         "single_tpu": lambda: (single_tpu_curve.run(),
@@ -32,6 +33,7 @@ def main() -> None:
         "roofline": roofline.run,
         "kernels": kernel_bench.run,
         "serving": pipeline_serving.run,
+        "serving_stream": serving_bench.run,
     }
     if args.only:
         jobs[args.only]()

@@ -1,7 +1,8 @@
 """End-to-end serving driver (the paper's kind: inference): segment an LM
-with SEGM_BALANCED, serve a batched request stream through the pipelined
-executor, report throughput + stage balance, and demonstrate elastic
-replanning + straggler hedging.
+with SEGM_BALANCED, serve a *continuous request stream* through the
+pipelined executor (per-request futures, no inter-batch barrier), report
+throughput + latency percentiles + stage balance, and demonstrate elastic
+replanning on a live server plus straggler hedging.
 
     PYTHONPATH=src python examples/segment_and_serve.py
 """
@@ -27,22 +28,37 @@ def main() -> None:
     params = api.init(cfg, jax.random.PRNGKey(0))
     g = lm_graph.lm_layer_graph(cfg, seq_len=seq)
 
-    # --- plan + serve -------------------------------------------------------
+    # --- plan + stream ------------------------------------------------------
     pl = plan(g, stages, "balanced_norefine")
     counts = stage_block_counts(pl, cfg.n_layers)
     print("plan:", pl.describe())
-    fns = make_stage_fns(cfg, params, counts)
-    server = PipelinedModelServer(pl, fns, max_batch=n_req)
+
+    def fns_for(p):
+        return make_stage_fns(cfg, params,
+                              stage_block_counts(p, cfg.n_layers))
+
+    fns = fns_for(pl)
+    server = PipelinedModelServer(pl, fns, max_batch=n_req,
+                                  max_wait_s=0.005)
 
     reqs = [concrete_batch(cfg, seq, 1, key=jax.random.PRNGKey(i),
                            kind="prefill")["tokens"] for i in range(n_req)]
     server.serve_batch(reqs[:1])                     # warm the jits
+    server.start()                                   # admission loop
+    server.snapshot()                                # reset delta window
     t0 = time.perf_counter()
-    outs = server.serve_batch(reqs)
+    pending = [server.submit(r) for r in reqs]       # continuous admission
+    for req in pending:
+        assert req.event.wait(120) and req.error is None
     dt = time.perf_counter() - t0
-    m = stage_balance_metrics(server.stats["stage_busy_s"])
-    print(f"{len(outs)} requests in {dt*1e3:.1f} ms "
-          f"({len(outs)/dt:.1f} req/s), stage balance {m['balance']:.3f}")
+    outs = [r.result for r in pending]
+    snap = server.snapshot()
+    m = stage_balance_metrics(snap["stage_busy_s"])
+    lat = snap["latency"]
+    print(f"{len(outs)} streamed requests in {dt*1e3:.1f} ms "
+          f"({snap['throughput_rps']:.1f} req/s), "
+          f"p50/p95 latency {lat['p50_s']*1e3:.1f}/{lat['p95_s']*1e3:.1f} ms, "
+          f"stage balance {m['balance']:.3f}")
 
     ref = api.forward(cfg, params, {"tokens": reqs[0]}, last_token_only=True)
     err = float(jnp.max(jnp.abs(outs[0] - ref)))
@@ -52,7 +68,7 @@ def main() -> None:
     # --- replicated bottleneck stage ----------------------------------------
     # Hand-build a placement replicating the slowest stage across 2 devices:
     # the executor round-robins its traffic over 2 workers and restores
-    # submission order, so outputs match the unreplicated run bit-for-bit.
+    # stream order, so outputs match the unreplicated run bit-for-bit.
     slowest = max(range(stages), key=lambda i: pl.stages[i].time_s)
     reps = [1] * stages
     reps[slowest] = 2
@@ -73,11 +89,20 @@ def main() -> None:
     assert pl_back.replica_counts == pl_rep.replica_counts
     print("plan JSON round-trip OK")
 
-    # --- elastic: a device leaves, replan in milliseconds -------------------
+    # --- elastic: a device leaves, hot-swap the live server ------------------
     ep = ElasticPlanner(g, "balanced_norefine")
-    pl3 = ep.on_resize(stages - 1)
+    t0 = time.perf_counter()
+    pl3 = ep.resize_server(server, fns_for, stages - 1)
+    swap_ms = (time.perf_counter() - t0) * 1e3
     print(f"\nelastic: replanned {stages}->{stages-1} stages in "
-          f"{ep.replan_times[stages-1]*1e3:.2f} ms: {pl3.describe()}")
+          f"{ep.replan_times[stages-1]*1e3:.2f} ms, live swap {swap_ms:.1f} "
+          f"ms: {pl3.describe()}")
+    req = server.submit(reqs[0])                    # served by the new plan
+    assert req.event.wait(120) and req.error is None
+    err3 = float(jnp.max(jnp.abs(req.result - ref)))
+    assert err3 < 2e-2, err3
+    print(f"post-resize output still matches (err {err3:.2e})")
+    server.stop()
 
     # --- straggler hedging ----------------------------------------------------
     calls = {"n": 0}

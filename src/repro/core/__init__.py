@@ -14,8 +14,9 @@ from .planner import (PlacementPlan, SegmentationPlan, StagePlacement,
                       min_stages_no_spill, min_stages_to_fit, plan,
                       plan_placement)
 from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec, MemoryReport
-from .pipeline import (PipelineExecutor, ShapeKeyedStageCache,
-                       simulated_stage, stage_balance_metrics)
+from .pipeline import (PipelineExecutor, PipelineStopped,
+                       ShapeKeyedStageCache, simulated_stage,
+                       stage_balance_metrics)
 
 __all__ = [
     "LayerGraph", "LayerNode", "chain_graph",
@@ -28,6 +29,6 @@ __all__ = [
     "PlacementPlan", "SegmentationPlan", "StagePlacement",
     "plan", "plan_placement", "min_stages_to_fit", "min_stages_no_spill",
     "EdgeTPUModel", "EdgeTPUSpec", "MemoryReport",
-    "PipelineExecutor", "ShapeKeyedStageCache", "simulated_stage",
-    "stage_balance_metrics",
+    "PipelineExecutor", "PipelineStopped", "ShapeKeyedStageCache",
+    "simulated_stage", "stage_balance_metrics",
 ]

@@ -1,5 +1,5 @@
-"""Host-threaded pipeline executor — faithful to the paper's implementation,
-extended with replicated stages.
+"""Host-threaded *streaming* pipeline executor — faithful to the paper's
+implementation, extended with replicated stages and dynamic micro-batching.
 
 Paper §5.1 / Fig. 5: "we deploy a host thread per Edge TPU that is in charge
 of handling it, and a queue (implementing thread-safe mechanisms) on the host
@@ -11,13 +11,37 @@ queue.  Stage functions are arbitrary callables: the CNN benchmarks bind them
 to real JAX forwards of the stage's layers; tests bind simulated latencies to
 validate the analytical pipeline model.
 
-The executor is *persistent*: worker threads and their bounded queues are
-created once (on first :meth:`PipelineExecutor.run_batch` or an explicit
-:meth:`PipelineExecutor.start`) and reused across batches, so steady-state
-serving creates **zero** threads per batch.  A batch is delimited by an
-end-marker flowing through the queues; stage failures are wrapped and
-forwarded so the pipeline stays drained and reusable after an error.
-Lifecycle: ``start()`` / ``stop()`` or a ``with`` block.
+The executor is *persistent* and *streaming*:
+
+* Worker threads and their bounded queues are created once (on first use or
+  an explicit :meth:`PipelineExecutor.start`) and reused, so steady-state
+  serving creates **zero** threads per request.
+* :meth:`PipelineExecutor.submit` admits one item into the stream and
+  returns a :class:`concurrent.futures.Future`; envelopes flow through the
+  stage queues continuously with **no inter-batch barrier** — a collector
+  thread at the tail completes each item's future as it exits the last
+  stage.  Backpressure comes from the bounded inter-stage queues:
+  ``submit`` blocks once ``queue_size`` items are waiting at the head.
+* :meth:`PipelineExecutor.run_batch` rides the same stream: it admits the
+  whole batch through the same admission path and gathers completions in
+  submission order (via a shared batch sink — one slot per item — rather
+  than a Future each, keeping the per-item overhead tens of microseconds),
+  so outputs (and the first-error-in-submission-order contract) are
+  identical to the historical batch-synchronous executor — but two callers
+  can now interleave batches, and a serving loop can keep every stage busy
+  across what used to be drain/refill bubbles at batch boundaries.
+* Stage failures are wrapped and forwarded per item (:class:`_Failed`), so
+  one bad input neither kills worker threads nor stalls the stream; the
+  item's future receives the original exception.
+* :meth:`PipelineExecutor.stop` drains the stream and completes any future
+  still in flight with :class:`PipelineStopped` rather than leaving callers
+  hanging; the executor may be restarted afterwards.
+
+Busy-time accounting is **monotonic**: per-(stage, replica) counters only
+ever grow, and :meth:`busy_snapshot` returns the per-stage totals so callers
+measure intervals as snapshot deltas (``run_batch(collect_stage_times=True)``
+does exactly that — note the delta spans everything the executor ran in the
+interval, which equals the batch only when no other traffic interleaves).
 
 **Replicated stages** (``replicas=[...]``, from a
 :class:`~repro.core.planner.PlacementPlan`): a stage with ``k > 1``
@@ -25,10 +49,26 @@ replicas — a bottleneck a single dominant layer pins, which no cut
 placement can fix — runs ``k`` workers sharing the stage function.  A
 dispatcher thread round-robins envelopes from the stage's input queue onto
 ``k`` per-worker queues; workers push results into a shared queue; a merge
-thread restores submission order (items carry sequence numbers internally)
-before forwarding downstream, so the pipeline's in-order contract is
-bit-for-bit identical to the unreplicated pipeline — only the pacing
-changes.  Batch-end and shutdown markers collapse k-for-1 at the merge.
+thread restores stream order (items carry monotonic sequence numbers
+internally) before forwarding downstream, so the pipeline's in-order
+contract is bit-for-bit identical to the unreplicated pipeline — only the
+pacing changes.  The merge sequence is monotonic for the executor's whole
+lifetime: there is no per-batch reset, which is what lets batches overlap
+in flight.
+
+**Dynamic micro-batching** (``microbatch=[...]`` or an int): a stage with
+bucket size ``k > 1`` aggregates up to ``k`` *consecutive* queued envelopes
+whose payloads share an array signature (shape + dtype, the
+:class:`ShapeKeyedStageCache` bucketing key) into one stacked call —
+``fn(concat(payloads))`` split back into per-item envelopes — so jitted
+accelerator stages amortize dispatch and weight-load over the traffic that
+is actually concurrent, not just over what one request batch happened to
+contain.  Only a same-signature *prefix* of the queue is taken, so FIFO
+order (and therefore the stream's in-order contract) is preserved exactly;
+``microbatch_wait_s`` optionally holds the first item briefly to let a
+fuller bucket form.  Stages whose output does not split back along the
+leading axis are detected on the first stacked probe and run per-item
+from then on.
 
 This executor is the *paper-faithful* path (host-mediated transfers).  The
 pod-scale SPMD path (shard_map + ppermute over ICI) lives in
@@ -36,20 +76,26 @@ launch/pipeline_spmd.py and consumes the same PlacementPlan.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
-_BATCH_END = object()     # delimits one batch; forwarded by every stage
 _SHUTDOWN = object()      # terminates workers; forwarded by every stage
+
+
+class PipelineStopped(RuntimeError):
+    """Completion error for futures still in flight when the executor (or a
+    server built on it) shuts down: callers get this instead of hanging."""
 
 
 class _Failed:
     """A stage exception travelling the pipeline in the failed item's slot.
 
     Downstream stages forward it untouched, so one bad input neither kills
-    the worker threads nor stalls the rest of the batch."""
+    the worker threads nor stalls the rest of the stream."""
 
     __slots__ = ("error",)
 
@@ -57,15 +103,27 @@ class _Failed:
         self.error = error
 
 
-class _EndOfBatch:
-    """Batch-end marker on a replicated stage's merge queue: carries how
-    many data envelopes the dispatcher fanned out this batch, so the merge
-    emits it only after restoring all of them."""
+class _BatchSink:
+    """Lightweight completion target for ``run_batch``: one preallocated
+    slot per item and a single Event, instead of a condition-variable
+    Future per item — the gather path costs one lock op per item, which
+    keeps the zero-latency steady-state microbenchmark within a few tens
+    of microseconds per item."""
 
-    __slots__ = ("count",)
+    __slots__ = ("slots", "_remaining", "_lock", "done")
 
-    def __init__(self, count: int):
-        self.count = count
+    def __init__(self, n: int):
+        self.slots: List[Any] = [None] * n
+        self._remaining = n
+        self._lock = threading.Lock()
+        self.done = threading.Event()
+
+    def deliver(self, idx: int, payload: Any) -> None:
+        self.slots[idx] = (payload,)      # tuple-wrap: None is a valid output
+        with self._lock:
+            self._remaining -= 1
+            if self._remaining == 0:
+                self.done.set()
 
 
 class PipelineExecutor:
@@ -74,32 +132,62 @@ class PipelineExecutor:
 
     ``replicas[i] > 1`` replicates stage ``i`` across that many workers
     (shared input queue via a round-robin dispatcher, order-restoring
-    fan-in).  Items travel internally as ``(seq, payload)`` envelopes;
-    user code never sees them.
+    fan-in).  ``microbatch[i] > 1`` lets stage ``i`` stack consecutive
+    same-shape payloads into one call (see module docstring).  Items travel
+    internally as ``(seq, payload)`` envelopes; user code never sees them.
     """
 
     def __init__(self, stage_fns: Sequence[Callable[[Any], Any]],
                  queue_size: int = 64, name: str = "pipeline",
-                 replicas: Optional[Sequence[int]] = None):
+                 replicas: Optional[Sequence[int]] = None,
+                 microbatch: Optional[Union[int, Sequence[int]]] = None,
+                 microbatch_wait_s: float = 0.0):
         if not stage_fns:
             raise ValueError("need at least one stage")
         self.stage_fns = list(stage_fns)
         self.queue_size = queue_size
         self.name = name
+        n = len(self.stage_fns)
         if replicas is None:
-            replicas = [1] * len(self.stage_fns)
+            replicas = [1] * n
         self.replicas = [int(r) for r in replicas]
-        if len(self.replicas) != len(self.stage_fns):
-            raise ValueError(f"need {len(self.stage_fns)} replica counts, "
+        if len(self.replicas) != n:
+            raise ValueError(f"need {n} replica counts, "
                              f"got {len(self.replicas)}")
         if any(r < 1 for r in self.replicas):
             raise ValueError(f"replica counts must be >= 1: {self.replicas}")
-        self._lock = threading.RLock()
+        if microbatch is None:
+            microbatch = [1] * n
+        elif isinstance(microbatch, int):
+            microbatch = [microbatch] * n
+        self.microbatch = [int(k) for k in microbatch]
+        if len(self.microbatch) != n:
+            raise ValueError(f"need {n} microbatch sizes, "
+                             f"got {len(self.microbatch)}")
+        if any(k < 1 for k in self.microbatch):
+            raise ValueError(f"microbatch sizes must be >= 1: "
+                             f"{self.microbatch}")
+        self.microbatch_wait_s = float(microbatch_wait_s)
+        self._lock = threading.RLock()      # lifecycle
+        self._submit_lock = threading.Lock()  # seq assignment + head put
         self._queues: List[queue.Queue] = []
         self._threads: List[threading.Thread] = []
-        # one busy slot per (stage, replica): each written by one thread only
+        # one busy slot per (stage, replica): each written by one thread
+        # only, never reset — read intervals via busy_snapshot() deltas
         self._busy = [[0.0] * r for r in self.replicas]
+        # micro-batching amortization counters (calls / items): one slot
+        # per (stage, replica) like _busy, so concurrent replica workers
+        # never lose updates; monotonic
+        self._mb_calls = [[0] * r for r in self.replicas]
+        self._mb_items = [[0] * r for r in self.replicas]
+        # stages proven unstackable (output does not split along axis 0):
+        # skip aggregation instead of re-running every bucket twice
+        self._mb_unstackable = [False] * n
+        # seq -> Future (submit) or (_BatchSink, idx) (run_batch)
+        self._pending: Dict[int, Any] = {}
+        self._seq = itertools.count()
         self._started = False
+        self._draining = False
 
     @property
     def n_stages(self) -> int:
@@ -110,8 +198,19 @@ class PipelineExecutor:
         return sum(self.replicas)
 
     @property
+    def n_threads(self) -> int:
+        """Threads the running executor owns: stage workers, dispatcher +
+        merge per replicated stage, and the tail collector."""
+        return (sum(1 if k == 1 else k + 2 for k in self.replicas) + 1)
+
+    @property
     def started(self) -> bool:
         return self._started
+
+    @property
+    def in_flight(self) -> int:
+        """Submitted items whose futures have not completed yet."""
+        return len(self._pending)
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "PipelineExecutor":
@@ -122,11 +221,14 @@ class PipelineExecutor:
             n = self.n_stages
             self._queues = [queue.Queue(self.queue_size) for _ in range(n + 1)]
             self._threads = []
+            self._pending = {}
+            self._seq = itertools.count()
+            self._draining = False
             for i in range(n):
                 k = self.replicas[i]
                 if k == 1:
                     self._threads.append(threading.Thread(
-                        target=self._worker,
+                        target=self._stage_loop,
                         args=(i, self._queues[i], self._queues[i + 1], 0),
                         daemon=True, name=f"{self.name}-stage{i}"))
                     continue
@@ -139,40 +241,88 @@ class PipelineExecutor:
                     daemon=True, name=f"{self.name}-stage{i}-dispatch"))
                 for j in range(k):
                     self._threads.append(threading.Thread(
-                        target=self._replica_worker, args=(i, wqs[j], mq, j),
+                        target=self._stage_loop, args=(i, wqs[j], mq, j),
                         daemon=True, name=f"{self.name}-stage{i}-r{j}"))
                 self._threads.append(threading.Thread(
                     target=self._merge, args=(mq, self._queues[i + 1], k),
                     daemon=True, name=f"{self.name}-stage{i}-merge"))
+            self._threads.append(threading.Thread(
+                target=self._collector, args=(self._queues[n], self._pending),
+                daemon=True, name=f"{self.name}-collect"))
             for t in self._threads:
                 t.start()
             self._started = True
             return self
 
+    def submit(self, payload: Any) -> "Future":
+        """Admit one item into the stream; returns a Future completed (with
+        the tail stage's output, or the stage exception) as the item exits
+        the pipeline.  Blocks when the head queue is full — the stream's
+        backpressure.  Starts the executor if needed."""
+        if not self._started:
+            self.start()
+        fut: Future = Future()
+        with self._submit_lock:
+            if self._draining or not self._started:
+                raise RuntimeError(f"{self.name}: executor is stopping")
+            seq = next(self._seq)
+            self._pending[seq] = fut
+            self._queues[0].put((seq, payload))
+        return fut
+
     def stop(self, timeout: float = 30.0) -> None:
         """Drain and join the worker threads; the executor may be restarted.
 
-        Bounded: if a stage hangs and the shutdown marker never cascades to
-        the tail within ``timeout``, the (daemon) workers are abandoned
-        rather than blocking the caller forever."""
+        In-flight items ahead of the shutdown marker complete normally
+        (their futures resolve during the drain).  Bounded: if a stage
+        hangs and the marker never cascades to the tail within ``timeout``,
+        the (daemon) workers are abandoned, and any future still pending is
+        completed with :class:`PipelineStopped` rather than left hanging."""
         with self._lock:
             if not self._started:
                 return
-            self._queues[0].put(_SHUTDOWN)
-            # the marker cascades stage-to-stage; swallow it at the tail
             deadline = time.monotonic() + timeout
-            try:
-                while self._queues[-1].get(
-                        timeout=max(0.0, deadline - time.monotonic())
-                ) is not _SHUTDOWN:
+            # refuse new submissions, then queue the marker behind every
+            # already-accepted envelope
+            if self._submit_lock.acquire(
+                    timeout=max(0.01, deadline - time.monotonic())):
+                try:
+                    self._draining = True
+                    self._queues[0].put(_SHUTDOWN)
+                except BaseException:
+                    self._submit_lock.release()
+                    raise
+                self._submit_lock.release()
+            else:   # a submitter is wedged on a full queue: best effort
+                self._draining = True
+                try:
+                    self._queues[0].put_nowait(_SHUTDOWN)
+                except queue.Full:
                     pass
-            except queue.Empty:
-                pass                      # stuck stage: abandon daemon workers
             for t in self._threads:
                 t.join(timeout=max(0.0, deadline - time.monotonic()))
+            pending, self._pending = self._pending, {}
+            for seq in sorted(pending):
+                # atomic pop: an abandoned collector may race us here, and
+                # exactly one side must complete each entry
+                entry = pending.pop(seq, None)
+                if entry is None:
+                    continue
+                err = PipelineStopped(
+                    f"{self.name}: stopped with item {seq} in flight")
+                if isinstance(entry, Future):
+                    if not entry.done():
+                        try:
+                            entry.set_exception(err)
+                        except Exception:
+                            pass    # completed concurrently by a straggler
+                else:
+                    sink, idx = entry
+                    sink.deliver(idx, _Failed(err))
             self._threads = []
             self._queues = []
             self._started = False
+            self._draining = False
 
     def __enter__(self) -> "PipelineExecutor":
         return self.start()
@@ -195,61 +345,112 @@ class PipelineExecutor:
             return (seq, _Failed(e))
         return (seq, out)
 
-    def _worker(self, i: int, q_in: queue.Queue, q_out: queue.Queue,
-                slot: int) -> None:
+    def _apply_batched(self, i: int, slot: int,
+                       bucket: List[Tuple[int, Any]]) -> List[Tuple[int, Any]]:
+        """One stacked call over a same-signature bucket, split back into
+        per-item envelopes.
+
+        A stage *exception* falls back to per-item execution, which
+        attributes the failure to the offending envelope(s).  A stage
+        whose output does not split item-for-item along the leading axis
+        is marked unstackable — this bucket runs per-item and later
+        buckets skip aggregation entirely — so the stacked probe's wasted
+        call happens at most once per stage.  Busy time is only credited
+        for stacked calls whose result is actually used."""
+        fn = self.stage_fns[i]
+        payloads = [p for _, p in bucket]
+        rows = [int(p.shape[0]) for p in payloads]
+        parts = None
+        try:
+            xp = _array_namespace(payloads[0])
+            t0 = time.perf_counter()
+            stacked_out = fn(xp.concatenate(payloads, axis=0))
+            dt = time.perf_counter() - t0
+            out_shape = getattr(stacked_out, "shape", None)
+            if out_shape is not None and int(out_shape[0]) == sum(rows):
+                parts = []
+                off = 0
+                for r in rows:
+                    parts.append(stacked_out[off:off + r])
+                    off += r
+            else:
+                self._mb_unstackable[i] = True
+        except BaseException:
+            pass        # per-item rerun pins the failure to the right item
+        if parts is None:
+            return [self._apply(i, slot, env) for env in bucket]
+        self._busy[i][slot] += dt
+        self._mb_calls[i][slot] += 1
+        self._mb_items[i][slot] += len(bucket)
+        return [(seq, part) for (seq, _), part in zip(bucket, parts)]
+
+    def _stage_loop(self, i: int, q_in: queue.Queue, q_out: queue.Queue,
+                    slot: int) -> None:
+        """Worker loop shared by plain stages and replica workers: FIFO in,
+        FIFO out, optional same-signature micro-batching."""
+        k = self.microbatch[i]
+        carry: Any = None
         while True:
-            item = q_in.get()
+            item = carry if carry is not None else q_in.get()
+            carry = None
             if item is _SHUTDOWN:
                 q_out.put(_SHUTDOWN)
                 return
-            if item is _BATCH_END:
-                q_out.put(item)
+            key = (_microbatch_key(item[1])
+                   if k > 1 and not self._mb_unstackable[i] else None)
+            if key is None:
+                q_out.put(self._apply(i, slot, item))
                 continue
-            q_out.put(self._apply(i, slot, item))
+            bucket = [item]
+            deadline: Optional[float] = None
+            while len(bucket) < k:
+                try:
+                    nxt = q_in.get_nowait()
+                except queue.Empty:
+                    if self.microbatch_wait_s <= 0.0:
+                        break
+                    if deadline is None:
+                        deadline = time.monotonic() + self.microbatch_wait_s
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0.0:
+                        break
+                    try:
+                        nxt = q_in.get(timeout=remaining)
+                    except queue.Empty:
+                        break
+                if nxt is _SHUTDOWN or _microbatch_key(nxt[1]) != key:
+                    carry = nxt     # keep FIFO: process after this bucket
+                    break
+                bucket.append(nxt)
+            if len(bucket) == 1:
+                q_out.put(self._apply(i, slot, item))
+            else:
+                for env in self._apply_batched(i, slot, bucket):
+                    q_out.put(env)
 
     def _dispatcher(self, q_in: queue.Queue,
                     wqs: List[queue.Queue]) -> None:
-        """Round-robin fan-out of one stage's input onto its replicas.
-
-        Batch ends travel as an _EndOfBatch carrying the per-batch envelope
-        count, routed through a worker queue like any item; the merge holds
-        it until every sequence number below the count has been emitted, so
-        it cannot overtake in-flight work on other replicas."""
+        """Round-robin fan-out of one stage's input onto its replicas."""
         rr = 0
-        count = 0
         while True:
             item = q_in.get()
             if item is _SHUTDOWN:
                 for q in wqs:
                     q.put(_SHUTDOWN)
                 return
-            if item is _BATCH_END:
-                wqs[rr].put(_EndOfBatch(count))
-                count = 0
-                continue
             wqs[rr].put(item)
             rr = (rr + 1) % len(wqs)
-            count += 1
-
-    def _replica_worker(self, i: int, wq: queue.Queue, mq: queue.Queue,
-                        slot: int) -> None:
-        while True:
-            item = wq.get()
-            if item is _SHUTDOWN:
-                mq.put(_SHUTDOWN)
-                return
-            if isinstance(item, _EndOfBatch):
-                mq.put(item)
-                continue
-            mq.put(self._apply(i, slot, item))
 
     def _merge(self, mq: queue.Queue, q_out: queue.Queue, k: int) -> None:
         """Order-restoring fan-in: buffer out-of-order envelopes, emit by
-        sequence number; collapse k shutdown markers into one."""
+        monotonic stream sequence; collapse k shutdown markers into one.
+
+        ``next_seq`` advances for the executor's whole lifetime — there is
+        no batch boundary to reset it at, which is what lets envelopes from
+        different callers overlap in flight through a replicated stage."""
         shutdowns = 0
         buf: Dict[int, Any] = {}
         next_seq = 0
-        end_at: Optional[int] = None
         while True:
             item = mq.get()
             if item is _SHUTDOWN:
@@ -258,80 +459,116 @@ class PipelineExecutor:
                     q_out.put(_SHUTDOWN)
                     return
                 continue
-            if isinstance(item, _EndOfBatch):
-                end_at = item.count
-            else:
-                seq, payload = item
-                buf[seq] = payload
+            seq, payload = item
+            buf[seq] = payload
             while next_seq in buf:
                 q_out.put((next_seq, buf.pop(next_seq)))
                 next_seq += 1
-            if end_at is not None and next_seq == end_at:
-                q_out.put(_BATCH_END)
-                end_at = None
-                next_seq = 0
+
+    def _collector(self, q_tail: queue.Queue,
+                   pending: Dict[int, Any]) -> None:
+        """Tail thread: complete each item's completion target as it exits
+        the last stage — a Future (submit) gets the result or the original
+        stage exception; a batch sink (run_batch) gets the raw payload."""
+        while True:
+            item = q_tail.get()
+            if item is _SHUTDOWN:
+                return
+            seq, payload = item
+            entry = pending.pop(seq, None)
+            if entry is None:
+                continue
+            if isinstance(entry, Future):
+                try:
+                    if isinstance(payload, _Failed):
+                        entry.set_exception(payload.error)
+                    else:
+                        entry.set_result(payload)
+                except Exception:
+                    pass    # already failed by a concurrent stop()
+            else:
+                sink, idx = entry
+                sink.deliver(idx, payload)
+
+    # -- accounting ----------------------------------------------------------
+    def busy_snapshot(self) -> List[float]:
+        """Monotonic per-stage busy seconds (summed over replicas).
+        Measure an interval as the delta of two snapshots."""
+        return [sum(slots) for slots in self._busy]
+
+    def microbatch_snapshot(self) -> Dict[str, List[int]]:
+        """Monotonic per-stage micro-batching counters (summed over
+        replicas): stacked calls and the items they covered (items/calls
+        = realized amortization)."""
+        return {"calls": [sum(s) for s in self._mb_calls],
+                "items": [sum(s) for s in self._mb_items]}
 
     # -- batches -------------------------------------------------------------
     def run_batch(self, inputs: Sequence[Any],
                   collect_stage_times: bool = False
                   ) -> Tuple[List[Any], Optional[List[float]]]:
-        """Push `inputs` through the pipeline; returns (outputs, stage_busy_s).
+        """Admit `inputs` into the stream and gather their futures; returns
+        (outputs, stage_busy_s).
 
         Outputs preserve input order: unreplicated stages are in-order
-        queues, replicated stages restore order at their merge, so the
-        output stream is identical to the unreplicated pipeline's.
-        ``stage_busy_s[i]`` is the total busy time of stage i *for this
-        batch*, summed over its replicas — the paper's Fig. 10 metric.  If
-        any stage raised, the first exception (in submission order) is
-        re-raised after the batch fully drains (so the executor stays
-        reusable).  Creates no threads: feeding interleaves with collection
-        (non-blocking puts), so batches larger than the queue capacity
-        cannot deadlock the single caller thread.
+        queues, replicated stages restore order at their merge, and futures
+        are gathered in submission order, so the output list is identical
+        to the historical batch-synchronous executor's.  If any stage
+        raised, the first exception (in submission order) is re-raised
+        after every item of the batch has drained (so the executor stays
+        reusable).  ``stage_busy_s[i]`` is the busy_snapshot() delta across
+        the batch — equal to the batch's own busy time when no other
+        traffic interleaves.  Creates no threads and takes no barrier:
+        another caller's items may flow through the same stream
+        concurrently.
         """
-        with self._lock:
-            if not self._started:
-                self.start()
-            n = self.n_stages
-            for slots in self._busy:
-                for j in range(len(slots)):
-                    slots[j] = 0.0
-            q_in, q_out = self._queues[0], self._queues[n]
-            items = list(inputs)
-            fed = 0
-            end_sent = False
-            outputs: List[Any] = []
-            errors: List[BaseException] = []
-            while True:
-                # feed as much as fits without blocking
-                while fed < len(items):
+        if not self._started:
+            self.start()
+        snap0 = self.busy_snapshot() if collect_stage_times else None
+        items = list(inputs)
+        n = len(items)
+        outputs: List[Any] = []
+        errors: List[BaseException] = []
+        if n:
+            # same admission as submit(), but completions land in one
+            # shared batch sink (a slot per item + one Event) instead of a
+            # Future each — the steady-state gather costs one lock op per
+            # item, not a condition variable round-trip
+            sink = _BatchSink(n)
+            with self._submit_lock:
+                if self._draining or not self._started:
+                    raise RuntimeError(f"{self.name}: executor is stopping")
+                seqs = [next(self._seq) for _ in range(n)]
+                for idx, seq in enumerate(seqs):
+                    self._pending[seq] = (sink, idx)
+            q_in = self._queues[0]
+            stranded = False
+            for seq, x in zip(seqs, items):   # blocking puts: backpressure
+                while not stranded:
                     try:
-                        q_in.put_nowait((fed, items[fed]))
-                    except queue.Full:
+                        q_in.put((seq, x), timeout=0.1)
                         break
-                    fed += 1
-                if fed == len(items) and not end_sent:
-                    try:
-                        q_in.put_nowait(_BATCH_END)
-                        end_sent = True
                     except queue.Full:
-                        pass
-                # collect; poll only while we still owe the pipeline input
-                try:
-                    item = q_out.get() if end_sent else q_out.get(timeout=0.02)
-                except queue.Empty:
-                    continue
-                if item is _BATCH_END:
+                        # a concurrent stop() may have shut the workers
+                        # down under us: our registered entries get
+                        # PipelineStopped from stop(), so bail out rather
+                        # than block on a dead queue
+                        stranded = self._draining or not self._started
+                if stranded:
                     break
-                _seq, payload = item
+            sink.done.wait()
+            for slot in sink.slots:
+                payload = slot[0]
                 if isinstance(payload, _Failed):
                     errors.append(payload.error)
                 else:
                     outputs.append(payload)
-            if errors:
-                raise errors[0]
-            busy = ([sum(slots) for slots in self._busy]
-                    if collect_stage_times else None)
-            return outputs, busy
+        if errors:
+            raise errors[0]
+        busy = None
+        if collect_stage_times and snap0 is not None:
+            busy = [b - a for a, b in zip(snap0, self.busy_snapshot())]
+        return outputs, busy
 
     def timed_run(self, inputs: Sequence[Any]) -> Tuple[List[Any], float, List[float]]:
         t0 = time.perf_counter()
@@ -354,7 +591,13 @@ def simulated_stage(latency_s: float) -> Callable[[Any], Any]:
 
 
 def stage_balance_metrics(stage_times: Sequence[float]) -> dict:
-    """Paper Fig. 10 metrics: slowest stage time and deviation from mean."""
+    """Paper Fig. 10 metrics: slowest stage time and deviation from mean.
+
+    An empty sequence (e.g. a snapshot interval in which no stage ran)
+    yields the neutral record rather than raising."""
+    if not stage_times:
+        return {"max_stage_s": 0.0, "mean_stage_s": 0.0,
+                "max_minus_mean_s": 0.0, "balance": 1.0}
     mx = max(stage_times)
     mean = sum(stage_times) / len(stage_times)
     return {"max_stage_s": mx, "mean_stage_s": mean,
@@ -370,6 +613,31 @@ def _shape_key(x: Any) -> Any:
     return type(x).__name__
 
 
+def _microbatch_key(payload: Any) -> Optional[Any]:
+    """Bucketing key for dynamic micro-batching, or None when the payload
+    cannot join a stacked call: failed envelopes forward untouched, and
+    only array payloads with a leading (batch) axis stack."""
+    if isinstance(payload, _Failed):
+        return None
+    shape = getattr(payload, "shape", None)
+    if shape is None or len(shape) == 0 or not hasattr(payload, "dtype"):
+        return None
+    return (tuple(shape), str(payload.dtype))
+
+
+def _array_namespace(x: Any):
+    """numpy for numpy arrays; jax.numpy (lazily) for device arrays, so
+    stacking stays on-device; numpy as the generic fallback."""
+    import numpy as np
+    if isinstance(x, np.ndarray):
+        return np
+    try:
+        import jax.numpy as jnp
+        return jnp
+    except Exception:       # pragma: no cover - jax is a core dep here
+        return np
+
+
 class ShapeKeyedStageCache:
     """Memoize built (typically jitted) stage callables per input signature.
 
@@ -378,7 +646,9 @@ class ShapeKeyedStageCache:
     wastes startup time and tracing.  ``get(name, x, build)`` builds the
     stage callable at most once per (stage name, input shape/dtype) and
     returns the cached callable afterwards, so steady-state batches reuse
-    the already-traced function.
+    the already-traced function.  Micro-batched stages compose naturally:
+    the stacked array is just another signature, so each realized bucket
+    size gets its own traced callable.
     """
 
     def __init__(self) -> None:

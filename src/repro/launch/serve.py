@@ -7,8 +7,11 @@ Demonstrates the paper's full deployment story at LM scale, on CPU:
 2. split the stacked block params by the plan; one host thread per stage
    with queues between (paper Fig. 5 executor) — or the SPMD
    shard_map/ppermute pipeline with ``--spmd`` (needs >=stages devices);
-3. serve a multi-request batch: prefill through the pipeline, report
-   per-stage busy times (paper Fig. 10 metric) and throughput.
+3. serve a *stream* of requests: each request is admitted into the
+   pipeline as it arrives (no inter-batch barrier) and completes its own
+   future; report throughput, per-request latency percentiles, and
+   per-stage busy times (paper Fig. 10 metric) from the server's
+   monotonic-counter snapshot() deltas.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b \
         --stages 4 --requests 15
@@ -87,6 +90,12 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--strategy", default="balanced",
                     choices=["balanced", "balanced_norefine", "comp"])
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="stage-level dynamic micro-batching bucket size "
+                         "(stack up to k same-shape in-flight requests "
+                         "into one jitted call; 1 = off)")
+    ap.add_argument("--microbatch-wait-ms", type=float, default=2.0,
+                    help="max hold time for a micro-batch bucket to fill")
     ap.add_argument("--device-budget", type=int, default=0,
                     help="plan over this many devices with replicated "
                          "bottleneck stages (plan_placement; 0 = off, use "
@@ -118,18 +127,31 @@ def main() -> None:
                            key=jax.random.PRNGKey(i),
                            kind="prefill")["tokens"]
             for i in range(args.requests)]
-    # persistent executor: stage workers live for the whole serving session;
-    # steady-state batches create zero threads
-    with PipelinedModelServer(pl, fns, max_batch=args.requests) as server:
-        # warmup (jit) then timed batch
-        server.serve_batch(reqs[:1])
+    # persistent streaming executor: stage workers live for the whole
+    # serving session; requests are admitted continuously (no barrier)
+    with PipelinedModelServer(pl, fns, max_batch=args.requests,
+                              max_wait_s=0.005,
+                              microbatch=args.microbatch,
+                              microbatch_wait_s=args.microbatch_wait_ms
+                              / 1e3) as server:
+        server.serve_batch(reqs[:1])           # warmup (jit)
+        server.start()                          # admission loop
+        server.snapshot()                       # reset the delta window
         t0 = time.perf_counter()
-        outs = server.serve_batch(reqs)
+        pending = [server.submit(r) for r in reqs]
+        for req in pending:
+            assert req.event.wait(300), f"request {req.rid} timed out"
         dt = time.perf_counter() - t0
-        busy = server.stats["stage_busy_s"]
+        snap = server.snapshot()
+        assert all(r.error is None for r in pending)
+        outs = [r.result for r in pending]
+        busy = snap["stage_busy_s"]
         metrics = stage_balance_metrics(busy)
+        lat = snap["latency"]
         print(f"{len(outs)} requests in {dt*1e3:.1f} ms "
-              f"({len(outs)/dt:.1f} req/s)")
+              f"({snap['throughput_rps']:.1f} req/s)")
+        print(f"latency p50/p95/p99 (ms): {lat['p50_s']*1e3:.1f} / "
+              f"{lat['p95_s']*1e3:.1f} / {lat['p99_s']*1e3:.1f}")
         print(f"stage busy (s): {[round(b,4) for b in busy]}")
         print(f"balance (mean/max): {metrics['balance']:.3f}")
 

@@ -11,12 +11,16 @@
   O(d log sum P) balanced split.  The paper's §2.2 argument — *fast*
   partitioning enables dynamic edge deployments — is exactly what makes
   replan-on-resize viable here (ms-scale, vs profiling-based partitioners).
+  :meth:`ElasticPlanner.resize_server` drives a live streaming
+  ``PipelinedModelServer`` through a resize: replan, rebuild the stage
+  functions, and hot-swap the server's executor (in-flight requests drain
+  first; requests still queued are served by the new plan).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 from ..checkpoint import CheckpointStore
 from ..core.graph import LayerGraph
@@ -125,3 +129,18 @@ class ElasticPlanner:
     def on_resize(self, healthy_devices: int) -> PlacementPlan:
         """Called by the serving loop when devices join/leave."""
         return self.plan_for(max(1, healthy_devices))
+
+    def resize_server(self, server: Any,
+                      stage_fn_builder: Callable[[PlacementPlan],
+                                                 List[Callable]],
+                      healthy_devices: int,
+                      drain_timeout: float = 30.0) -> PlacementPlan:
+        """Elastic hook for a live streaming server: replan for the
+        surviving devices, build the new per-stage functions, and hot-swap
+        the server's executor via ``server.reconfigure`` (admission pauses,
+        in-flight requests drain, queued requests are served by the new
+        plan).  Returns the new plan."""
+        pl = self.on_resize(healthy_devices)
+        server.reconfigure(pl, stage_fn_builder(pl),
+                           drain_timeout=drain_timeout)
+        return pl

@@ -1,3 +1,6 @@
-from .server import MicroBatcher, PipelinedModelServer, Request
+from .server import (MicroBatcher, PipelinedModelServer, Request,
+                     latency_percentiles)
+from ..core.pipeline import PipelineStopped
 
-__all__ = ["Request", "MicroBatcher", "PipelinedModelServer"]
+__all__ = ["Request", "MicroBatcher", "PipelinedModelServer",
+           "PipelineStopped", "latency_percentiles"]

@@ -1,31 +1,52 @@
-"""Batched-request serving loop over the segmented pipeline.
+"""Streaming request serving over the segmented pipeline.
 
 This is the paper's deployment shape (§5.1): "it is common to have several
 data sources gathering data at once that allow forming a small batch for
-each read period (e.g., many cameras for object detection)".
+each read period (e.g., many cameras for object detection)" — extended from
+batch-synchronous to *continuous admission*: requests flow from the batcher
+straight into the executor's stream (``PipelineExecutor.submit``), so the
+pipeline never drains and refills at a batch boundary and every stage stays
+fed under load.
 
 * :class:`MicroBatcher` — gathers requests into a batch of up to
-  ``max_batch``, waiting at most ``max_wait_s`` (latency bound).
+  ``max_batch``, waiting at most ``max_wait_s`` from *entry* (latency
+  bound).  Under the streaming server this bounds admission-loop wakeups,
+  not pipeline occupancy: admitted requests overlap in flight regardless
+  of which gather window they arrived in.
 * :class:`PipelinedModelServer` — a PlacementPlan + per-stage functions
-  (from GraphModel.apply_subset or the LM stage executor), the host
-  pipeline executor, optional straggler hedging, and an elastic hook: if a
-  stage executor dies, the plan is re-derived for the surviving devices
-  (ElasticPlanner) and serving continues.  Replicated stages in the plan
-  (``replicas > 1``) map onto the executor's round-robin fan-out: the
-  stage function is shared by k workers, so it must be thread-safe (jitted
-  JAX callables are).
+  (from GraphModel.apply_subset or the LM stage executor) over a persistent
+  streaming executor.  An admission thread moves requests from the batcher
+  into the stream; each request's future completes it individually
+  (``Request.event`` / ``Request.result`` / ``Request.error``) with
+  per-request latency recorded.  Busy-time and request accounting are
+  monotonic counters; :meth:`PipelinedModelServer.snapshot` returns deltas
+  (throughput, per-stage busy seconds, latency percentiles) since the last
+  snapshot.  Replicated stages in the plan (``replicas > 1``) map onto the
+  executor's round-robin fan-out — the stage function is shared by k
+  workers, so it must be thread-safe (jitted JAX callables are) — and
+  ``microbatch`` enables the executor's shape-bucketed dynamic
+  micro-batching for accelerator stages.  The elastic hook
+  (:meth:`reconfigure`, driven by ``runtime.ft.ElasticPlanner``) drains
+  in-flight work and hot-swaps the plan + stage functions when the device
+  pool resizes.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import queue
 import threading
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from collections import deque
+from typing import (Any, Callable, Dict, List, Optional, Sequence, Union)
 
-from ..core.pipeline import PipelineExecutor
+from ..core.pipeline import PipelineExecutor, PipelineStopped
 from ..core.planner import PlacementPlan
+
+# process-wide request ids: ``id(payload)`` collided when payload objects
+# were reused (or GC'd and their addresses recycled) across requests
+_RID = itertools.count()
 
 
 @dataclasses.dataclass
@@ -34,6 +55,7 @@ class Request:
     payload: Any
     t_submit: float = dataclasses.field(default_factory=time.perf_counter)
     result: Any = None
+    error: Optional[BaseException] = None
     t_done: Optional[float] = None
     event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -50,18 +72,20 @@ class MicroBatcher:
         self.q: "queue.Queue[Request]" = queue.Queue()
 
     def submit(self, payload: Any, rid: Optional[int] = None) -> Request:
-        req = Request(rid=rid if rid is not None else id(payload),
+        req = Request(rid=rid if rid is not None else next(_RID),
                       payload=payload)
         self.q.put(req)
         return req
 
     def next_batch(self, block: bool = True) -> List[Request]:
+        # the deadline starts at entry: the wait for the *first* request
+        # counts against it, so the worst case is max_wait_s, not 2x
+        deadline = time.perf_counter() + self.max_wait_s
         batch: List[Request] = []
         try:
             batch.append(self.q.get(block=block, timeout=self.max_wait_s))
         except queue.Empty:
             return batch
-        deadline = time.perf_counter() + self.max_wait_s
         while len(batch) < self.max_batch:
             remaining = deadline - time.perf_counter()
             if remaining <= 0:
@@ -73,27 +97,72 @@ class MicroBatcher:
         return batch
 
 
-class PipelinedModelServer:
-    """Serve batched requests through the stage pipeline of a plan.
+def latency_percentiles(latencies_s: Sequence[float]) -> Dict[str, float]:
+    """p50/p95/p99 (+ mean/max) of a latency sample, in seconds.
+    Empty samples yield an all-zero record."""
+    if not latencies_s:
+        return {"n": 0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0,
+                "mean_s": 0.0, "max_s": 0.0}
+    xs = sorted(latencies_s)
+    n = len(xs)
 
-    Owns a *persistent* :class:`PipelineExecutor`: stage worker threads and
-    queues are created once and reused for every batch, so the steady-state
-    serving loop creates zero threads per batch.  Use as a context manager
-    (or call :meth:`stop`) for a clean shutdown."""
+    def pct(p: float) -> float:
+        # nearest-rank: smallest x with at least p*n samples <= x
+        return xs[min(n - 1, max(0, math.ceil(p * n) - 1))]
+
+    return {"n": n, "p50_s": pct(0.50), "p95_s": pct(0.95),
+            "p99_s": pct(0.99), "mean_s": sum(xs) / n, "max_s": xs[-1]}
+
+
+class PipelinedModelServer:
+    """Serve a continuous request stream through the stage pipeline of a
+    plan.
+
+    Owns a *persistent streaming* :class:`PipelineExecutor`: stage worker
+    threads and queues are created once; requests are admitted into the
+    stream as they arrive (no inter-batch barrier) and completed
+    individually by the executor's collector.  Use as a context manager
+    (or call :meth:`stop`) for a clean shutdown — in-flight requests are
+    then completed with :class:`PipelineStopped` rather than left hanging.
+    """
 
     def __init__(self, plan: PlacementPlan,
                  stage_fns: Sequence[Callable[[Any], Any]],
-                 max_batch: int = 15, max_wait_s: float = 0.02):
+                 max_batch: int = 15, max_wait_s: float = 0.02,
+                 queue_size: int = 64,
+                 microbatch: Optional[Union[int, Sequence[int]]] = None,
+                 microbatch_wait_s: float = 0.0,
+                 latency_window: int = 4096):
         assert len(stage_fns) == plan.n_stages
         self.plan = plan
-        self.executor = PipelineExecutor(
-            stage_fns, name=f"serve-{plan.graph_name}",
-            replicas=getattr(plan, "replica_counts", None))
+        self.stage_fns = list(stage_fns)
+        self.queue_size = queue_size
+        self.microbatch = microbatch
+        self.microbatch_wait_s = microbatch_wait_s
+        self.executor = self._make_executor(plan, self.stage_fns)
         self.batcher = MicroBatcher(max_batch, max_wait_s)
-        self._stop = threading.Event()
+        self._stop_evt = threading.Event()
+        self._admission = threading.Lock()   # held to pause admission
         self._thread: Optional[threading.Thread] = None
+        # monotonic counters; read intervals via snapshot() deltas
         self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
-                                      "stage_busy_s": [0.0] * plan.n_stages}
+                                      "completed": 0, "failed": 0}
+        self._stats_lock = threading.Lock()
+        self._recent_lat: deque = deque(maxlen=latency_window)
+        self._window_lat: List[float] = []
+        self._snap_state = {"t": time.perf_counter(),
+                            "busy": self.executor.busy_snapshot(),
+                            "requests": 0, "failed": 0}
+
+    def _make_executor(self, plan: PlacementPlan,
+                       stage_fns: Sequence[Callable[[Any], Any]]
+                       ) -> PipelineExecutor:
+        return PipelineExecutor(
+            stage_fns, queue_size=self.queue_size,
+            name=f"serve-{plan.graph_name}",
+            replicas=getattr(plan, "replica_counts", None),
+            microbatch=self.microbatch,
+            microbatch_wait_s=self.microbatch_wait_s)
 
     def __enter__(self) -> "PipelinedModelServer":
         self.executor.start()
@@ -104,39 +173,161 @@ class PipelinedModelServer:
 
     # -- synchronous API ------------------------------------------------------
     def serve_batch(self, payloads: Sequence[Any]) -> List[Any]:
-        outs, busy = self.executor.run_batch(payloads,
-                                             collect_stage_times=True)
-        self.stats["batches"] += 1
-        self.stats["requests"] += len(payloads)
-        for i, b in enumerate(busy or []):
-            self.stats["stage_busy_s"][i] += b
-        return outs
+        """Admit a whole batch and wait for it (the paper's §5.1 camera
+        read): outputs in submission order, first error re-raised after the
+        batch drains.  Counts toward the same monotonic stats stream.
+        Admission happens under the admission lock so a concurrent
+        :meth:`reconfigure` cannot stop the executor under our feet; the
+        wait happens outside it so the admission loop keeps flowing."""
+        with self._admission:
+            futures = [self.executor.submit(p) for p in payloads]
+        outputs: List[Any] = []
+        errors: List[BaseException] = []
+        done = 0
+        for fut in futures:
+            try:
+                outputs.append(fut.result())
+                done += 1
+            except BaseException as e:
+                errors.append(e)
+        with self._stats_lock:
+            self.stats["batches"] += 1
+            self.stats["requests"] += len(payloads)
+            self.stats["completed"] += done
+            self.stats["failed"] += len(errors)
+        if errors:
+            raise errors[0]
+        return outputs
 
-    # -- background loop ----------------------------------------------------------
+    # -- streaming API -------------------------------------------------------
     def start(self) -> None:
+        """Start the admission loop: requests flow from the batcher into
+        the executor's stream as they arrive."""
+        if self._thread is not None:
+            return
+        self._stop_evt.clear()
+
         def loop():
-            while not self._stop.is_set():
+            while not self._stop_evt.is_set():
                 batch = self.batcher.next_batch()
                 if not batch:
                     continue
-                outs = self.serve_batch([r.payload for r in batch])
-                now = time.perf_counter()
-                for req, out in zip(batch, outs):
-                    req.result = out
-                    req.t_done = now
-                    req.event.set()
-        self._thread = threading.Thread(target=loop, daemon=True)
+                with self._admission:
+                    for req in batch:
+                        self._admit(req)
+
+        self._thread = threading.Thread(
+            target=loop, daemon=True,
+            name=f"serve-{self.plan.graph_name}-admit")
         self._thread.start()
 
     def submit(self, payload: Any) -> Request:
         return self.batcher.submit(payload)
 
+    def _admit(self, req: Request) -> None:
+        try:
+            fut = self.executor.submit(req.payload)
+        except RuntimeError as e:       # executor stopping under our feet
+            self._finish(req, None, PipelineStopped(str(e)))
+            return
+        fut.add_done_callback(
+            lambda f, r=req: self._on_done(r, f))
+
+    def _on_done(self, req: Request, fut) -> None:
+        try:
+            self._finish(req, fut.result(), None)
+        except BaseException as e:
+            self._finish(req, None, e)
+
+    def _finish(self, req: Request, result: Any,
+                error: Optional[BaseException]) -> None:
+        req.result = result
+        req.error = error
+        req.t_done = time.perf_counter()
+        lat = req.t_done - req.t_submit
+        with self._stats_lock:
+            self.stats["requests"] += 1
+            if error is None:
+                self.stats["completed"] += 1
+            else:
+                self.stats["failed"] += 1
+            self._recent_lat.append(lat)
+            self._window_lat.append(lat)
+        req.event.set()
+
+    # -- accounting ----------------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """Deltas since the previous snapshot: requests finished,
+        throughput, per-stage busy seconds, and latency percentiles over
+        the interval's completed requests.  Counters stay monotonic — this
+        is the only reset-free way to watch a continuous stream.
+
+        Taken under the admission lock so a concurrent :meth:`reconfigure`
+        cannot swap the executor between reading its busy counters and
+        rebasing ``_snap_state`` (which would yield negative deltas)."""
+        with self._admission:
+            return self._snapshot_locked()
+
+    def _snapshot_locked(self) -> Dict[str, Any]:
+        now = time.perf_counter()
+        busy = self.executor.busy_snapshot()
+        with self._stats_lock:
+            window = self._window_lat
+            self._window_lat = []
+            requests = self.stats["requests"]
+            failed = self.stats["failed"]
+        prev = self._snap_state
+        dt = now - prev["t"]
+        done = requests - prev["requests"]
+        snap = {
+            "dt_s": dt,
+            "requests": done,
+            "failed": failed - prev["failed"],
+            "throughput_rps": (done / dt) if dt > 0 else 0.0,
+            "stage_busy_s": [b - a for a, b in zip(prev["busy"], busy)],
+            "latency": latency_percentiles(window),
+        }
+        self._snap_state = {"t": now, "busy": busy,
+                            "requests": requests, "failed": failed}
+        return snap
+
+    # -- elastic hook --------------------------------------------------------
+    def reconfigure(self, plan: PlacementPlan,
+                    stage_fns: Sequence[Callable[[Any], Any]],
+                    drain_timeout: float = 30.0) -> None:
+        """Hot-swap the plan + stage functions (elastic resize): pause
+        admission, let in-flight requests drain, then replace the executor.
+        Requests still queued in the batcher are served by the new plan."""
+        assert len(stage_fns) == plan.n_stages
+        with self._admission:
+            deadline = time.monotonic() + drain_timeout
+            while (self.executor.in_flight
+                   and time.monotonic() < deadline):
+                time.sleep(0.001)
+            self.executor.stop(
+                timeout=max(0.1, deadline - time.monotonic()))
+            self.plan = plan
+            self.stage_fns = list(stage_fns)
+            self.executor = self._make_executor(plan, self.stage_fns)
+            self.executor.start()
+            # rebase busy deltas onto the new executor's counters
+            self._snap_state["busy"] = self.executor.busy_snapshot()
+
     def stop(self) -> None:
-        """Stop the background loop and shut down the stage workers."""
-        self._stop.set()
+        """Stop the admission loop and shut down the stage workers.
+        In-flight requests complete with :class:`PipelineStopped`;
+        never-admitted requests still waiting in the batcher do too."""
+        self._stop_evt.set()
         if self._thread:
             self._thread.join(timeout=5)
             self._thread = None
         self.executor.stop()
+        while True:
+            try:
+                req = self.batcher.q.get_nowait()
+            except queue.Empty:
+                break
+            self._finish(req, None,
+                         PipelineStopped("server stopped before admission"))
 
     close = stop

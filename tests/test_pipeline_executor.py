@@ -15,21 +15,23 @@ from repro.models.cnn import synthetic_cnn
 
 def test_steady_state_creates_no_threads():
     ex = PipelineExecutor([lambda x: x + 1, lambda x: x * 2, lambda x: x - 1])
-    ex.run_batch([0])                       # warm: spawns the 3 stage workers
+    ex.run_batch([0])             # warm: spawns stage workers + collector
     n0 = threading.active_count()
     for _ in range(20):
         outs, _ = ex.run_batch(list(range(15)))
         assert outs == [(i + 1) * 2 - 1 for i in range(15)]
         assert threading.active_count() == n0
     ex.stop()
-    assert threading.active_count() == n0 - ex.n_stages
+    # stage workers + tail collector are gone
+    assert ex.n_threads == ex.n_stages + 1
+    assert threading.active_count() == n0 - ex.n_threads
 
 
 def test_context_manager_clean_shutdown():
     baseline = threading.active_count()
     with PipelineExecutor([simulated_stage(0.001), simulated_stage(0.001)]) as ex:
         assert ex.started
-        assert threading.active_count() == baseline + 2
+        assert threading.active_count() == baseline + ex.n_threads
         outs, _ = ex.run_batch([1, 2, 3])
         assert outs == [1, 2, 3]
     assert not ex.started
