@@ -8,7 +8,7 @@ overloaded segments."""
 from __future__ import annotations
 
 from repro import configs
-from repro.core import plan
+from repro.api import DeploymentSpec, plan
 from repro.models.lm_graph import lm_layer_graph
 
 from .common import emit
@@ -22,8 +22,9 @@ def run() -> None:
         for n in (4, 8, 16):
             if n >= g.depth:
                 continue
-            comp = plan(g, n, "comp")
-            bal = plan(g, n, "balanced_norefine")
+            comp = plan(DeploymentSpec(stages=n, strategy="comp"), graph=g)
+            bal = plan(DeploymentSpec(stages=n,
+                                      strategy="balanced_norefine"), graph=g)
             mx_c = max(comp.stage_params)
             mx_b = max(bal.stage_params)
             rows.append({

@@ -18,14 +18,13 @@ import time
 import jax
 
 from repro import configs
+from repro.api import DeploymentSpec, deploy
 from repro.configs.common import concrete_batch
-from repro.core import plan
 from repro.core.pipeline import (PipelineExecutor, simulated_stage,
                                  stage_balance_metrics)
 from repro.launch.serve import make_stage_fns
 from repro.launch.pipeline_spmd import stage_block_counts
 from repro.models import api, lm_graph
-from repro.serving import PipelinedModelServer
 
 from .common import emit
 
@@ -135,10 +134,13 @@ def run(arch: str = "qwen3-1.7b", stages: int = 4, requests: int = 15,
 
     rows = []
     for strat in ("comp", "balanced_norefine"):
-        pl = plan(g, stages, strat)
+        spec = DeploymentSpec(stages=stages, strategy=strat,
+                              max_batch=requests)
+        dep = deploy(spec, graph=g, stage_fn_builder=lambda p: make_stage_fns(
+            cfg, params, stage_block_counts(p, cfg.n_layers)))
+        pl = dep.plan
         counts = stage_block_counts(pl, cfg.n_layers)
-        fns = make_stage_fns(cfg, params, counts)
-        with PipelinedModelServer(pl, fns, max_batch=requests) as srv:
+        with dep.serve() as srv:
             srv.serve_batch(reqs[:1])          # warm the jits
             srv.snapshot()                     # reset the delta window
             t0 = time.perf_counter()

@@ -29,8 +29,8 @@ import os
 import time
 from typing import Dict, List, Optional
 
-from repro.core import EdgeTPUModel, PipelineExecutor, Topology, \
-    plan_placement, simulated_stage
+from repro.api import DeploymentSpec, plan
+from repro.core import EdgeTPUModel, PipelineExecutor, simulated_stage
 from repro.core.segmentation import minimax_time_split
 from repro.models.cnn import REAL_CNNS
 
@@ -69,7 +69,9 @@ def bench_model(name: str) -> Dict:
     budget = s_pin + 1
     cuts_nr = minimax_time_split(d, budget, m.segment_time, exact=True)
     t_nonrep = max(m.stage_times(cuts_nr))
-    pl = plan_placement(g, Topology.homogeneous(budget), replicate=True)
+    pl = plan(DeploymentSpec(strategy="placement", device_budget=budget,
+                             replicate=True), graph=g,
+              attach_report=False)      # timed: plan search only, as before
     t_rep = pl.max_stage_time_s
     dt = time.perf_counter() - t0
     return {

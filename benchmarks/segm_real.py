@@ -7,7 +7,8 @@ per-inference), speedups absolute and normalized, and the paper's reported
 numbers side-by-side where available."""
 from __future__ import annotations
 
-from repro.core import EdgeTPUModel, plan
+from repro.api import DeploymentSpec, plan
+from repro.core import EdgeTPUModel
 from repro.core.planner import min_stages_no_spill
 from repro.models.cnn import REAL_CNNS
 
@@ -46,7 +47,8 @@ def run() -> None:
         rec = {"model": name, "n_tpus": n, "paper_n": paper[0],
                "t1_ms": round(t1, 2), "paper_t1_ms": paper[1]}
         for strat in ("comp", "balanced", "balanced_cost"):
-            pl = plan(g, n, strat, tpu_model=m)
+            pl = plan(DeploymentSpec(stages=n, strategy=strat),
+                      graph=g, tpu_model=m)
             mems = m.stage_memories(pl.cuts)
             host = sum(r.host_bytes for r in mems) / MIB
             t = m.pipeline_batch_time(pl.cuts, batch=15) / 15 * 1e3

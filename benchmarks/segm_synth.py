@@ -2,7 +2,8 @@
 Table 6 + Fig. 7 (SEGM_PROF), plus SEGM_BALANCED for comparison."""
 from __future__ import annotations
 
-from repro.core import EdgeTPUModel, plan
+from repro.api import DeploymentSpec, plan
+from repro.core import EdgeTPUModel
 from repro.models.cnn import synthetic_cnn
 
 from .common import emit
@@ -21,7 +22,8 @@ def run() -> None:
         m = EdgeTPUModel(g)
         row = {"size_mib": round(g.total_bytes / MIB, 2)}
         for strat in ("comp", "balanced"):
-            pl = plan(g, 4, strat, tpu_model=m)
+            pl = plan(DeploymentSpec(stages=4, strategy=strat),
+                      graph=g, tpu_model=m)
             mems = m.stage_memories(pl.cuts)
             row[f"{strat}_dev_mib"] = "|".join(
                 f"{r.device_bytes/MIB:.2f}" for r in mems)
@@ -41,7 +43,8 @@ def run() -> None:
                "t1_ms": round(m.single_tpu_time() * 1e3, 2)}
         for n in (2, 3, 4):
             for strat in ("comp", "prof", "balanced"):
-                pl = plan(g, n, strat, tpu_model=m)
+                pl = plan(DeploymentSpec(stages=n, strategy=strat),
+                          graph=g, tpu_model=m)
                 row[f"{strat}_x{n}"] = round(m.speedup(pl.cuts, batch=15), 2)
         sp_rows.append(row)
     emit("fig6_fig7_synthetic_speedups", sp_rows,

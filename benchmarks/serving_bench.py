@@ -43,7 +43,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import PipelineExecutor, plan, simulated_stage
+from repro.api import DeploymentSpec, plan
+from repro.core import PipelineExecutor, simulated_stage
 from repro.models.cnn import REAL_CNNS
 from repro.serving import latency_percentiles
 
@@ -62,7 +63,8 @@ def model_stage_latencies(name: str, stages: int) -> List[float]:
     """Modeled per-stage seconds of the balanced plan, rescaled so the
     pacing stage is TARGET_MAX_S (keeps a full bench run in seconds)."""
     g = REAL_CNNS[name]().to_layer_graph()
-    pl = plan(g, stages, "balanced_norefine")
+    pl = plan(DeploymentSpec(stages=stages, strategy="balanced_norefine"),
+              graph=g)
     times = [t for t in pl.stage_times_s if t is not None]
     scale = TARGET_MAX_S / max(times)
     return [t * scale for t in times]

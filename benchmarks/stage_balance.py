@@ -2,7 +2,8 @@
 comp vs balanced (+ beyond-paper cost-balanced), per real model."""
 from __future__ import annotations
 
-from repro.core import EdgeTPUModel, plan
+from repro.api import DeploymentSpec, plan
+from repro.core import EdgeTPUModel
 from repro.core.planner import min_stages_no_spill
 from repro.models.cnn import REAL_CNNS
 
@@ -21,7 +22,8 @@ def run() -> None:
         n = min_stages_no_spill(g, m)
         rec = {"model": name, "n": n}
         for strat in ("comp", "balanced", "balanced_cost"):
-            pl = plan(g, n, strat, tpu_model=m)
+            pl = plan(DeploymentSpec(stages=n, strategy=strat),
+                      graph=g, tpu_model=m)
             ts = m.stage_times(pl.cuts)
             mx, mean = max(ts), sum(ts) / len(ts)
             rec[f"{strat}_max_ms"] = round(mx * 1e3, 2)

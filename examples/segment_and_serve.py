@@ -1,48 +1,54 @@
-"""End-to-end serving driver (the paper's kind: inference): segment an LM
-with SEGM_BALANCED, serve a *continuous request stream* through the
-pipelined executor (per-request futures, no inter-batch barrier), report
-throughput + latency percentiles + stage balance, and demonstrate elastic
-replanning on a live server plus straggler hedging.
+"""End-to-end serving driver (the paper's kind: inference) on the
+``repro.api`` front door: one declarative DeploymentSpec is planned through
+the strategy registry and deployed; the Deployment handle owns the
+streaming server (per-request futures, no inter-batch barrier), reports
+throughput + latency percentiles + stage balance, hot-swaps the live
+server on an elastic resize (``Deployment.reconfigure``), and the
+replicated-bottleneck and straggler-hedging demos ride along.
 
     PYTHONPATH=src python examples/segment_and_serve.py
+    PYTHONPATH=src python examples/segment_and_serve.py --smoke  # CI-sized
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
+from repro.api import Deployment, DeploymentSpec, deploy
 from repro.configs.common import concrete_batch
-from repro.core import PlacementPlan, plan
+from repro.core import PlacementPlan
 from repro.core.pipeline import stage_balance_metrics
 from repro.launch.pipeline_spmd import stage_block_counts
 from repro.launch.serve import make_stage_fns
 from repro.models import api, lm_graph
-from repro.runtime import ElasticPlanner, SpeculativeExecutor
-from repro.serving import PipelinedModelServer
+from repro.runtime import SpeculativeExecutor
 
 
-def main() -> None:
-    arch, stages, n_req, seq = "qwen3-1.7b", 4, 15, 64
+def main(smoke: bool = False) -> None:
+    arch, stages, n_req, seq = "qwen3-1.7b", 4, (6 if smoke else 15), 64
     cfg = configs.get(arch).smoke_config()
     params = api.init(cfg, jax.random.PRNGKey(0))
     g = lm_graph.lm_layer_graph(cfg, seq_len=seq)
 
-    # --- plan + stream ------------------------------------------------------
-    pl = plan(g, stages, "balanced_norefine")
-    counts = stage_block_counts(pl, cfg.n_layers)
-    print("plan:", pl.describe())
+    # --- one declarative spec: model, strategy, serving policy ----------
+    spec = DeploymentSpec(model=f"lm:{arch}:seq={seq}", stages=stages,
+                          strategy="balanced_norefine",
+                          max_batch=n_req, max_wait_s=0.005)
 
     def fns_for(p):
         return make_stage_fns(cfg, params,
                               stage_block_counts(p, cfg.n_layers))
 
-    fns = fns_for(pl)
-    server = PipelinedModelServer(pl, fns, max_batch=n_req,
-                                  max_wait_s=0.005)
+    dep = deploy(spec, graph=g, stage_fn_builder=fns_for)
+    pl = dep.plan
+    print("plan:", pl.describe())
+    print("report:", pl.report.describe())
 
     reqs = [concrete_batch(cfg, seq, 1, key=jax.random.PRNGKey(i),
                            kind="prefill")["tokens"] for i in range(n_req)]
+    server = dep.serve()
     server.serve_batch(reqs[:1])                     # warm the jits
     server.start()                                   # admission loop
     server.snapshot()                                # reset delta window
@@ -65,9 +71,10 @@ def main() -> None:
     assert err < 2e-2, err
     print(f"pipeline output matches direct forward (err {err:.2e})")
 
-    # --- replicated bottleneck stage ----------------------------------------
-    # Hand-build a placement replicating the slowest stage across 2 devices:
-    # the executor round-robins its traffic over 2 workers and restores
+    # --- replicated bottleneck stage ------------------------------------
+    # Hand-build a placement replicating the slowest stage across 2
+    # devices, then wrap it in a Deployment (Deployment.from_plan): the
+    # executor round-robins its traffic over 2 workers and restores
     # stream order, so outputs match the unreplicated run bit-for-bit.
     slowest = max(range(stages), key=lambda i: pl.stages[i].time_s)
     reps = [1] * stages
@@ -75,7 +82,8 @@ def main() -> None:
     pl_rep = PlacementPlan.from_cuts(g, pl.cuts, strategy="replicated",
                                      replicas=reps)
     print(f"\nreplicated plan: {pl_rep.describe()}")
-    with PipelinedModelServer(pl_rep, fns, max_batch=n_req) as srv:
+    dep_rep = Deployment.from_plan(pl_rep, graph=g, stage_fn_builder=fns_for)
+    with dep_rep.serve() as srv:
         srv.serve_batch(reqs[:1])
         outs_rep = srv.serve_batch(reqs)
     same = all(bool(jnp.array_equal(a, b))
@@ -83,28 +91,28 @@ def main() -> None:
     print(f"replicated outputs match unreplicated bit-for-bit: {same}")
     assert same
 
-    # plans serialize: ship them instead of re-planning at startup
+    # specs and plans both serialize: ship a deployment as two JSON
+    # documents instead of re-planning at startup
+    assert DeploymentSpec.from_json(spec.to_json()) == spec
     pl_back = PlacementPlan.from_json(pl_rep.to_json())
     assert pl_back.cuts == pl_rep.cuts
     assert pl_back.replica_counts == pl_rep.replica_counts
-    print("plan JSON round-trip OK")
+    print("spec + plan JSON round-trip OK")
 
-    # --- elastic: a device leaves, hot-swap the live server ------------------
-    ep = ElasticPlanner(g, "balanced_norefine")
+    # --- elastic: a device leaves, hot-swap the live server -------------
     t0 = time.perf_counter()
-    pl3 = ep.resize_server(server, fns_for, stages - 1)
+    pl3 = dep.reconfigure(stages=stages - 1)
     swap_ms = (time.perf_counter() - t0) * 1e3
-    print(f"\nelastic: replanned {stages}->{stages-1} stages in "
-          f"{ep.replan_times[stages-1]*1e3:.2f} ms, live swap {swap_ms:.1f} "
-          f"ms: {pl3.describe()}")
+    print(f"\nelastic: replanned + live-swapped {stages}->{stages-1} "
+          f"stages in {swap_ms:.1f} ms: {pl3.describe()}")
     req = server.submit(reqs[0])                    # served by the new plan
     assert req.event.wait(120) and req.error is None
     err3 = float(jnp.max(jnp.abs(req.result - ref)))
     assert err3 < 2e-2, err3
     print(f"post-resize output still matches (err {err3:.2e})")
-    server.stop()
+    dep.close()
 
-    # --- straggler hedging ----------------------------------------------------
+    # --- straggler hedging ----------------------------------------------
     calls = {"n": 0}
 
     def flaky_stage(x):
@@ -121,4 +129,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests")
+    main(smoke=ap.parse_args().smoke)

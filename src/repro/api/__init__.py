@@ -1,0 +1,26 @@
+"""One front door: declarative DeploymentSpec -> Plan -> Deployment.
+
+::
+
+    from repro.api import DeploymentSpec, plan, deploy
+
+    pl = plan(DeploymentSpec(model="cnn:ResNet50", stages=4,
+                             strategy="opt"))
+    dep = deploy(spec, graph=g, stage_fn_builder=fns_for)
+
+See EXPERIMENTS.md §Deployment API for the migration table from the
+legacy ``repro.core.planner`` entry points.
+"""
+from .spec import DeploymentSpec, resolve_model_graph
+from .report import PlanReport
+from .strategies import (PlanContext, PlanStrategy, available_strategies,
+                         get_strategy, register_strategy)
+from .deploy import Deployment, deploy, plan
+
+__all__ = [
+    "DeploymentSpec", "resolve_model_graph",
+    "PlanReport",
+    "PlanContext", "PlanStrategy", "register_strategy", "get_strategy",
+    "available_strategies",
+    "plan", "deploy", "Deployment",
+]

@@ -1,0 +1,280 @@
+"""The one front door: ``plan(spec) -> PlacementPlan`` and
+``deploy(spec) -> Deployment``.
+
+The paper's pipeline is profile → segment → refine → place → execute; after
+PRs 1-3 that pipeline was exposed as ~10 loose functions whose orchestration
+every consumer hand-copied.  This module is the single typed entry point:
+
+* :func:`plan` — declarative :class:`~repro.api.spec.DeploymentSpec` in,
+  :class:`~repro.core.planner.PlacementPlan` (with an attached
+  :class:`~repro.api.report.PlanReport`) out, dispatched through the
+  strategy registry.
+* :func:`deploy` / :class:`Deployment` — the runtime handle.  It owns
+  executor/server construction so callers never wire
+  ``PipelineExecutor``/``PipelinedModelServer`` by hand, and its
+  :meth:`Deployment.reconfigure` drives the existing hot-swap path
+  (drain in-flight, replan, swap) for elastic resizes.
+
+::
+
+    spec = DeploymentSpec(model="cnn:ResNet50", stages=4, strategy="opt")
+    pl = plan(spec)                       # planning only
+    print(pl.report.describe())
+
+    dep = deploy(spec2, graph=g, stage_fn_builder=fns_for)
+    with dep.serve() as server:           # admission loop + stage workers
+        ...
+        dep.reconfigure(spec2.with_stages(3))   # a device left
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence
+
+from ..core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
+from ..core.graph import LayerGraph
+from ..core.pipeline import PipelineExecutor
+from ..core.planner import PlacementPlan
+from ..core.refine import MemoryReporter
+from .report import PlanReport
+from .spec import DeploymentSpec, resolve_model_graph
+from .strategies import PlanContext, get_strategy
+
+StageFnBuilder = Callable[[PlacementPlan], List[Callable[[Any], Any]]]
+
+
+def plan(spec: DeploymentSpec, *,
+         graph: Optional[LayerGraph] = None,
+         tpu_model: Optional[EdgeTPUModel] = None,
+         reporter: Optional[MemoryReporter] = None,
+         base_spec: Optional[EdgeTPUSpec] = None,
+         attach_report: bool = True) -> PlacementPlan:
+    """Turn a declarative spec into a placement plan.
+
+    ``graph`` overrides ``spec.model`` resolution (pass a live LayerGraph
+    you already built); ``tpu_model``/``reporter``/``base_spec`` override
+    the default analytical device model, the refinement memory reporter,
+    and the per-device constants — runtime objects that cannot live in the
+    JSON spec.  Every registered strategy is reachable; plans are
+    bit-identical to the legacy ``repro.core.planner`` entry points for
+    the same inputs (asserted over all 21 Table-1 models in
+    tests/test_deploy_api.py)."""
+    if graph is None:
+        if spec.model is None:
+            raise ValueError("spec has no model ref; pass plan(spec, "
+                             "graph=...) or set DeploymentSpec.model")
+        graph = resolve_model_graph(spec.model)
+    strategy = get_strategy(spec.strategy)
+    if spec.objective is not None and spec.objective != strategy.objective:
+        raise ValueError(
+            f"spec declares objective {spec.objective!r} but strategy "
+            f"{spec.strategy!r} optimizes {strategy.objective!r}")
+    if strategy.needs_topology and spec.resolved_topology() is None:
+        raise ValueError(f"strategy {spec.strategy!r} plans over a device "
+                         f"topology; set DeploymentSpec.topology or "
+                         f"device_budget")
+    ctx = PlanContext(spec=spec, graph=graph, tpu_model=tpu_model,
+                      reporter=reporter, base_spec=base_spec)
+    pl = strategy.plan(ctx)
+    if attach_report:
+        # price the report with the model the planner itself used (the
+        # tpu_model override included) so the report cannot contradict
+        # the plan; ctx.model() reuses the context's cached instance
+        pl.report = PlanReport.from_plan(pl, base_model=ctx.model())
+    return pl
+
+
+class Deployment:
+    """A planned deployment and the runtime it owns.
+
+    Construction is planning only — no threads, no jit.  Ask for the
+    runtime explicitly:
+
+    * :meth:`executor` — a :class:`PipelineExecutor` wired from the plan
+      (replica fan-out) and the spec's serving policy (queue size,
+      stage-level micro-batching).
+    * :meth:`serve` — a :class:`PipelinedModelServer` over that executor
+      (admission micro-batching, per-request futures, snapshot deltas).
+    * :meth:`reconfigure` — replan for a new spec and hot-swap the live
+      server (in-flight requests drain; queued requests are served by the
+      new plan).
+
+    Stage functions come from ``stage_fns`` (a fixed list) or
+    ``stage_fn_builder`` (rebuilt per plan — required for
+    :meth:`reconfigure`, which changes the stage count).
+    """
+
+    def __init__(self, spec: DeploymentSpec, plan: PlacementPlan, *,
+                 graph: Optional[LayerGraph] = None,
+                 stage_fn_builder: Optional[StageFnBuilder] = None,
+                 stage_fns: Optional[Sequence[Callable]] = None,
+                 tpu_model: Optional[EdgeTPUModel] = None,
+                 reporter=None,
+                 base_spec: Optional[EdgeTPUSpec] = None):
+        self.spec = spec
+        self.plan = plan
+        self.graph = graph
+        self._builder = stage_fn_builder
+        self._fns = list(stage_fns) if stage_fns is not None else None
+        self._server = None
+        # runtime pricing overrides deploy() planned with — re-passed on
+        # every reconfigure() replan so resizes price against the same
+        # device model as the original plan
+        self._tpu_model = tpu_model
+        self._reporter = reporter
+        self._base_spec = base_spec
+        # resize baseline: ``reconfigure(stages=n)`` always derives from
+        # this spec, not from the previous resize's output — a scale-down
+        # that truncated the topology must not cap a later scale-up
+        self._spec_template = spec
+
+    @classmethod
+    def from_plan(cls, plan: PlacementPlan,
+                  spec: Optional[DeploymentSpec] = None, *,
+                  graph: Optional[LayerGraph] = None,
+                  stage_fn_builder: Optional[StageFnBuilder] = None,
+                  stage_fns: Optional[Sequence[Callable]] = None,
+                  tpu_model: Optional[EdgeTPUModel] = None,
+                  reporter: Optional[MemoryReporter] = None,
+                  base_spec: Optional[EdgeTPUSpec] = None
+                  ) -> "Deployment":
+        """Wrap an existing plan (shipped as JSON, hand-built, …) in a
+        deployment handle.  The derived spec must keep :meth:`reconfigure`
+        usable: the plan's strategy tag is adopted when it names a
+        registered strategy (placement tags become a ``device_budget``
+        spec sized to the plan's devices); hand-built tags (``manual``,
+        ``replicated``, …) fall back to ``balanced`` resizes.  Pass
+        ``spec=`` to control this explicitly, and
+        ``tpu_model``/``reporter``/``base_spec`` if the plan was priced
+        against non-default device constants so resizes are too."""
+        if spec is None:
+            try:
+                strat = get_strategy(plan.strategy)
+            except ValueError:
+                strat = None
+            if strat is None:
+                spec = DeploymentSpec(stages=plan.n_stages,
+                                      strategy="balanced")
+            elif strat.needs_topology:
+                spec = DeploymentSpec(strategy=strat.name,
+                                      device_budget=plan.n_devices)
+            else:
+                spec = DeploymentSpec(stages=plan.n_stages,
+                                      strategy=strat.name)
+        return cls(spec, plan, graph=graph,
+                   stage_fn_builder=stage_fn_builder, stage_fns=stage_fns,
+                   tpu_model=tpu_model, reporter=reporter,
+                   base_spec=base_spec)
+
+    @property
+    def server(self):
+        """The live server, or None before :meth:`serve` / after it
+        stopped (stopping through the server's own ``stop()``/``with``
+        counts — the handle checks, it does not need to be told)."""
+        return self._live_server()
+
+    def _live_server(self):
+        if self._server is not None and self._server.stopped:
+            self._server = None            # stopped behind our back
+        return self._server
+
+    def stage_functions(self, plan: Optional[PlacementPlan] = None
+                        ) -> List[Callable]:
+        pl = plan if plan is not None else self.plan
+        if self._builder is not None:
+            return list(self._builder(pl))
+        if self._fns is not None:
+            if len(self._fns) != pl.n_stages:
+                raise ValueError(
+                    f"deployment carries {len(self._fns)} fixed stage fns "
+                    f"but the plan has {pl.n_stages} stages; use "
+                    f"stage_fn_builder for resizable deployments")
+            return list(self._fns)
+        raise ValueError("deployment has no stage functions; pass "
+                         "stage_fns or stage_fn_builder to deploy()")
+
+    def executor(self, start: bool = False) -> PipelineExecutor:
+        """A pipeline executor wired from the plan + spec (caller owns its
+        lifecycle; use as a context manager or call stop())."""
+        ex = PipelineExecutor.for_plan(
+            self.plan, self.stage_functions(),
+            queue_size=self.spec.queue_size,
+            microbatch=self.spec.microbatch,
+            microbatch_wait_s=self.spec.microbatch_wait_s,
+            name_prefix="deploy")
+        if start:
+            ex.start()
+        return ex
+
+    def serve(self, start: bool = False):
+        """The streaming server over this deployment's plan.  At most one
+        live server per deployment (reconfigure targets it); a server the
+        caller already stopped no longer counts."""
+        if self._live_server() is not None:
+            raise RuntimeError("deployment already has a live server; "
+                               "close() it before serving again")
+        from ..serving.server import PipelinedModelServer
+        srv = PipelinedModelServer(
+            self.plan, self.stage_functions(),
+            max_batch=self.spec.max_batch, max_wait_s=self.spec.max_wait_s,
+            queue_size=self.spec.queue_size,
+            microbatch=self.spec.microbatch,
+            microbatch_wait_s=self.spec.microbatch_wait_s)
+        self._server = srv
+        if start:
+            srv.executor.start()
+            srv.start()
+        return srv
+
+    def reconfigure(self, spec: Optional[DeploymentSpec] = None, *,
+                    stages: Optional[int] = None,
+                    drain_timeout: float = 30.0) -> PlacementPlan:
+        """Replan under a new spec (or the same deployment at a new device
+        count via ``stages=``) and hot-swap the live server through the
+        existing drain-and-swap path.  Without a live server this just
+        re-plans and updates the handle."""
+        if (spec is None) == (stages is None):
+            raise ValueError("pass exactly one of spec or stages")
+        if spec is not None:
+            new_spec = self._spec_template = spec
+        else:
+            new_spec = self._spec_template.with_stages(stages)
+        new_plan = plan(new_spec, graph=self.graph,
+                        tpu_model=self._tpu_model, reporter=self._reporter,
+                        base_spec=self._base_spec)
+        fns = self.stage_functions(new_plan)
+        if self._live_server() is not None:
+            self._server.reconfigure(new_plan, fns,
+                                     drain_timeout=drain_timeout)
+        self.spec = new_spec
+        self.plan = new_plan
+        return new_plan
+
+    def close(self) -> None:
+        if self._server is not None:
+            self._server.stop()
+            self._server = None
+
+    def __enter__(self) -> "Deployment":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def deploy(spec: DeploymentSpec, *,
+           graph: Optional[LayerGraph] = None,
+           stage_fn_builder: Optional[StageFnBuilder] = None,
+           stage_fns: Optional[Sequence[Callable]] = None,
+           tpu_model: Optional[EdgeTPUModel] = None,
+           reporter: Optional[MemoryReporter] = None,
+           base_spec: Optional[EdgeTPUSpec] = None) -> Deployment:
+    """Plan a spec and wrap it in a :class:`Deployment` handle."""
+    if graph is None and spec.model is not None:
+        graph = resolve_model_graph(spec.model)
+    pl = plan(spec, graph=graph, tpu_model=tpu_model, reporter=reporter,
+              base_spec=base_spec)
+    return Deployment(spec, pl, graph=graph,
+                      stage_fn_builder=stage_fn_builder,
+                      stage_fns=stage_fns, tpu_model=tpu_model,
+                      reporter=reporter, base_spec=base_spec)

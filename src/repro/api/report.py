@@ -1,0 +1,151 @@
+"""PlanReport: what a plan will do, before anything runs.
+
+Every plan the front door produces carries one — modeled stage times
+(raw and replication-amortized), the pacing bottleneck, params/time
+imbalance, and per-stage device memory (on-device bytes, host spill,
+capacity).  It is the decision record a deployment pipeline logs next to
+the plan it shipped, and it is JSON-round-trippable like the spec.
+
+Degenerate plans yield *neutral* records instead of raising: a 1-stage
+plan reports zero imbalance, an empty plan reports all-zero fields
+(regression-tested in tests/test_deploy_api.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Tuple
+
+from ..core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
+from ..core.graph import LayerGraph
+from ..core.planner import PlacementPlan
+
+REPORT_FORMAT = "repro.plan_report/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    """Modeled properties of one :class:`PlacementPlan`."""
+
+    graph_name: str
+    strategy: str
+    n_stages: int
+    n_devices: int
+    # time (seconds; 0.0 where the plan carries no modeled time)
+    stage_times_s: Tuple[float, ...] = ()
+    effective_stage_times_s: Tuple[float, ...] = ()
+    max_stage_time_s: float = 0.0
+    bottleneck_stage: int = -1          # -1: no timed stages
+    imbalance_time_pct: float = 0.0     # (max - min) / max over pacing times
+    # size
+    stage_params: Tuple[int, ...] = ()
+    imbalance_params: int = 0           # paper Table 5's Δs
+    # memory (bytes; empty when no graph was available to price against)
+    stage_device_bytes: Tuple[int, ...] = ()
+    stage_host_bytes: Tuple[int, ...] = ()
+    stage_capacity_bytes: Tuple[int, ...] = ()
+    spill_bytes: int = 0                # total host overflow across stages
+    # placement
+    devices: Tuple[str, ...] = ()
+    replicas: Tuple[int, ...] = ()
+
+    @property
+    def spills(self) -> bool:
+        return self.spill_bytes > 0
+
+    @classmethod
+    def from_plan(cls, plan: PlacementPlan,
+                  graph: Optional[LayerGraph] = None,
+                  base_spec: Optional[EdgeTPUSpec] = None,
+                  base_model: Optional[EdgeTPUModel] = None) -> "PlanReport":
+        """Price a plan.  ``base_model`` (preferred — the device model the
+        planner itself priced with, so the report cannot contradict the
+        plan) or ``graph`` [+ ``base_spec``] enables the per-stage memory
+        columns; without either the report still carries the time/size
+        view the plan itself knows."""
+        stages = plan.stages
+        times = tuple(0.0 if s.time_s is None else s.time_s for s in stages)
+        eff = tuple(0.0 if t is None else t
+                    for t in plan.effective_stage_times_s)
+        timed = [(i, t) for i, t in enumerate(eff) if t > 0.0]
+        if timed:
+            bottleneck, max_t = max(timed, key=lambda it: it[1])
+            min_t = min(t for _, t in timed)
+            imb_pct = ((max_t - min_t) / max_t * 100.0
+                       if len(timed) > 1 and max_t > 0 else 0.0)
+        else:
+            bottleneck, max_t, imb_pct = -1, 0.0, 0.0
+        params = tuple(s.params for s in stages)
+        imb_params = (max(params) - min(params)) if len(params) > 1 else 0
+
+        dev_bytes: Tuple[int, ...] = ()
+        host_bytes: Tuple[int, ...] = ()
+        cap_bytes: Tuple[int, ...] = ()
+        if base_model is None and graph is not None:
+            base_model = EdgeTPUModel(graph, base_spec)
+        if base_model is not None and stages:
+            dev_list, host_list, cap_list = [], [], []
+            for st in stages:
+                spec = st.device.specialize(base_model.spec)
+                eng = (base_model.engine if spec is base_model.spec
+                       else base_model.engine.with_spec(spec))
+                d, h = eng.segment_split(st.depth_lo, st.depth_hi)
+                dev_list.append(d)
+                host_list.append(h)
+                cap_list.append(spec.onchip_bytes)
+            dev_bytes = tuple(dev_list)
+            host_bytes = tuple(host_list)
+            cap_bytes = tuple(cap_list)
+
+        return cls(
+            graph_name=plan.graph_name, strategy=plan.strategy,
+            n_stages=plan.n_stages, n_devices=plan.n_devices,
+            stage_times_s=times, effective_stage_times_s=eff,
+            max_stage_time_s=max_t, bottleneck_stage=bottleneck,
+            imbalance_time_pct=imb_pct,
+            stage_params=params, imbalance_params=imb_params,
+            stage_device_bytes=dev_bytes, stage_host_bytes=host_bytes,
+            stage_capacity_bytes=cap_bytes, spill_bytes=sum(host_bytes),
+            devices=tuple(s.device.name for s in stages),
+            replicas=tuple(s.replicas for s in stages))
+
+    def describe(self) -> str:
+        """One-line report summary for logs."""
+        head = (f"{self.graph_name} / {self.strategy} x{self.n_stages}"
+                + (f" ({self.n_devices} devs)"
+                   if self.n_devices != self.n_stages else ""))
+        if self.bottleneck_stage < 0:
+            return f"{head}: no modeled times"
+        mib = self.spill_bytes / (1024 * 1024)
+        return (f"{head}: pacing S{self.bottleneck_stage}"
+                f"={self.max_stage_time_s*1e3:.3f} ms, time imbalance "
+                f"{self.imbalance_time_pct:.1f}%, "
+                f"Δs={self.imbalance_params/1e6:.2f}M, "
+                f"spill {mib:.2f} MiB")
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> Dict:
+        doc = dataclasses.asdict(self)
+        doc["format"] = REPORT_FORMAT
+        for key, val in list(doc.items()):
+            if isinstance(val, tuple):
+                doc[key] = list(val)
+        return doc
+
+    @classmethod
+    def from_dict(cls, doc: Dict) -> "PlanReport":
+        doc = dict(doc)
+        fmt = doc.pop("format", REPORT_FORMAT)
+        if fmt != REPORT_FORMAT:
+            raise ValueError(f"not a plan report document: {fmt!r}")
+        for f in dataclasses.fields(cls):
+            if f.name in doc and isinstance(doc[f.name], list):
+                doc[f.name] = tuple(doc[f.name])
+        return cls(**doc)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PlanReport":
+        return cls.from_dict(json.loads(text))

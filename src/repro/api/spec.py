@@ -1,0 +1,199 @@
+"""Declarative deployment description: the input to the one front door.
+
+A :class:`DeploymentSpec` says *what* to deploy — which model graph, over
+which devices, optimized how, under which constraints and serving policy —
+without naming any of the machinery that does it.  ``repro.api.plan`` turns
+a spec into a :class:`~repro.core.planner.PlacementPlan`;
+``repro.api.deploy`` turns it into a live :class:`~repro.api.deploy.Deployment`.
+DistrEdge (PAPERS.md, arXiv 2202.01699) frames multi-device CNN serving as
+exactly this: one placement decision over a declarative description of
+devices + model, not a hand-wired call sequence.
+
+Specs are frozen (hashable, safe as cache keys — ``ElasticPlanner`` keys
+its replan cache on them) and JSON-round-trippable (ship a deployment to a
+fleet as a document; ``from_json(to_json(spec)) == spec`` exactly, floats
+included).  Live Python objects (a prebuilt ``LayerGraph``, an
+``EdgeTPUModel``) are *not* part of the spec: they are runtime overrides
+passed alongside it to ``plan``/``deploy``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, Optional, Tuple
+
+from ..core.graph import LayerGraph
+from ..core.topology import DeviceSpec, Topology
+
+SPEC_FORMAT = "repro.deployment_spec/v1"
+
+
+@dataclasses.dataclass(frozen=True)
+class DeploymentSpec:
+    """What to deploy, declaratively.
+
+    Model / devices
+    ---------------
+    * ``model`` — graph reference resolvable without live objects:
+      ``"cnn:<Name>"`` (a Table-1 model from ``repro.models.cnn.REAL_CNNS``),
+      ``"synthetic-cnn:<f>"`` (``synthetic_cnn(f)``), or
+      ``"lm:<arch>[:seq=<n>]"`` (an LM smoke config's layer graph).  May be
+      ``None`` when a live graph is passed to ``plan``/``deploy`` directly.
+    * ``stages`` — pipeline stage count for homogeneous planning.  ``None``
+      with no topology means *auto*: the paper's §5.2.2 rule (smallest
+      count whose refined balanced plan avoids host memory).
+    * ``topology`` / ``device_budget`` — heterogeneous device chain, or the
+      homogeneous shorthand ``Topology.homogeneous(device_budget)``.  Used
+      by the placement strategies; mutually exclusive.
+
+    Objective / constraints
+    -----------------------
+    * ``strategy`` — a name in the strategy registry
+      (:func:`repro.api.available_strategies`).
+    * ``objective`` — optional declared objective; validated against the
+      chosen strategy's objective at plan time (catches "I asked for
+      time balance but picked a params-balancing strategy" early).
+    * ``refine`` — tri-state §6.1.3 refinement post-pass: ``None`` keeps
+      the strategy's default, ``True``/``False`` forces it on/off (a
+      strategy that cannot compose it — the joint ``placement`` DP —
+      rejects ``True`` with a ValueError rather than ignoring it).
+    * ``replicate`` / ``max_replicas`` — whether placement strategies may
+      replicate a bottleneck stage across identical devices, and a cap.
+    * ``memory_headroom_bytes`` — plan as if each device had this much
+      less on-chip memory (deployment safety margin for runtime buffers).
+    * ``prof_batch`` — batch size priced by the SEGM_PROF objective.
+
+    Serving policy (consumed by :class:`~repro.api.deploy.Deployment`)
+    ------------------------------------------------------------------
+    ``max_batch`` / ``max_wait_s`` (admission micro-batching),
+    ``queue_size`` (inter-stage backpressure), ``microbatch`` /
+    ``microbatch_wait_s`` (stage-level shape-bucketed dynamic
+    micro-batching).
+    """
+
+    model: Optional[str] = None
+    stages: Optional[int] = None
+    strategy: str = "balanced"
+    objective: Optional[str] = None
+    topology: Optional[Topology] = None
+    device_budget: Optional[int] = None
+    replicate: bool = True
+    max_replicas: Optional[int] = None
+    refine: Optional[bool] = None
+    memory_headroom_bytes: int = 0
+    prof_batch: int = 15
+    # serving policy
+    max_batch: int = 15
+    max_wait_s: float = 0.02
+    queue_size: int = 64
+    microbatch: Optional[int] = None
+    microbatch_wait_s: float = 0.0
+
+    def __post_init__(self):
+        if not self.strategy:
+            raise ValueError("spec needs a strategy name")
+        if self.stages is not None and self.stages < 1:
+            raise ValueError(f"stages must be >= 1, got {self.stages}")
+        if self.topology is not None and self.device_budget is not None:
+            raise ValueError("topology and device_budget are mutually "
+                             "exclusive (device_budget is the homogeneous "
+                             "shorthand)")
+        if self.device_budget is not None and self.device_budget < 1:
+            raise ValueError(f"device_budget must be >= 1, "
+                             f"got {self.device_budget}")
+        if self.memory_headroom_bytes < 0:
+            raise ValueError("memory_headroom_bytes must be >= 0")
+
+    # -- derived views -------------------------------------------------------
+    def resolved_topology(self) -> Optional[Topology]:
+        """The device chain the placement strategies plan over (homogeneous
+        shorthand expanded), or None for plain stage-count planning."""
+        if self.topology is not None:
+            return self.topology
+        if self.device_budget is not None:
+            return Topology.homogeneous(self.device_budget)
+        return None
+
+    def with_stages(self, n: int) -> "DeploymentSpec":
+        """Elastic-resize helper: the same deployment at a new device
+        count (stage count for plain specs, budget for placement specs)."""
+        if self.topology is not None:
+            # devices leave from the tail of the chain (the pipeline order
+            # is part of the topology's meaning)
+            devs = self.topology.devices[:max(1, n)]
+            return dataclasses.replace(
+                self, topology=dataclasses.replace(self.topology,
+                                                   devices=devs))
+        if self.device_budget is not None:
+            return dataclasses.replace(self, device_budget=max(1, n))
+        return dataclasses.replace(self, stages=max(1, n))
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> Dict:
+        doc = dataclasses.asdict(self)
+        doc["format"] = SPEC_FORMAT
+        if self.topology is not None:
+            doc["topology"] = {
+                "name": self.topology.name,
+                "devices": [d.to_dict() for d in self.topology.devices],
+            }
+        return doc
+
+    @classmethod
+    def from_dict(cls, doc: Dict) -> "DeploymentSpec":
+        doc = dict(doc)
+        fmt = doc.pop("format", SPEC_FORMAT)
+        if fmt != SPEC_FORMAT:
+            raise ValueError(f"not a deployment spec document: {fmt!r}")
+        topo = doc.get("topology")
+        if topo is not None:
+            doc["topology"] = Topology(
+                devices=tuple(DeviceSpec.from_dict(d)
+                              for d in topo["devices"]),
+                name=topo.get("name", "chain"))
+        return cls(**doc)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "DeploymentSpec":
+        return cls.from_dict(json.loads(text))
+
+
+# ---------------------------------------------------------------------------
+# model-reference resolution
+# ---------------------------------------------------------------------------
+def resolve_model_graph(model: str) -> LayerGraph:
+    """Materialize the graph a spec's ``model`` string names.
+
+    ``cnn:`` and ``synthetic-cnn:`` stay import-light; ``lm:`` pulls in the
+    JAX-backed config stack lazily (only deployments that ask for it pay
+    for it)."""
+    kind, _, rest = model.partition(":")
+    if not rest:
+        raise ValueError(f"malformed model ref {model!r}; expected "
+                         f"'cnn:<Name>', 'synthetic-cnn:<f>' or "
+                         f"'lm:<arch>[:seq=<n>]'")
+    if kind == "cnn":
+        from ..models.cnn import REAL_CNNS
+        if rest not in REAL_CNNS:
+            raise ValueError(f"unknown CNN {rest!r}; pick from "
+                             f"{sorted(REAL_CNNS)}")
+        return REAL_CNNS[rest]().to_layer_graph()
+    if kind == "synthetic-cnn":
+        from ..models.cnn import synthetic_cnn
+        return synthetic_cnn(int(rest)).to_layer_graph()
+    if kind == "lm":
+        arch, _, opt = rest.partition(":")
+        seq = 64
+        if opt:
+            key, _, val = opt.partition("=")
+            if key != "seq":
+                raise ValueError(f"unknown lm option {opt!r} in {model!r}")
+            seq = int(val)
+        from .. import configs
+        from ..models import lm_graph
+        cfg = configs.get(arch).smoke_config()
+        return lm_graph.lm_layer_graph(cfg, seq_len=seq)
+    raise ValueError(f"unknown model ref kind {kind!r} in {model!r}")

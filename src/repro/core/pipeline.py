@@ -189,6 +189,22 @@ class PipelineExecutor:
         self._started = False
         self._draining = False
 
+    @classmethod
+    def for_plan(cls, plan, stage_fns: Sequence[Callable[[Any], Any]],
+                 queue_size: int = 64,
+                 microbatch: Optional[Union[int, Sequence[int]]] = None,
+                 microbatch_wait_s: float = 0.0,
+                 name_prefix: str = "pipeline") -> "PipelineExecutor":
+        """The one place a plan's execution shape (replica fan-out) meets
+        a serving policy: both ``PipelinedModelServer`` and the
+        ``repro.api.Deployment`` handle build their executors here, so a
+        new executor knob lands in every consumer at once."""
+        return cls(stage_fns, queue_size=queue_size,
+                   name=f"{name_prefix}-{plan.graph_name}",
+                   replicas=getattr(plan, "replica_counts", None),
+                   microbatch=microbatch,
+                   microbatch_wait_s=microbatch_wait_s)
+
     @property
     def n_stages(self) -> int:
         return len(self.stage_fns)

@@ -13,23 +13,50 @@ round-robin fan-out/fan-in in the executor).  ``PlacementPlan.from_cuts``
 is the thin compatibility constructor: homogeneous no-replica plans carry
 the exact cuts and modeled stage times the cut-list plans did.
 ``SegmentationPlan`` remains as a deprecated alias.
+
+Since the ``repro.api`` front door (DeploymentSpec -> plan -> Deployment),
+this module owns only the plan *types* (:class:`StagePlacement`,
+:class:`PlacementPlan`) and the stage-count rules; the orchestration entry
+points ``plan`` / ``plan_placement`` / ``plan_summary_table`` are
+one-release deprecation shims that delegate to the strategy registry in
+:mod:`repro.api.strategies`.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Sequence, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
 from .graph import LayerGraph
-from .refine import GraphReporter, MemoryReporter, RefinementResult, refine_cuts
-from .segmentation import (balanced_split, comp_split, imbalance,
-                           minimax_time_split, placement_split, prof_split,
-                           segment_ranges, segment_sums)
-from .topology import DeviceSpec, Topology, TopologyCostModel
+from .refine import MemoryReporter, RefinementResult
+from .segmentation import segment_ranges, segment_sums
+from .topology import DeviceSpec, Topology
 
 STRATEGIES = ("comp", "prof", "balanced", "balanced_norefine",
               "balanced_cost", "opt")
+
+# -- legacy-entry-point deprecation (exactly one warning per entry point) ----
+_DEPRECATION_WARNED: set = set()
+
+
+def _warn_deprecated(entry: str, replacement: str) -> None:
+    """Emit a single DeprecationWarning per legacy entry point per process
+    (a serving loop replanning at 1 Hz must not flood the log), pointing
+    at the repro.api front door."""
+    if entry in _DEPRECATION_WARNED:
+        return
+    _DEPRECATION_WARNED.add(entry)
+    warnings.warn(
+        f"repro.core.planner.{entry} is deprecated and will be removed "
+        f"after one release; use {replacement} (see EXPERIMENTS.md "
+        f"§Deployment API)", DeprecationWarning, stacklevel=3)
+
+
+def _reset_deprecation_warnings() -> None:
+    """Test hook: re-arm the exactly-once gates."""
+    _DEPRECATION_WARNED.clear()
 
 
 @dataclasses.dataclass
@@ -98,6 +125,9 @@ class PlacementPlan:
     strategy: str
     stages: List[StagePlacement]
     refinement: Optional[RefinementResult] = None
+    # modeled quality/memory record (repro.api.PlanReport); attached by the
+    # repro.api front door, carried through JSON round-trips
+    report: Optional[Any] = None
 
     # -- compatibility surface (cut-list view) ------------------------------
     @property
@@ -239,6 +269,8 @@ class PlacementPlan:
                 "moves": self.refinement.moves,
                 "converged": self.refinement.converged,
             }),
+            "report": (None if self.report is None
+                       else self.report.to_dict()),
         }
         return json.dumps(doc, indent=indent)
 
@@ -249,10 +281,15 @@ class PlacementPlan:
         if fmt != "repro.placement_plan/v1":
             raise ValueError(f"not a placement plan document: {fmt!r}")
         ref = doc.get("refinement")
+        rep = doc.get("report")
+        if rep is not None:
+            from ..api.report import PlanReport
+            rep = PlanReport.from_dict(rep)
         return cls(
             graph_name=doc["graph_name"], strategy=doc["strategy"],
             stages=[StagePlacement.from_dict(s) for s in doc["stages"]],
-            refinement=None if ref is None else RefinementResult(**ref))
+            refinement=None if ref is None else RefinementResult(**ref),
+            report=rep)
 
 
 # deprecated alias: PR-1 consumers imported the cut-list plan by this name
@@ -267,90 +304,27 @@ def plan(
     tpu_model: Optional[EdgeTPUModel] = None,
     prof_batch: int = 15,
 ) -> PlacementPlan:
-    """Produce a PlacementPlan with the requested paper strategy
-    (homogeneous devices, one per stage, no replication — the paper's
-    setting; use :func:`plan_placement` for heterogeneous topologies and
-    replicated bottleneck stages).
+    """DEPRECATED shim (one release): delegates to the strategy registry
+    behind ``repro.api.plan`` and emits a single DeprecationWarning per
+    process.  Strategy semantics (and their docs) live in
+    :mod:`repro.api.strategies`; plans are bit-identical to what this
+    function historically produced.
 
-    * ``comp``               — SEGM_COMP (layer-count balanced; vendor model)
-    * ``prof``               — SEGM_PROF (exhaustive; shallow models only)
-    * ``balanced_norefine``  — SEGM_BALANCED step 2 only (Algorithm 1)
-    * ``balanced``           — SEGM_BALANCED steps 2+3 (refinement with the
-                               supplied memory reporter; defaults to the
-                               analytical Edge TPU reporter)
-    * ``balanced_cost``      — BEYOND-PAPER: Algorithm 1 run over modeled
-                               per-depth *time* (MAC + weight-load terms)
-                               instead of raw params, then §6.1.3
-                               refinement.  Fixes the residual imbalance on
-                               archs whose MAC intensity varies with depth
-                               (e.g. high-resolution early CNN stages).
-    * ``opt``                — BEYOND-PAPER: time-balanced minimax DP over
-                               modeled *stage time* (compute + weight-load +
-                               stream + I/O, priced by the
-                               SegmentCostEngine).  O(d·s·log d) via a
-                               crossing-point search (exact when the cost is
-                               monotone; the stage-I/O boundary term can
-                               perturb it a few percent off the true optimum
-                               — the exact=True oracle in tests/benches
-                               measures the gap).  Prof-quality plans for
-                               deep graphs where SEGM_PROF's C(d-1, s-1)
-                               search is infeasible, and guaranteed never
-                               worse than ``balanced`` on max modeled stage
-                               time (falls back to the balanced cuts if the
-                               DP does not improve).
+    New call shape::
+
+        from repro.api import DeploymentSpec, plan
+        plan(DeploymentSpec(stages=n, strategy="balanced"), graph=graph)
     """
+    _warn_deprecated(
+        "plan", "repro.api.plan(DeploymentSpec(stages=..., strategy=...))")
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; pick from {STRATEGIES}")
-    P = graph.params_per_depth()
-    d = len(P)
-    refinement = None
-    model: Optional[EdgeTPUModel] = None
-
-    if strategy == "comp":
-        cuts = comp_split(P, n_stages)
-    elif strategy == "prof":
-        model = tpu_model or EdgeTPUModel(graph)
-        cuts = prof_split(P, n_stages, model.prof_cost(batch=prof_batch))
-    elif strategy == "balanced_norefine":
-        cuts = balanced_split(P, n_stages)
-    elif strategy == "balanced_cost":
-        model = tpu_model or EdgeTPUModel(graph)
-        spec = model.spec
-        # integer per-depth cost in nanoseconds: MAC term + weight-load term
-        C = [int(1e9 * (m / spec.macs_per_s
-                        + b / (spec.weight_load_gbps * 1e9)))
-             for m, b in zip(graph.macs_per_depth(),
-                             graph.bytes_per_depth())]
-        cuts = balanced_split(C, n_stages)
-        if reporter is None:
-            reporter = GraphReporter(model)
-        refinement = refine_cuts(cuts, d, reporter)
-        if refinement.converged:
-            cuts = refinement.cuts
-    elif strategy == "opt":
-        model = tpu_model or EdgeTPUModel(graph)
-        cuts = minimax_time_split(d, n_stages, model.segment_time)
-        # hard guarantee: never worse than the balanced plan on the max
-        # modeled stage time (the pipeline's pacing quantity)
-        base = plan(graph, n_stages, "balanced", reporter=reporter,
-                    tpu_model=model, prof_batch=prof_batch)
-        if max(model.stage_times(base.cuts)) < max(model.stage_times(cuts)):
-            cuts = base.cuts
-            refinement = base.refinement
-    else:  # balanced = Algorithm 1 + §6.1.3 refinement
-        cuts = balanced_split(P, n_stages)
-        if reporter is None:
-            model = tpu_model or EdgeTPUModel(graph)
-            reporter = GraphReporter(model)
-        refinement = refine_cuts(cuts, d, reporter)
-        if refinement.converged:
-            cuts = refinement.cuts
-        # else: spill is unavoidable at this stage count — keep the
-        # Algorithm-1 optimum rather than the refiner's wandering point
-
-    return PlacementPlan.from_cuts(
-        graph, cuts, strategy=strategy,
-        tpu_model=model or tpu_model, refinement=refinement)
+    from ..api import DeploymentSpec
+    from ..api import plan as api_plan
+    spec = DeploymentSpec(stages=n_stages, strategy=strategy,
+                          prof_batch=prof_batch)
+    return api_plan(spec, graph=graph, tpu_model=tpu_model,
+                    reporter=reporter, attach_report=False)
 
 
 def plan_placement(
@@ -361,61 +335,29 @@ def plan_placement(
     max_replicas: Optional[int] = None,
     base_spec: Optional[EdgeTPUSpec] = None,
 ) -> PlacementPlan:
-    """Topology-aware planning: joint search over cuts, device assignment
-    (devices are consumed in topology order) and per-stage replica counts
-    under the topology's device budget.
+    """DEPRECATED shim (one release): delegates to the ``placement`` /
+    ``balanced_placement`` registry strategies behind ``repro.api.plan``
+    and emits a single DeprecationWarning per process.  Plans are
+    bit-identical to what this function historically produced.
 
-    * Homogeneous topology with ``replicate=False`` delegates to
-      :func:`plan` — cuts and modeled stage times are bit-identical to the
-      plain planner's output for the same stage count.
-    * ``strategy="opt"`` runs the exact joint DP
-      (:func:`~repro.core.segmentation.placement_split`) over *effective*
-      stage time: a stage replicated over k identical consecutive devices
-      paces at ``t_weight_load + (t - t_weight_load)/k`` — a bottleneck
-      stage a single dominant layer pins (no cut can fix it; the paper's
-      Table 5 residual imbalance) gets k-fold relief on its non-weight-load
-      terms instead.
-    * ``strategy="balanced"`` splits by params (Algorithm 1) and refines
-      with *per-stage* memory limits (each stage judged against its own
-      device's capacity) — no replication search.
+    New call shape::
+
+        from repro.api import DeploymentSpec, plan
+        plan(DeploymentSpec(topology=topo, strategy="placement"), graph=g)
     """
-    n = topology.n_devices
-    tcm = TopologyCostModel(graph, topology, base_spec)
-
-    if topology.is_homogeneous and topology.devices[0].is_reference \
-            and not replicate:
-        return plan(graph, n, strategy, tpu_model=tcm.base_model)
-
-    if strategy == "balanced":
-        P = graph.params_per_depth()
-        cuts = balanced_split(P, n)
-        reporters = tcm.stage_reporters(topology.devices[:n])
-        refinement = refine_cuts(cuts, graph.depth,
-                                 stage_reporters=reporters)
-        if refinement.converged:
-            cuts = refinement.cuts
-        return PlacementPlan.from_cuts(
-            graph, cuts, strategy="balanced_placement",
-            devices=list(topology.devices[:len(cuts) + 1]),
-            tpu_model=tcm.base_model, refinement=refinement)
-
-    if strategy != "opt":
+    _warn_deprecated(
+        "plan_placement",
+        "repro.api.plan(DeploymentSpec(topology=..., strategy='placement'))")
+    if strategy not in ("opt", "balanced"):
         raise ValueError(f"plan_placement supports 'opt' and 'balanced', "
                          f"got {strategy!r}")
-
-    rmax = n if replicate else 1
-    if max_replicas is not None:
-        rmax = min(rmax, max(1, max_replicas))
-    cuts, replicas = placement_split(graph.depth, n,
-                                     tcm.placement_cost_fn(),
-                                     max_replicas=rmax)
-    offsets = [0]
-    for r in replicas[:-1]:
-        offsets.append(offsets[-1] + r)
-    devices = [topology.devices[o] for o in offsets]
-    return PlacementPlan.from_cuts(
-        graph, cuts, strategy="opt_placement", devices=devices,
-        replicas=replicas, tpu_model=tcm.base_model)
+    from ..api import DeploymentSpec
+    from ..api import plan as api_plan
+    spec = DeploymentSpec(
+        strategy="placement" if strategy == "opt" else "balanced_placement",
+        topology=topology, replicate=replicate, max_replicas=max_replicas)
+    return api_plan(spec, graph=graph, base_spec=base_spec,
+                    attach_report=False)
 
 
 def min_stages_to_fit(graph: LayerGraph, capacity_bytes: int) -> int:
@@ -431,12 +373,15 @@ def min_stages_no_spill(graph: LayerGraph,
     """The paper's working rule (§5.2.2): 'the minimum number of TPUs that
     would ideally avoid host memory usage' — smallest n whose refined
     balanced plan leaves every segment on-device."""
+    from ..api import DeploymentSpec
+    from ..api import plan as api_plan
     model = tpu_model or EdgeTPUModel(graph)
     start = min_stages_to_fit(graph, model.spec.onchip_bytes)
     for n in range(start, start + max_extra + 1):
         if n >= graph.depth:
             return n
-        pl = plan(graph, n, "balanced", tpu_model=model)
+        pl = api_plan(DeploymentSpec(stages=n, strategy="balanced"),
+                      graph=graph, tpu_model=model, attach_report=False)
         if all(m.host_bytes == 0 for m in model.stage_memories(pl.cuts)):
             return n
     return start + max_extra
@@ -444,4 +389,12 @@ def min_stages_no_spill(graph: LayerGraph,
 
 def plan_summary_table(graph: LayerGraph, n_stages: int,
                        strategies: Sequence[str] = ("comp", "balanced")) -> Dict[str, PlacementPlan]:
-    return {s: plan(graph, n_stages, s) for s in strategies}
+    """DEPRECATED shim — use ``repro.api.plan`` per strategy."""
+    _warn_deprecated(
+        "plan_summary_table",
+        "repro.api.plan(DeploymentSpec(...)) per strategy")
+    from ..api import DeploymentSpec
+    from ..api import plan as api_plan
+    return {s: api_plan(DeploymentSpec(stages=n_stages, strategy=s),
+                        graph=graph, attach_report=False)
+            for s in strategies}

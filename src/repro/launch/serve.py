@@ -26,12 +26,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.api import DeploymentSpec, deploy
 from repro.configs.common import concrete_batch
-from repro.core import Topology, plan, plan_placement
 from repro.core.pipeline import (PipelineExecutor, ShapeKeyedStageCache,
                                  stage_balance_metrics)
 from repro.models import api, lm, lm_graph
-from repro.serving import PipelinedModelServer
 
 
 def make_stage_fns(cfg, params, counts, stage_cache=None):
@@ -82,6 +81,26 @@ def make_stage_fns(cfg, params, counts, stage_cache=None):
     return fns
 
 
+def spec_from_args(args) -> DeploymentSpec:
+    """CLI flags -> declarative DeploymentSpec (the repro.api front door).
+
+    ``--device-budget`` switches to the joint cuts+replicas placement
+    strategy over that many devices; otherwise ``--stages`` identical
+    devices, one per stage, with the requested split strategy."""
+    common = dict(
+        model=f"lm:{args.arch}:seq={args.seq}",
+        microbatch=args.microbatch,
+        microbatch_wait_s=args.microbatch_wait_ms / 1e3,
+        max_batch=args.requests, max_wait_s=0.005)
+    if args.device_budget:
+        # joint cuts+replicas search: a bottleneck stage may get k devices
+        # (round-robin fan-out in the executor, order-restoring fan-in)
+        return DeploymentSpec(strategy="placement",
+                              device_budget=args.device_budget, **common)
+    return DeploymentSpec(strategy=args.strategy, stages=args.stages,
+                          **common)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -110,30 +129,28 @@ def main() -> None:
     params = api.init(cfg, jax.random.PRNGKey(0))
 
     g = lm_graph.lm_layer_graph(cfg, seq_len=args.seq)
-    if args.device_budget:
-        # joint cuts+replicas search: a bottleneck stage may get k devices
-        # (round-robin fan-out in the executor, order-restoring fan-in)
-        pl = plan_placement(g, Topology.homogeneous(args.device_budget))
-    else:
-        pl = plan(g, args.stages, args.strategy)
-    print("plan:", pl.describe())
-    from repro.launch.pipeline_spmd import stage_block_counts
-    counts = stage_block_counts(pl, cfg.n_layers)
-    print("blocks per stage:", counts)
+    spec = spec_from_args(args)
 
-    fns = make_stage_fns(cfg, params, counts)
+    from repro.launch.pipeline_spmd import stage_block_counts
+
+    def fns_for(p):
+        counts = stage_block_counts(p, cfg.n_layers)
+        return make_stage_fns(cfg, params, counts)
+
+    dep = deploy(spec, graph=g, stage_fn_builder=fns_for)
+    pl = dep.plan
+    print("plan:", pl.describe())
+    print("report:", pl.report.describe())
+    print("blocks per stage:", stage_block_counts(pl, cfg.n_layers))
 
     reqs = [concrete_batch(cfg, args.seq, 1,
                            key=jax.random.PRNGKey(i),
                            kind="prefill")["tokens"]
             for i in range(args.requests)]
     # persistent streaming executor: stage workers live for the whole
-    # serving session; requests are admitted continuously (no barrier)
-    with PipelinedModelServer(pl, fns, max_batch=args.requests,
-                              max_wait_s=0.005,
-                              microbatch=args.microbatch,
-                              microbatch_wait_s=args.microbatch_wait_ms
-                              / 1e3) as server:
+    # serving session; requests are admitted continuously (no barrier).
+    # The Deployment handle owns the server wiring (spec's serving policy).
+    with dep.serve() as server:
         server.serve_batch(reqs[:1])           # warmup (jit)
         server.start()                          # admission loop
         server.snapshot()                       # reset the delta window

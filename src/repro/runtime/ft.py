@@ -22,9 +22,11 @@ import dataclasses
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from ..api import DeploymentSpec
+from ..api import plan as plan_spec
 from ..checkpoint import CheckpointStore
 from ..core.graph import LayerGraph
-from ..core.planner import PlacementPlan, plan
+from ..core.planner import PlacementPlan
 
 
 class FailureInjector:
@@ -110,19 +112,30 @@ class TrainSupervisor:
 
 
 class ElasticPlanner:
-    """Re-plan the pipeline segmentation when the device pool resizes."""
+    """Re-plan the pipeline segmentation when the device pool resizes.
 
-    def __init__(self, graph: LayerGraph, strategy: str = "balanced"):
+    Planning goes through the ``repro.api`` front door: the planner holds
+    one base :class:`~repro.api.DeploymentSpec` (built from the legacy
+    ``strategy`` name, or passed in whole via ``spec=``) and re-derives it
+    at each device count with ``spec.with_stages(n)``."""
+
+    def __init__(self, graph: LayerGraph, strategy: str = "balanced",
+                 spec: Optional[DeploymentSpec] = None):
         self.graph = graph
-        self.strategy = strategy
+        self.spec = spec if spec is not None \
+            else DeploymentSpec(strategy=strategy)
+        self.strategy = self.spec.strategy
         self._cache: Dict[int, PlacementPlan] = {}
         self.replan_times: Dict[int, float] = {}
 
     def plan_for(self, n_devices: int) -> PlacementPlan:
         if n_devices not in self._cache:
             t0 = time.perf_counter()
-            self._cache[n_devices] = plan(self.graph, n_devices,
-                                          self.strategy)
+            # attach_report=False: replan_times is a reported latency
+            # metric and must keep measuring the plan search alone
+            self._cache[n_devices] = plan_spec(
+                self.spec.with_stages(n_devices), graph=self.graph,
+                attach_report=False)
             self.replan_times[n_devices] = time.perf_counter() - t0
         return self._cache[n_devices]
 

@@ -144,6 +144,7 @@ class PipelinedModelServer:
         self._stop_evt = threading.Event()
         self._admission = threading.Lock()   # held to pause admission
         self._thread: Optional[threading.Thread] = None
+        self._stopped = False
         # monotonic counters; read intervals via snapshot() deltas
         self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
                                       "completed": 0, "failed": 0}
@@ -157,12 +158,11 @@ class PipelinedModelServer:
     def _make_executor(self, plan: PlacementPlan,
                        stage_fns: Sequence[Callable[[Any], Any]]
                        ) -> PipelineExecutor:
-        return PipelineExecutor(
-            stage_fns, queue_size=self.queue_size,
-            name=f"serve-{plan.graph_name}",
-            replicas=getattr(plan, "replica_counts", None),
+        return PipelineExecutor.for_plan(
+            plan, stage_fns, queue_size=self.queue_size,
             microbatch=self.microbatch,
-            microbatch_wait_s=self.microbatch_wait_s)
+            microbatch_wait_s=self.microbatch_wait_s,
+            name_prefix="serve")
 
     def __enter__(self) -> "PipelinedModelServer":
         self.executor.start()
@@ -313,10 +313,17 @@ class PipelinedModelServer:
             # rebase busy deltas onto the new executor's counters
             self._snap_state["busy"] = self.executor.busy_snapshot()
 
+    @property
+    def stopped(self) -> bool:
+        """True once :meth:`stop` ran — a lifecycle owner (e.g. the
+        ``repro.api.Deployment`` handle) must treat this server as dead."""
+        return self._stopped
+
     def stop(self) -> None:
         """Stop the admission loop and shut down the stage workers.
         In-flight requests complete with :class:`PipelineStopped`;
         never-admitted requests still waiting in the batcher do too."""
+        self._stopped = True
         self._stop_evt.set()
         if self._thread:
             self._thread.join(timeout=5)

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import EdgeTPUModel, plan
+from conftest import api_plan as plan
+from repro.core import EdgeTPUModel
 from repro.core.pipeline import PipelineExecutor
 from repro.models.cnn import REAL_CNNS, TABLE1, synthetic_cnn
 from repro.models.layers import GraphModel

@@ -8,7 +8,8 @@ import random
 
 import pytest
 
-from repro.core import EdgeTPUModel, LayerGraph, chain_graph, plan
+from conftest import api_plan as plan
+from repro.core import EdgeTPUModel, LayerGraph, chain_graph
 from repro.core.cost_engine import SegmentCostEngine
 from repro.core.segmentation import minimax_time_split, segment_ranges
 from repro.models.cnn import REAL_CNNS, synthetic_cnn

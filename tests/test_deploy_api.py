@@ -1,0 +1,584 @@
+"""Front-door API tests (ISSUE 4): the declarative
+DeploymentSpec -> plan -> Deployment surface.
+
+* Equivalence matrix — every registered homogeneous strategy x all 21
+  Table-1 models: ``repro.api.plan(spec)`` cuts and modeled stage times
+  are bit-identical to the legacy ``repro.core.planner`` call paths; the
+  placement strategies likewise against ``plan_placement``.
+* DeploymentSpec / PlanReport JSON round-trip property tests (hypothesis).
+* Deprecation shims emit exactly one DeprecationWarning per legacy entry
+  point per process, pointing at the new API.
+* Neutral edge-case records: ``PlanReport`` on 1-stage/empty plans,
+  ``latency_percentiles([])``.
+* Deployment handle: executor/serve wiring, reconfigure hot-swap,
+  from_plan, spec validation errors.
+"""
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.api import (DeploymentSpec, Deployment, PlanReport, PlanStrategy,
+                       available_strategies, deploy, get_strategy, plan,
+                       register_strategy, resolve_model_graph)
+from repro.core import (DeviceSpec, EdgeTPUModel, PlacementPlan, Topology,
+                        chain_graph)
+from repro.core import planner as legacy
+from repro.models.cnn import REAL_CNNS
+from repro.serving import latency_percentiles
+
+try:                    # property tests need hypothesis (requirements-dev);
+    import hypothesis   # the rest of this file must run without it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def toy_graph(n=6, params=50_000, macs=5_000_000, out_bytes=1024):
+    return chain_graph("toy", [(f"l{i}", params, macs, out_bytes)
+                               for i in range(n)])
+
+
+def _legacy(fn, *args, **kw):
+    """Call a deprecated entry point with its warning suppressed (the
+    strict -W error::DeprecationWarning CI leg runs this file too)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return fn(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_has_all_legacy_strategies():
+    names = available_strategies()
+    for s in ("comp", "prof", "balanced", "balanced_norefine",
+              "balanced_cost", "opt", "placement", "balanced_placement"):
+        assert s in names, s
+    # legacy plan.strategy strings resolve through aliases
+    assert get_strategy("opt_placement") is get_strategy("placement")
+
+
+def test_unknown_strategy_raises_with_choices():
+    with pytest.raises(ValueError, match="unknown strategy"):
+        plan(DeploymentSpec(stages=2, strategy="nope"), graph=toy_graph())
+
+
+def test_register_strategy_plugs_in():
+    @register_strategy("first_half")
+    class FirstHalf(PlanStrategy):
+        objective = "demo"
+
+        def plan(self, ctx):
+            cut = max(0, ctx.graph.depth // 2 - 1)
+            return PlacementPlan.from_cuts(ctx.graph, [cut],
+                                           strategy=self.name)
+
+    try:
+        pl = plan(DeploymentSpec(strategy="first_half"), graph=toy_graph(8))
+        assert pl.strategy == "first_half"
+        assert pl.n_stages == 2 and pl.cuts == [3]
+        assert pl.report is not None          # report attaches to plugins too
+    finally:
+        from repro.api import strategies as S
+        S._REGISTRY.pop("first_half", None)
+
+
+# ---------------------------------------------------------------------------
+# equivalence matrix (acceptance criterion)
+# ---------------------------------------------------------------------------
+HOMOG_STRATEGIES = ("comp", "balanced", "balanced_norefine",
+                    "balanced_cost", "opt")
+
+
+@pytest.mark.parametrize("name", sorted(REAL_CNNS))
+def test_front_door_bit_identical_to_legacy_all_models(name):
+    """For every Table-1 model and every homogeneous strategy (prof at
+    s=2 — its C(d-1, s-1) search is the paper's infeasibility point),
+    plan(spec) == legacy plan(): same cuts, same modeled stage times,
+    same strategy tag, same refinement outcome."""
+    g = REAL_CNNS[name]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    s = max(2, min(4, g.depth - 1))
+    matrix = [(strat, s) for strat in HOMOG_STRATEGIES] + [("prof", 2)]
+    for strat, n in matrix:
+        new = plan(DeploymentSpec(stages=n, strategy=strat), graph=g,
+                   tpu_model=m)
+        old = _legacy(legacy.plan, g, n, strat, tpu_model=m)
+        assert new.cuts == old.cuts, (name, strat)
+        assert new.stage_times_s == old.stage_times_s, (name, strat)
+        assert new.stage_params == old.stage_params, (name, strat)
+        assert new.strategy == old.strategy == strat, (name, strat)
+        assert (new.refinement is None) == (old.refinement is None)
+        if new.refinement is not None:
+            assert new.refinement.cuts == old.refinement.cuts
+
+
+@pytest.mark.parametrize("name", sorted(REAL_CNNS))
+def test_placement_delegation_bit_identical_all_models(name):
+    """Homogeneous reference topology with replicate=False delegates to
+    the plain planner on both surfaces — bit-identical all the way."""
+    g = REAL_CNNS[name]().to_layer_graph()
+    s = max(2, min(3, g.depth - 1))
+    new = plan(DeploymentSpec(strategy="placement", device_budget=s,
+                              replicate=False), graph=g)
+    old = _legacy(legacy.plan_placement, g, Topology.homogeneous(s),
+                  strategy="opt", replicate=False)
+    assert new.cuts == old.cuts
+    assert new.stage_times_s == old.stage_times_s
+    assert new.replica_counts == old.replica_counts == [1] * s
+
+
+@pytest.mark.parametrize("name", ("MobileNet", "MobileNetV2",
+                                  "EfficientNetLiteB0"))
+def test_placement_joint_dp_bit_identical(name):
+    g = REAL_CNNS[name]().to_layer_graph()
+    topo = Topology.homogeneous(4)
+    new = plan(DeploymentSpec(strategy="placement", device_budget=4),
+               graph=g)
+    old = _legacy(legacy.plan_placement, g, topo, replicate=True)
+    assert new.cuts == old.cuts
+    assert new.replica_counts == old.replica_counts
+    assert new.stage_times_s == old.stage_times_s
+    assert new.strategy == old.strategy == "opt_placement"
+
+
+def test_balanced_placement_heterogeneous_bit_identical():
+    g = toy_graph(12)
+    topo = Topology(devices=(DeviceSpec(name="fast", compute_scale=2.0),
+                             DeviceSpec(), DeviceSpec()))
+    new = plan(DeploymentSpec(strategy="balanced_placement", topology=topo),
+               graph=g)
+    old = _legacy(legacy.plan_placement, g, topo, strategy="balanced")
+    assert new.cuts == old.cuts
+    assert new.stage_times_s == old.stage_times_s
+    assert [d.name for d in topo.devices[:new.n_stages]] \
+        == [s.device.name for s in new.stages]
+
+
+def test_refine_override_composes():
+    """refine=False on 'balanced' == 'balanced_norefine'; refine=True on
+    'comp' runs the §6.1.3 post-pass over comp cuts."""
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    off = plan(DeploymentSpec(stages=4, strategy="balanced", refine=False),
+               graph=g)
+    nore = plan(DeploymentSpec(stages=4, strategy="balanced_norefine"),
+                graph=g)
+    assert off.cuts == nore.cuts and off.refinement is None
+    comp_ref = plan(DeploymentSpec(stages=4, strategy="comp", refine=True),
+                    graph=g)
+    assert comp_ref.refinement is not None
+    if comp_ref.refinement.converged:
+        assert comp_ref.report.spill_bytes == 0
+
+
+def test_auto_stage_count_matches_min_stages_rule():
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    m = EdgeTPUModel(g)
+    pl = plan(DeploymentSpec(strategy="balanced"), graph=g, tpu_model=m)
+    assert pl.n_stages == legacy.min_stages_no_spill(g, m)
+
+
+def test_model_ref_resolution():
+    direct = REAL_CNNS["MobileNet"]().to_layer_graph()
+    via_ref = plan(DeploymentSpec(model="cnn:MobileNet", stages=3,
+                                  strategy="comp"))
+    assert via_ref.cuts == plan(DeploymentSpec(stages=3, strategy="comp"),
+                                graph=direct).cuts
+    g = resolve_model_graph("synthetic-cnn:500")
+    assert g.depth > 0
+    with pytest.raises(ValueError, match="unknown CNN"):
+        resolve_model_graph("cnn:NotAModel")
+    with pytest.raises(ValueError, match="model ref"):
+        resolve_model_graph("weird")
+    with pytest.raises(ValueError, match="no model ref"):
+        plan(DeploymentSpec(stages=2, strategy="comp"))
+
+
+def test_report_priced_with_the_planners_model():
+    """The report must not contradict the plan: a custom tpu_model that
+    spills shows up in report.spill_bytes/capacity, not the default 8 MiB
+    device's view."""
+    MIB = 2 ** 20
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    from repro.core import EdgeTPUSpec
+    tiny = EdgeTPUModel(g, EdgeTPUSpec(onchip_bytes=2 * MIB))
+    pl = plan(DeploymentSpec(stages=4, strategy="balanced_norefine"),
+              graph=g, tpu_model=tiny)
+    assert pl.report.stage_capacity_bytes == (2 * MIB,) * 4
+    expected_spill = sum(m.host_bytes for m in tiny.stage_memories(pl.cuts))
+    assert pl.report.spill_bytes == expected_spill > 0
+
+
+def test_reconfigure_keeps_pricing_overrides():
+    """deploy(base_spec=...) resizes must replan under the same device
+    constants, not silently fall back to the defaults."""
+    MIB = 2 ** 20
+    from repro.core import EdgeTPUSpec
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    custom = EdgeTPUSpec(onchip_bytes=4 * MIB)
+    dep = deploy(DeploymentSpec(stages=6, strategy="balanced"), graph=g,
+                 base_spec=custom, stage_fn_builder=_stage_fn_builder)
+    new_plan = dep.reconfigure(stages=7)
+    assert new_plan.report.stage_capacity_bytes == (4 * MIB,) * 7
+    direct = plan(DeploymentSpec(stages=7, strategy="balanced"), graph=g,
+                  base_spec=custom)
+    assert new_plan.cuts == direct.cuts
+
+
+def test_memory_headroom_tightens_capacity():
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    base = plan(DeploymentSpec(stages=4, strategy="balanced"), graph=g)
+    MIB = 2 ** 20
+    tight = plan(DeploymentSpec(stages=4, strategy="balanced",
+                                memory_headroom_bytes=2 * MIB), graph=g)
+    assert tight.report.stage_capacity_bytes[0] \
+        == base.report.stage_capacity_bytes[0] - 2 * MIB
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        DeploymentSpec(topology=Topology.homogeneous(2), device_budget=2)
+    with pytest.raises(ValueError, match="stages"):
+        DeploymentSpec(stages=0)
+    with pytest.raises(ValueError, match="strategy"):
+        DeploymentSpec(strategy="")
+    with pytest.raises(ValueError, match="topology"):
+        plan(DeploymentSpec(strategy="placement", stages=2),
+             graph=toy_graph())
+    with pytest.raises(ValueError, match="objective"):
+        plan(DeploymentSpec(stages=2, strategy="opt",
+                            objective="balance_params"), graph=toy_graph())
+
+
+def test_spec_objective_accepted_when_matching():
+    pl = plan(DeploymentSpec(stages=2, strategy="opt",
+                             objective="min_max_stage_time"),
+              graph=toy_graph())
+    assert pl.n_stages == 2
+
+
+def test_with_stages_resize_semantics():
+    s = DeploymentSpec(stages=4, strategy="balanced")
+    assert s.with_stages(3).stages == 3
+    b = DeploymentSpec(strategy="placement", device_budget=4)
+    assert b.with_stages(3).device_budget == 3
+    topo = Topology(devices=(DeviceSpec(name="a"), DeviceSpec(name="b"),
+                             DeviceSpec(name="c")))
+    t = DeploymentSpec(strategy="placement", topology=topo)
+    shrunk = t.with_stages(2)
+    assert [d.name for d in shrunk.topology.devices] == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trips (hypothesis property tests)
+# ---------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+    _name = st.text(alphabet="abcdefgh-123", min_size=1, max_size=8)
+    _pos_float = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False,
+                           allow_infinity=False)
+    _device = st.builds(
+        DeviceSpec, name=_name,
+        onchip_bytes=st.one_of(st.none(),
+                               st.integers(min_value=1, max_value=2 ** 40)),
+        compute_scale=_pos_float, bandwidth_scale=_pos_float)
+    _topology = st.builds(
+        Topology,
+        devices=st.lists(_device, min_size=1, max_size=5).map(tuple),
+        name=_name)
+    _spec = st.builds(
+        DeploymentSpec,
+        model=st.one_of(st.none(), st.just("cnn:ResNet50")),
+        stages=st.one_of(st.none(), st.integers(min_value=1, max_value=64)),
+        strategy=st.sampled_from(
+            ("comp", "balanced", "opt", "placement", "balanced_placement")),
+        objective=st.none(),
+        topology=st.one_of(st.none(), _topology),
+        replicate=st.booleans(),
+        max_replicas=st.one_of(st.none(),
+                               st.integers(min_value=1, max_value=8)),
+        refine=st.one_of(st.none(), st.booleans()),
+        memory_headroom_bytes=st.integers(min_value=0, max_value=2 ** 24),
+        prof_batch=st.integers(min_value=1, max_value=64),
+        max_batch=st.integers(min_value=1, max_value=256),
+        max_wait_s=st.floats(min_value=0, max_value=10, allow_nan=False),
+        queue_size=st.integers(min_value=1, max_value=1024),
+        microbatch=st.one_of(st.none(),
+                             st.integers(min_value=1, max_value=32)),
+        microbatch_wait_s=st.floats(min_value=0, max_value=1,
+                                    allow_nan=False))
+
+    @settings(max_examples=60, deadline=None)
+    @given(spec=_spec)
+    def test_spec_json_roundtrip_property(spec):
+        doc = spec.to_json()
+        back = DeploymentSpec.from_json(doc)
+        assert back == spec
+        # and the document is plain JSON (no repr smuggling)
+        json.loads(doc)
+
+    _floats = st.lists(st.floats(min_value=0, max_value=1e3,
+                                 allow_nan=False), max_size=5).map(tuple)
+    _ints = st.lists(st.integers(min_value=0, max_value=2 ** 40),
+                     max_size=5).map(tuple)
+    _report = st.builds(
+        PlanReport, graph_name=_name, strategy=_name,
+        n_stages=st.integers(min_value=0, max_value=16),
+        n_devices=st.integers(min_value=0, max_value=32),
+        stage_times_s=_floats, effective_stage_times_s=_floats,
+        max_stage_time_s=st.floats(min_value=0, max_value=10,
+                                   allow_nan=False),
+        bottleneck_stage=st.integers(min_value=-1, max_value=15),
+        imbalance_time_pct=st.floats(min_value=0, max_value=100,
+                                     allow_nan=False),
+        stage_params=_ints, imbalance_params=st.integers(min_value=0),
+        stage_device_bytes=_ints, stage_host_bytes=_ints,
+        stage_capacity_bytes=_ints, spill_bytes=st.integers(min_value=0),
+        devices=st.lists(_name, max_size=5).map(tuple),
+        replicas=st.lists(st.integers(min_value=1, max_value=8),
+                          max_size=5).map(tuple))
+
+    @settings(max_examples=60, deadline=None)
+    @given(report=_report)
+    def test_report_json_roundtrip_property(report):
+        assert PlanReport.from_json(report.to_json()) == report
+else:
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                             "(pip install -r requirements-dev.txt)")
+    def test_json_roundtrip_properties():
+        pass
+
+
+def test_plan_json_carries_report():
+    g = REAL_CNNS["MobileNet"]().to_layer_graph()
+    pl = plan(DeploymentSpec(stages=3, strategy="opt"), graph=g)
+    assert pl.report is not None
+    back = PlacementPlan.from_json(pl.to_json())
+    assert back.report == pl.report
+    # legacy documents (no report key) still load
+    doc = json.loads(pl.to_json())
+    doc.pop("report")
+    assert PlacementPlan.from_json(json.dumps(doc)).report is None
+
+
+# ---------------------------------------------------------------------------
+# neutral edge-case records (satellite)
+# ---------------------------------------------------------------------------
+def test_latency_percentiles_empty_is_neutral():
+    rec = latency_percentiles([])
+    assert rec == {"n": 0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0,
+                   "mean_s": 0.0, "max_s": 0.0}
+
+
+def test_plan_report_single_stage_is_neutral():
+    g = toy_graph(4)
+    pl = plan(DeploymentSpec(stages=1, strategy="balanced_norefine"),
+              graph=g)
+    rep = pl.report
+    assert rep.n_stages == 1
+    assert rep.imbalance_params == 0
+    assert rep.imbalance_time_pct == 0.0
+    assert rep.bottleneck_stage == 0
+    assert rep.max_stage_time_s == pl.stage_times_s[0]
+    rep.describe()                                   # doesn't raise
+
+
+def test_plan_report_empty_plan_is_neutral():
+    empty = PlacementPlan(graph_name="none", strategy="manual", stages=[])
+    rep = PlanReport.from_plan(empty)
+    assert rep.n_stages == 0 and rep.bottleneck_stage == -1
+    assert rep.max_stage_time_s == 0.0 and rep.spill_bytes == 0
+    assert "no modeled times" in rep.describe()
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (satellite: exactly-once per entry point)
+# ---------------------------------------------------------------------------
+def _deprecations(w):
+    return [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "repro.core.planner" in str(x.message)]
+
+
+def test_legacy_plan_warns_exactly_once():
+    legacy._reset_deprecation_warnings()
+    g = toy_graph()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        p1 = legacy.plan(g, 2, "comp")
+        p2 = legacy.plan(g, 3, "balanced_norefine")
+    deps = _deprecations(w)
+    assert len(deps) == 1
+    assert "repro.api.plan" in str(deps[0].message)
+    assert p1.n_stages == 2 and p2.n_stages == 3      # still functional
+
+
+def test_legacy_plan_placement_and_summary_warn_once_each():
+    legacy._reset_deprecation_warnings()
+    g = toy_graph()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy.plan_placement(g, Topology.homogeneous(2))
+        legacy.plan_placement(g, Topology.homogeneous(3))
+        legacy.plan_summary_table(g, 2)
+        legacy.plan_summary_table(g, 2)
+    deps = _deprecations(w)
+    assert len(deps) == 2                      # one per entry point
+    msgs = "\n".join(str(d.message) for d in deps)
+    assert "plan_placement" in msgs and "plan_summary_table" in msgs
+
+
+def test_legacy_paths_never_warn_from_the_new_surface():
+    """The repo's own surface (api, benchmarks, examples, ElasticPlanner)
+    must not touch the shims: planning through the front door emits no
+    DeprecationWarning."""
+    legacy._reset_deprecation_warnings()
+    g = toy_graph()
+    from repro.runtime import ElasticPlanner
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        plan(DeploymentSpec(stages=2, strategy="opt"), graph=g)
+        plan(DeploymentSpec(strategy="placement", device_budget=3),
+             graph=g)
+        ElasticPlanner(g, "balanced_norefine").plan_for(2)
+        legacy.min_stages_no_spill(g)            # helper is not deprecated
+
+
+# ---------------------------------------------------------------------------
+# Deployment handle
+# ---------------------------------------------------------------------------
+def _stage_fn_builder(p):
+    return [lambda x, i=i: x + 10 ** i for i in range(p.n_stages)]
+
+
+def test_deploy_executor_runs_plan():
+    dep = deploy(DeploymentSpec(stages=3, strategy="balanced_norefine"),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    with dep.executor() as ex:
+        outs, _ = ex.run_batch([0, 1])
+    assert outs == [111, 112]
+
+
+def test_deploy_serve_and_reconfigure_hot_swap():
+    dep = deploy(DeploymentSpec(stages=3, strategy="balanced_norefine",
+                                max_batch=4, max_wait_s=0.01),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    with dep:
+        srv = dep.serve()
+        assert srv.plan is dep.plan
+        assert srv.serve_batch([0, 1]) == [111, 112]
+        new_plan = dep.reconfigure(stages=2)          # a device left
+        assert new_plan.n_stages == 2
+        assert dep.spec.stages == 2
+        assert srv.serve_batch([0]) == [11]           # served by new plan
+    assert dep.server is None                         # closed
+
+
+def test_deploy_reconfigure_with_full_spec():
+    dep = deploy(DeploymentSpec(stages=2, strategy="balanced_norefine"),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    new = dep.reconfigure(DeploymentSpec(stages=3, strategy="comp"))
+    assert new.n_stages == 3 and dep.plan.strategy == "comp"
+    with pytest.raises(ValueError, match="exactly one"):
+        dep.reconfigure()
+    with pytest.raises(ValueError, match="exactly one"):
+        dep.reconfigure(DeploymentSpec(stages=2), stages=2)
+
+
+def test_from_plan_derives_reconfigurable_spec():
+    g = toy_graph(8)
+    # hand-built strategy tag -> balanced resizes (documented fallback)
+    hand = PlacementPlan.from_cuts(g, [3], strategy="replicated",
+                                   replicas=[2, 1])
+    dep = Deployment.from_plan(hand, graph=g,
+                               stage_fn_builder=_stage_fn_builder)
+    assert dep.spec.strategy == "balanced"
+    assert dep.reconfigure(stages=3).n_stages == 3
+    # placement tag -> device_budget spec sized to the plan's devices
+    placed = plan(DeploymentSpec(strategy="placement", device_budget=3),
+                  graph=g)
+    dep2 = Deployment.from_plan(placed, graph=g,
+                                stage_fn_builder=_stage_fn_builder)
+    assert dep2.spec.device_budget == placed.n_devices
+    assert dep2.reconfigure(stages=2).n_devices <= 2
+
+
+def test_reconfigure_scale_down_then_up_restores_devices():
+    """Resizes derive from the original spec: truncating a topology on
+    scale-down must not cap a later scale-up."""
+    topo = Topology(devices=(DeviceSpec(name="a"), DeviceSpec(name="b"),
+                             DeviceSpec(name="c"), DeviceSpec(name="d")))
+    dep = deploy(DeploymentSpec(strategy="placement", topology=topo,
+                                replicate=False), graph=toy_graph(10),
+                 stage_fn_builder=_stage_fn_builder)
+    assert dep.reconfigure(stages=3).n_devices == 3
+    assert dep.reconfigure(stages=4).n_devices == 4     # device rejoined
+    assert [d.name for d in dep.spec.topology.devices] \
+        == ["a", "b", "c", "d"]
+
+
+def test_externally_stopped_server_is_not_live():
+    """Stopping the server through its own context manager (the benchmark
+    idiom) must free the deployment: serve() works again and
+    reconfigure() does not hot-swap a dead server."""
+    dep = deploy(DeploymentSpec(stages=2, strategy="balanced_norefine"),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    with dep.serve() as srv:
+        assert srv.serve_batch([0]) == [11]
+    assert dep.server is None                 # stopped behind our back
+    dep.reconfigure(stages=3)                 # replans only, no dead swap
+    assert srv.executor.started is False
+    srv2 = dep.serve()                        # no spurious "live server"
+    assert srv2.serve_batch([0]) == [111]
+    dep.close()
+
+
+def test_placement_rejects_uncomposable_refine():
+    with pytest.raises(ValueError, match="refine"):
+        plan(DeploymentSpec(strategy="placement", device_budget=3,
+                            refine=True), graph=toy_graph(10))
+
+
+def test_headroom_exceeding_capacity_fails_fast():
+    with pytest.raises(ValueError, match="headroom"):
+        plan(DeploymentSpec(stages=2, strategy="balanced",
+                            memory_headroom_bytes=1 << 40),
+             graph=toy_graph())
+
+
+def test_deployment_from_plan_and_fixed_fns():
+    g = toy_graph()
+    pl = plan(DeploymentSpec(stages=2, strategy="comp"), graph=g)
+    dep = Deployment.from_plan(pl, graph=g,
+                               stage_fns=[lambda x: x + 1,
+                                          lambda x: x * 2])
+    assert dep.spec.stages == 2
+    with dep.executor() as ex:
+        outs, _ = ex.run_batch([1, 2])
+    assert outs == [4, 6]
+    # fixed fns cannot follow a resize
+    with pytest.raises(ValueError, match="stage_fn_builder"):
+        dep.stage_functions(plan(DeploymentSpec(stages=3, strategy="comp"),
+                                 graph=g))
+
+
+def test_deployment_requires_stage_functions():
+    dep = deploy(DeploymentSpec(stages=2, strategy="comp"),
+                 graph=toy_graph())
+    with pytest.raises(ValueError, match="no stage functions"):
+        dep.executor()
+
+
+def test_serve_twice_requires_close():
+    dep = deploy(DeploymentSpec(stages=2, strategy="comp"),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    with dep:
+        dep.serve()
+        with pytest.raises(RuntimeError, match="live server"):
+            dep.serve()
+    dep.serve()                   # after close() a new server is allowed
+    dep.close()

@@ -2,7 +2,8 @@
 multi-TPU phenomenology (Figs. 2/4/6/7, Tables 2/4/6)."""
 import pytest
 
-from repro.core import (EdgeTPUModel, EdgeTPUSpec, GraphReporter, plan)
+from conftest import api_plan as plan
+from repro.core import EdgeTPUModel, EdgeTPUSpec, GraphReporter
 from repro.core.segmentation import comp_split, balanced_split, segment_ranges
 from repro.models.cnn import synthetic_cnn
 
@@ -85,7 +86,7 @@ def test_table7_superlinear_speedup_real_models():
     deepest models whose first stage is MAC-heavy (ResNet152; the
     beyond-paper cost-balanced planner closes that gap — see
     benchmarks/segm_real.py)."""
-    from repro.core.planner import min_stages_no_spill, plan
+    from repro.core.planner import min_stages_no_spill
     from repro.models.cnn import REAL_CNNS
     for name, floor in (("ResNet101", 1.0), ("ResNet152", 0.85),
                         ("DenseNet121", 1.0)):

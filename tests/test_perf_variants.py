@@ -121,7 +121,8 @@ def test_cache_shardings_modes():
 def test_balanced_cost_strategy_reduces_stage_time():
     """Beyond-paper: cost-weighted balance beats params balance on a model
     whose MAC intensity varies with depth (high-res early CNN layers)."""
-    from repro.core import EdgeTPUModel, plan
+    from conftest import api_plan as plan
+    from repro.core import EdgeTPUModel
     from repro.core.planner import min_stages_no_spill
     from repro.models.cnn import REAL_CNNS
     g = REAL_CNNS["ResNet152"]().to_layer_graph()

@@ -9,7 +9,7 @@ import pytest
 from repro.core.pipeline import (PipelineExecutor, ShapeKeyedStageCache,
                                  simulated_stage)
 from repro.serving import PipelinedModelServer
-from repro.core import plan
+from conftest import api_plan as plan
 from repro.models.cnn import synthetic_cnn
 
 

@@ -6,9 +6,10 @@ import random
 
 import pytest
 
+from conftest import api_plan as plan
+from conftest import api_plan_placement as plan_placement
 from repro.core import (DeviceSpec, EdgeTPUModel, PipelineExecutor,
-                        PlacementPlan, Topology, chain_graph, plan,
-                        plan_placement)
+                        PlacementPlan, Topology, chain_graph)
 from repro.core.segmentation import minimax_time_split, placement_split
 from repro.core.topology import TopologyCostModel
 from repro.models.cnn import REAL_CNNS

@@ -3,7 +3,7 @@ archs (embed/head imbalance is what SEGM_BALANCED fixes)."""
 import pytest
 
 from repro import configs
-from repro.core import plan
+from conftest import api_plan as plan
 from repro.core.planner import min_stages_to_fit
 from repro.core.segmentation import segment_sums
 from repro.models import api

@@ -3,8 +3,9 @@ multi-position optimization, and per-stage device limits (heterogeneous
 topologies)."""
 import pytest
 
+from conftest import api_plan as plan
 from repro.core import (DeviceSpec, EdgeTPUModel, GraphReporter, Topology,
-                        plan, refine_cuts)
+                        refine_cuts)
 from repro.core.graph import chain_graph
 from repro.core.segmentation import balanced_split, segment_ranges
 from repro.core.topology import TopologyCostModel

@@ -6,7 +6,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import CheckpointStore
-from repro.core import EdgeTPUModel, plan
+from conftest import api_plan as plan
+from repro.core import EdgeTPUModel
 from repro.core.pipeline import (PipelineExecutor, simulated_stage,
                                  stage_balance_metrics)
 from repro.models.cnn import synthetic_cnn

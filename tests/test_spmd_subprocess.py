@@ -29,7 +29,8 @@ def test_spmd_pipeline_matches_direct():
         from repro import configs
         from repro.configs.common import concrete_batch
         from repro.models import api, lm_graph
-        from repro.core import plan
+        from repro.api import DeploymentSpec
+        from repro.api import plan as api_plan
         from repro.launch.pipeline_spmd import pipeline_logits
         from repro.launch.mesh import make_mesh
 
@@ -38,7 +39,8 @@ def test_spmd_pipeline_matches_direct():
         params = api.init(cfg, jax.random.PRNGKey(0))
         batch = concrete_batch(cfg, 16, 8, kind="prefill")
         g = lm_graph.lm_layer_graph(cfg, seq_len=16)
-        pl = plan(g, 4, "balanced_norefine")
+        pl = api_plan(DeploymentSpec(stages=4,
+                                     strategy="balanced_norefine"), graph=g)
         ref = api.forward(cfg, params, batch)
         with mesh:
             out = pipeline_logits(cfg, mesh, pl, params, batch,
@@ -58,7 +60,8 @@ def test_spmd_pipeline_unequal_stage_counts():
         from repro import configs
         from repro.configs.common import concrete_batch
         from repro.models import api, lm_graph
-        from repro.core import plan
+        from repro.api import DeploymentSpec
+        from repro.api import plan as api_plan
         from repro.launch.pipeline_spmd import (pipeline_logits,
                                                 stage_block_counts)
         from repro.launch.mesh import make_mesh
@@ -69,7 +72,8 @@ def test_spmd_pipeline_unequal_stage_counts():
         params = api.init(cfg, jax.random.PRNGKey(0))
         batch = concrete_batch(cfg, 16, 8, kind="prefill")
         g = lm_graph.lm_layer_graph(cfg, seq_len=16)
-        pl = plan(g, 4, "comp")           # comp: unequal block counts
+        pl = api_plan(DeploymentSpec(stages=4, strategy="comp"),
+                      graph=g)            # comp: unequal block counts
         counts = stage_block_counts(pl, cfg.n_layers)
         assert len(set(counts)) > 1, counts
         ref = api.forward(cfg, params, batch)

@@ -15,7 +15,7 @@ from repro.core.pipeline import (PipelineExecutor, PipelineStopped,
 from repro.runtime import ElasticPlanner
 from repro.serving import (MicroBatcher, PipelinedModelServer, Request,
                            latency_percentiles)
-from repro.core import plan
+from conftest import api_plan as plan
 from repro.models.cnn import synthetic_cnn
 
 
