@@ -1,0 +1,191 @@
+"""Profile -> calibrate -> plan: the measured cost loop end to end.
+
+The paper's segmentation is profile-based; this bench exercises the whole
+ISSUE-5 pipeline on real JAX forwards (host CPU standing in for the Edge
+TPU, exactly as the analytical model does elsewhere in the repo):
+
+1. **capture** a layer-granular :class:`repro.profiling.ProfileTrace` of
+   each model (warmup + repeats + trimmed mean, persisted to
+   ``benchmarks/artifacts/trace_<model>.json``);
+2. **modeling error** — price one fixed params-balanced plan against the
+   trace with (a) the uncalibrated analytic Edge TPU model and (b) the
+   :class:`~repro.profiling.CalibratedCostSource` least-squares fit of
+   the same model to the trace, and compare the mean modeled-vs-measured
+   stage-time error (the ``PlanReport.stage_time_error_pct`` column);
+3. **plan deltas** — plan again with ``cost_source="trace:<path>"`` and
+   record how the cuts move, plus each plan's *measured* bottleneck
+   stage time under the trace (trace-backed planning must not be worse).
+
+Acceptance (ISSUE 5): the calibrated source reduces the mean stage-time
+modeling error vs the uncalibrated analytic model on >= 3 profiled
+models.  Summary lands in ``BENCH_profile.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.profile_bench
+    PYTHONPATH=src python -m benchmarks.profile_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.api import DeploymentSpec, PlanReport, plan
+from repro.core import EdgeTPUModel, PlacementPlan
+from repro.models.cnn import REAL_CNNS, synthetic_cnn
+from repro.profiling import CalibratedCostSource, profile_model
+
+from .common import ARTIFACTS, emit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# small, fast-forward members of the zoo + one synthetic §3.1 model: the
+# profiler runs every depth level (warmup+repeats) eagerly on CPU, so the
+# big Inception/ResNet-152 graphs would take minutes each without adding
+# signal (pass --models to include them anyway)
+DEFAULT_MODELS = ("MobileNet", "MobileNetV2", "EfficientNetLiteB0",
+                  "synthetic:64")
+
+
+def build_model(name: str):
+    if name.startswith("synthetic:"):
+        return synthetic_cnn(int(name.split(":", 1)[1]))
+    return REAL_CNNS[name]()
+
+
+def bench_model(name: str, warmup: int, repeats: int) -> Dict:
+    gm = build_model(name)
+    g = gm.to_layer_graph()
+    trace = profile_model(gm, warmup=warmup, repeats=repeats)
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    trace_path = os.path.join(ARTIFACTS,
+                              f"trace_{name.replace(':', '_')}.json")
+    trace.save(trace_path)
+
+    s = max(2, min(4, g.depth - 1))
+    # -- modeling error on one fixed stage partition -------------------------
+    pl = plan(DeploymentSpec(stages=s, strategy="balanced_norefine"),
+              graph=g)
+    analytic_model = EdgeTPUModel(g)
+    err_analytic = PlanReport.from_plan(
+        pl, base_model=analytic_model, trace=trace).stage_time_error_pct
+    cal_source = CalibratedCostSource(trace)
+    cal_model = EdgeTPUModel(g, cost_source=cal_source)
+    pl_cal = PlacementPlan.from_cuts(g, pl.cuts, strategy="balanced_norefine",
+                                     tpu_model=cal_model)
+    err_cal = PlanReport.from_plan(
+        pl_cal, base_model=cal_model, trace=trace).stage_time_error_pct
+
+    # -- plan deltas: analytic vs trace-backed planning ----------------------
+    spec_kw = dict(stages=s, strategy="balanced_cost", refine=False)
+    pl_a = plan(DeploymentSpec(**spec_kw), graph=g)
+    pl_t = plan(DeploymentSpec(cost_source=f"trace:{trace_path}", **spec_kw),
+                graph=g)
+    measured_a = trace.stage_times(pl_a.stage_depth_ranges)
+    measured_t = trace.stage_times(pl_t.stage_depth_ranges)
+    max_a, max_t = max(measured_a), max(measured_t)
+
+    return {
+        "model": name, "depth": g.depth, "stages": s,
+        "trace_path": os.path.relpath(trace_path, REPO_ROOT),
+        "trace_total_ms": round(trace.total_time_s * 1e3, 3),
+        "err_analytic_pct": round(err_analytic, 2),
+        "err_calibrated_pct": round(err_cal, 2),
+        "calibration_improves": bool(err_cal < err_analytic),
+        "fit": {k: (float(f"{v:.4g}") if isinstance(v, float) else v)
+                for k, v in cal_source.coefficients().items()},
+        "cuts_analytic": pl_a.cuts,
+        "cuts_trace": pl_t.cuts,
+        "cuts_changed": bool(pl_a.cuts != pl_t.cuts),
+        "measured_max_stage_ms_analytic_cuts": round(max_a * 1e3, 4),
+        "measured_max_stage_ms_trace_cuts": round(max_t * 1e3, 4),
+        "trace_plan_not_worse": bool(max_t <= max_a * (1 + 1e-9)),
+    }
+
+
+def run(models: Optional[List[str]] = None, warmup: int = 1,
+        repeats: int = 5, write: bool = True) -> Dict:
+    names = list(models or DEFAULT_MODELS)
+    unknown = [n for n in names if not n.startswith("synthetic:")
+               and n not in REAL_CNNS]
+    if unknown:
+        raise SystemExit(f"unknown model(s) {unknown}; pick from "
+                         f"{sorted(REAL_CNNS)} or synthetic:<f>")
+    results = []
+    for name in names:
+        r = bench_model(name, warmup, repeats)
+        results.append(r)
+        print(f"{name:22s} d={r['depth']:3d} s={r['stages']}  "
+              f"err analytic {r['err_analytic_pct']:8.1f}% -> "
+              f"calibrated {r['err_calibrated_pct']:6.1f}%  "
+              f"cuts {r['cuts_analytic']} -> {r['cuts_trace']}  "
+              f"measured max {r['measured_max_stage_ms_analytic_cuts']:.3f}"
+              f" -> {r['measured_max_stage_ms_trace_cuts']:.3f} ms")
+
+    emit("profile_bench",
+         [{"name": f"profile_{r['model']}",
+           "us_per_call": r["err_calibrated_pct"],
+           "derived": (f"analytic={r['err_analytic_pct']}%,"
+                       f"improves={r['calibration_improves']},"
+                       f"cuts_changed={r['cuts_changed']}")}
+          for r in results],
+         ["name", "us_per_call", "derived"])
+
+    improved = sum(1 for r in results if r["calibration_improves"])
+    not_worse = sum(1 for r in results if r["trace_plan_not_worse"])
+    summary = {
+        "note": "profile->calibrate->plan loop on host-CPU JAX forwards "
+                "(the profiled device; the uncalibrated analytic model "
+                "predicts Edge TPU magnitudes, hence its large error). "
+                "err_* = mean modeled-vs-trace stage-time error on a "
+                "fixed params-balanced partition; plan deltas compare "
+                "analytic vs trace-backed balanced_cost cuts under the "
+                "measured profile. See EXPERIMENTS.md §Profiling & "
+                "calibration.",
+        "profiler": {"warmup": warmup, "repeats": repeats, "trim": 0.2},
+        "models": results,
+        "acceptance": {
+            "models_profiled": len(results),
+            "models_calibration_improves": improved,
+            "improvement_floor_met": bool(improved >= 3),
+            "trace_plans_not_worse": not_worse,
+        },
+    }
+    if write:
+        out = os.path.join(REPO_ROOT, "BENCH_profile.json")
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {out}")
+    print(f"\ncalibration improves modeling error on {improved}/"
+          f"{len(results)} models; trace-backed cuts not worse on "
+          f"{not_worse}/{len(results)}")
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="Table-1 names or synthetic:<f> "
+                         "(default: fast set)")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: one tiny synthetic model, 1 "
+                         "repeat, no BENCH_profile.json write; asserts "
+                         "the capture->calibrate->plan loop only")
+    args = ap.parse_args()
+    if args.smoke:
+        summary = run(models=args.models or ["synthetic:16"], warmup=0,
+                      repeats=1, write=False)
+        # smoke gates on the loop being exercised end to end (capture,
+        # calibrate, trace-backed plan), not on timing quality — shared
+        # CI runners are too noisy for error-magnitude asserts
+        acc = summary["acceptance"]
+        assert acc["models_profiled"] >= 1, acc
+        return
+    summary = run(args.models, repeats=args.repeats)
+    assert summary["acceptance"]["improvement_floor_met"], \
+        summary["acceptance"]
+
+
+if __name__ == "__main__":
+    main()

@@ -8,8 +8,11 @@
                              strategy="opt"))
     dep = deploy(spec, graph=g, stage_fn_builder=fns_for)
 
-See EXPERIMENTS.md §Deployment API for the migration table from the
-legacy ``repro.core.planner`` entry points.
+Per-depth costs are pluggable (``DeploymentSpec.cost_source``:
+``"analytic"`` / ``"trace:<path>"`` / ``"calibrated:<path>"``, backed by
+:mod:`repro.profiling`).  See EXPERIMENTS.md §Deployment API for the
+migration table from the removed ``repro.core.planner`` entry points and
+§Profiling & calibration for the trace workflow.
 """
 from .spec import DeploymentSpec, resolve_model_graph
 from .report import PlanReport

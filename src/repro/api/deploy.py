@@ -79,8 +79,12 @@ def plan(spec: DeploymentSpec, *,
     if attach_report:
         # price the report with the model the planner itself used (the
         # tpu_model override included) so the report cannot contradict
-        # the plan; ctx.model() reuses the context's cached instance
-        pl.report = PlanReport.from_plan(pl, base_model=ctx.model())
+        # the plan; ctx.model() reuses the context's cached instance.
+        # Trace-backed cost sources also contribute the measured stage
+        # times and the modeled-vs-trace error column.
+        pl.report = PlanReport.from_plan(pl, base_model=ctx.model(),
+                                         cost_source=spec.cost_source,
+                                         trace=ctx.trace())
     return pl
 
 

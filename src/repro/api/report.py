@@ -2,9 +2,13 @@
 
 Every plan the front door produces carries one — modeled stage times
 (raw and replication-amortized), the pacing bottleneck, params/time
-imbalance, and per-stage device memory (on-device bytes, host spill,
-capacity).  It is the decision record a deployment pipeline logs next to
-the plan it shipped, and it is JSON-round-trippable like the spec.
+imbalance, per-stage device memory (on-device bytes, host spill,
+capacity), and *which cost source priced it*.  When the plan came from a
+trace-backed source the report also records the measured per-stage
+compute times and the modeled-vs-trace stage-time error — the number the
+calibration loop (EXPERIMENTS.md §Profiling & calibration) watches.  It
+is the decision record a deployment pipeline logs next to the plan it
+shipped, and it is JSON-round-trippable like the spec.
 
 Degenerate plans yield *neutral* records instead of raising: a 1-stage
 plan reports zero imbalance, an empty plan reports all-zero fields
@@ -48,21 +52,35 @@ class PlanReport:
     # placement
     devices: Tuple[str, ...] = ()
     replicas: Tuple[int, ...] = ()
+    # provenance: which cost source priced the plan, and how the modeled
+    # stage times compare against the trace when one is available
+    cost_source: str = "analytic"
+    trace_stage_times_s: Tuple[float, ...] = ()
+    stage_time_error_pct: float = -1.0    # -1: no trace to compare against
 
     @property
     def spills(self) -> bool:
         return self.spill_bytes > 0
 
+    @property
+    def has_trace(self) -> bool:
+        return self.stage_time_error_pct >= 0.0
+
     @classmethod
     def from_plan(cls, plan: PlacementPlan,
                   graph: Optional[LayerGraph] = None,
                   base_spec: Optional[EdgeTPUSpec] = None,
-                  base_model: Optional[EdgeTPUModel] = None) -> "PlanReport":
+                  base_model: Optional[EdgeTPUModel] = None,
+                  cost_source: str = "analytic",
+                  trace=None) -> "PlanReport":
         """Price a plan.  ``base_model`` (preferred — the device model the
         planner itself priced with, so the report cannot contradict the
         plan) or ``graph`` [+ ``base_spec``] enables the per-stage memory
         columns; without either the report still carries the time/size
-        view the plan itself knows."""
+        view the plan itself knows.  ``trace`` (a
+        :class:`~repro.profiling.trace.ProfileTrace` covering the plan's
+        depths) enables the measured-stage-time column and the
+        modeled-vs-trace error."""
         stages = plan.stages
         times = tuple(0.0 if s.time_s is None else s.time_s for s in stages)
         eff = tuple(0.0 if t is None else t
@@ -97,6 +115,17 @@ class PlanReport:
             host_bytes = tuple(host_list)
             cap_bytes = tuple(cap_list)
 
+        trace_times: Tuple[float, ...] = ()
+        err_pct = -1.0
+        if trace is not None and stages:
+            measured = trace.stage_times([(s.depth_lo, s.depth_hi)
+                                          for s in stages])
+            if measured is not None:
+                trace_times = tuple(measured)
+                rel = [abs(m - t) / t
+                       for m, t in zip(times, trace_times) if t > 0.0]
+                err_pct = (sum(rel) / len(rel) * 100.0) if rel else -1.0
+
         return cls(
             graph_name=plan.graph_name, strategy=plan.strategy,
             n_stages=plan.n_stages, n_devices=plan.n_devices,
@@ -107,7 +136,9 @@ class PlanReport:
             stage_device_bytes=dev_bytes, stage_host_bytes=host_bytes,
             stage_capacity_bytes=cap_bytes, spill_bytes=sum(host_bytes),
             devices=tuple(s.device.name for s in stages),
-            replicas=tuple(s.replicas for s in stages))
+            replicas=tuple(s.replicas for s in stages),
+            cost_source=cost_source, trace_stage_times_s=trace_times,
+            stage_time_error_pct=err_pct)
 
     def describe(self) -> str:
         """One-line report summary for logs."""
@@ -117,11 +148,16 @@ class PlanReport:
         if self.bottleneck_stage < 0:
             return f"{head}: no modeled times"
         mib = self.spill_bytes / (1024 * 1024)
-        return (f"{head}: pacing S{self.bottleneck_stage}"
+        line = (f"{head}: pacing S{self.bottleneck_stage}"
                 f"={self.max_stage_time_s*1e3:.3f} ms, time imbalance "
                 f"{self.imbalance_time_pct:.1f}%, "
                 f"Δs={self.imbalance_params/1e6:.2f}M, "
                 f"spill {mib:.2f} MiB")
+        if self.cost_source != "analytic":
+            line += f" [{self.cost_source}]"
+        if self.has_trace:
+            line += f" (vs trace: {self.stage_time_error_pct:.1f}% err)"
+        return line
 
     # -- (de)serialization ---------------------------------------------------
     def to_dict(self) -> Dict:

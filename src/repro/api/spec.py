@@ -62,6 +62,14 @@ class DeploymentSpec:
     * ``memory_headroom_bytes`` — plan as if each device had this much
       less on-chip memory (deployment safety margin for runtime buffers).
     * ``prof_batch`` — batch size priced by the SEGM_PROF objective.
+    * ``cost_source`` — where per-depth costs come from (the paper's
+      plans are *profile-based*; see repro.profiling): ``"analytic"``
+      (default: the closed-form device model, bit-identical to previous
+      releases), ``"trace:<path>"`` (plan from a persisted
+      :class:`~repro.profiling.trace.ProfileTrace`), or
+      ``"calibrated:<path>"`` (the analytic model least-squares-fit to
+      that trace).  Validated at construction; the trace file itself is
+      read at plan time.
 
     Serving policy (consumed by :class:`~repro.api.deploy.Deployment`)
     ------------------------------------------------------------------
@@ -82,6 +90,7 @@ class DeploymentSpec:
     refine: Optional[bool] = None
     memory_headroom_bytes: int = 0
     prof_batch: int = 15
+    cost_source: str = "analytic"
     # serving policy
     max_batch: int = 15
     max_wait_s: float = 0.02
@@ -103,6 +112,8 @@ class DeploymentSpec:
                              f"got {self.device_budget}")
         if self.memory_headroom_bytes < 0:
             raise ValueError("memory_headroom_bytes must be >= 0")
+        from ..profiling.sources import parse_cost_source
+        parse_cost_source(self.cost_source)   # raises on malformed refs
 
     # -- derived views -------------------------------------------------------
     def resolved_topology(self) -> Optional[Topology]:

@@ -72,6 +72,31 @@ class PlanContext:
     base_spec: Optional[EdgeTPUSpec] = None
     _model: Optional[EdgeTPUModel] = dataclasses.field(
         default=None, repr=False)
+    _cost_source: Optional[object] = dataclasses.field(
+        default=None, repr=False)
+    _cost_source_resolved: bool = dataclasses.field(
+        default=False, repr=False)
+
+    def cost_source(self):
+        """The spec's resolved :class:`~repro.profiling.sources.CostSource`
+        (trace artifacts loaded once per context), or None for the
+        built-in analytic path — passing None instead of an
+        AnalyticCostSource keeps the engine's default construction
+        byte-for-byte what it always was."""
+        if not self._cost_source_resolved:
+            from ..profiling.sources import resolve_cost_source
+            if self.spec.cost_source != "analytic":
+                self._cost_source = resolve_cost_source(
+                    self.spec.cost_source,
+                    reference_spec=self.base_spec)
+            self._cost_source_resolved = True
+        return self._cost_source
+
+    def trace(self):
+        """The ProfileTrace behind a trace-backed cost source (for the
+        plan report's modeled-vs-measured columns), or None."""
+        src = self.cost_source()
+        return getattr(src, "trace", None)
 
     def device_base_spec(self) -> Optional[EdgeTPUSpec]:
         """Per-device constants with the spec's memory headroom applied.
@@ -92,11 +117,13 @@ class PlanContext:
 
     def model(self) -> EdgeTPUModel:
         """The device model strategies price against (explicit override
-        wins; otherwise built once per context)."""
+        wins — it may carry its own cost source; otherwise built once per
+        context around the spec's cost source)."""
         if self.tpu_model is not None:
             return self.tpu_model
         if self._model is None:
-            self._model = EdgeTPUModel(self.graph, self.device_base_spec())
+            self._model = EdgeTPUModel(self.graph, self.device_base_spec(),
+                                       cost_source=self.cost_source())
         return self._model
 
     def n_stages(self) -> int:
@@ -125,7 +152,11 @@ class PlanContext:
         return PlanContext(spec=spec, graph=self.graph,
                            tpu_model=tpu_model or self.tpu_model,
                            reporter=self.reporter,
-                           base_spec=self.base_spec)
+                           base_spec=self.base_spec,
+                           # share the resolved source: the child must not
+                           # re-read the trace artifact from disk
+                           _cost_source=self._cost_source,
+                           _cost_source_resolved=self._cost_source_resolved)
 
 
 class PlanStrategy:
@@ -260,20 +291,19 @@ class BalancedNoRefineStrategy(BalancedStrategy):
 @register_strategy("balanced_cost")
 class BalancedCostStrategy(PlanStrategy):
     """Algorithm 1 over modeled per-depth *time* (MAC + weight-load
-    terms) instead of raw params, then §6.1.3 refinement — fixes residual
-    imbalance on archs whose MAC intensity varies with depth."""
+    terms — or the cost source's measured per-depth times) instead of raw
+    params, then §6.1.3 refinement — fixes residual imbalance on archs
+    whose MAC intensity varies with depth."""
 
     objective = "balance_modeled_time"
     default_refine = True
 
     def plan(self, ctx: PlanContext) -> PlacementPlan:
         model = ctx.model()
-        spec = model.spec
-        # integer per-depth cost in nanoseconds: MAC term + weight-load term
-        C = [int(1e9 * (m / spec.macs_per_s
-                        + b / (spec.weight_load_gbps * 1e9)))
-             for m, b in zip(ctx.graph.macs_per_depth(),
-                             ctx.graph.bytes_per_depth())]
+        # integer per-depth cost in nanoseconds (the engine keeps this
+        # strategy's historical analytic expression bit-for-bit; a
+        # trace-backed source substitutes its measured times)
+        C = model.engine.depth_cost_ns()
         cuts = balanced_split(C, ctx.n_stages())
         return self.finish(ctx, cuts, model=model)
 
@@ -314,7 +344,8 @@ class PlacementStrategy(PlanStrategy):
     def plan(self, ctx: PlanContext) -> PlacementPlan:
         topo = ctx.topology()
         n = topo.n_devices
-        tcm = TopologyCostModel(ctx.graph, topo, ctx.device_base_spec())
+        tcm = TopologyCostModel(ctx.graph, topo, ctx.device_base_spec(),
+                                cost_source=ctx.cost_source())
         if topo.is_homogeneous and topo.devices[0].is_reference \
                 and not ctx.spec.replicate:
             return get_strategy("opt").plan(
@@ -354,7 +385,8 @@ class BalancedPlacementStrategy(PlanStrategy):
     def plan(self, ctx: PlanContext) -> PlacementPlan:
         topo = ctx.topology()
         n = topo.n_devices
-        tcm = TopologyCostModel(ctx.graph, topo, ctx.device_base_spec())
+        tcm = TopologyCostModel(ctx.graph, topo, ctx.device_base_spec(),
+                                cost_source=ctx.cost_source())
         if topo.is_homogeneous and topo.devices[0].is_reference \
                 and not ctx.spec.replicate:
             return get_strategy("balanced").plan(

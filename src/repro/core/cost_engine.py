@@ -4,7 +4,7 @@ The paper's plan search evaluates thousands of candidate segments.  The seed
 implementation re-walked every layer of the graph per candidate (and rebuilt
 the cut-crossing activation array twice per ``segment_time`` call), making
 ``plan()`` quadratic-ish in model depth.  :class:`SegmentCostEngine`
-precomputes, once per (graph, spec):
+precomputes, once per (graph, spec, cost source):
 
 * per-depth prefix sums of params / MACs / weight bytes, so any contiguous
   segment's totals are two array reads;
@@ -21,9 +21,22 @@ short tail scan only when the segment actually spills (greedy placement may
 still fit later-but-smaller layers after the first rejection, so the tail is
 walked layer-by-layer to stay bit-identical with the naive placement).
 
-Results are bit-identical to ``EdgeTPUModel``'s naive paths — the arithmetic
-is performed in the same order on the same integers — which the tests in
-tests/test_cost_engine.py assert over random segments of real Table-1 models.
+Cost sources
+------------
+Where the per-depth numbers come from is pluggable: the engine materializes
+a :class:`~repro.profiling.sources.CostSource` (duck-typed — this module
+stays import-light) into its prefix arrays once.  Without a source — or
+with the :class:`~repro.profiling.sources.AnalyticCostSource` — the arrays
+are the graph's own cached lists and ``segment_time`` evaluates the
+closed-form expression over segment sums, in the same float order as the
+naive ``EdgeTPUModel`` paths: results are **bit-identical**, which
+tests/test_cost_engine.py asserts over random segments of real Table-1
+models.  A measured source (trace / calibrated) instead supplies per-depth
+*times*; the engine prefix-sums them, so a segment's compute time is still
+two array reads, and adds the memory-model transfer terms (host-resident
+weight streaming, spill overhead, stage I/O) from the device spec exactly
+as before — measured compute composed with modeled transfers, the paper's
+profile-then-model pipeline.
 """
 from __future__ import annotations
 
@@ -31,6 +44,8 @@ import bisect
 import itertools
 from typing import Dict, List, Sequence, Tuple
 
+from .costs import greedy_layer_placement, greedy_layer_split, \
+    weight_capacity_bytes
 from .graph import LayerGraph
 
 
@@ -38,16 +53,23 @@ def _prefix(vals: Sequence[int]) -> List[int]:
     return list(itertools.accumulate(vals, initial=0))
 
 
+def _fprefix(vals: Sequence[float]) -> List[float]:
+    return list(itertools.accumulate(vals, initial=0.0))
+
+
 class SegmentCostEngine:
     """Precomputed range queries over one :class:`LayerGraph` + device spec.
 
     ``spec`` is duck-typed (an :class:`~repro.core.edge_tpu_model.EdgeTPUSpec`
-    in practice) to keep this module free of circular imports.
+    in practice) to keep this module free of circular imports; so is
+    ``cost_source`` (anything with ``materialize(graph, spec) ->
+    DepthCosts``; ``None`` means the built-in analytic arithmetic).
     """
 
-    def __init__(self, graph: LayerGraph, spec):
+    def __init__(self, graph: LayerGraph, spec, cost_source=None):
         self.graph = graph
         self.spec = spec
+        self.cost_source = cost_source
         levels = graph.levels()
         self.depth = len(levels)
         nodes = graph.nodes
@@ -63,32 +85,63 @@ class SegmentCostEngine:
         self._layer_bytes: List[int] = [nodes[n].bytes for n in self._flat]
         self._layer_prefix: List[int] = _prefix(self._layer_bytes)
 
-        # per-depth prefix sums
-        self._params_prefix = _prefix(graph.params_per_depth())
-        self._macs_prefix = _prefix(graph.macs_per_depth())
-        self._bytes_prefix = _prefix(graph.bytes_per_depth())
-        self._cut_bytes = list(graph.out_bytes_per_depth())
-
         # sparse table over per-depth max single-layer activation
         amax = [max((nodes[n].out_bytes for n in lvl), default=0)
                 for lvl in levels]
         self._build_sparse(amax)
 
+        self._materialize(spec)
         self._split_cache: Dict[Tuple[int, int], Tuple[int, int]] = {}
+
+    def _materialize(self, spec) -> None:
+        """Fill the per-depth prefix arrays from the cost source (or the
+        graph directly when no source is set — same numbers, same list
+        objects, zero overhead)."""
+        src = self.cost_source
+        if src is None:
+            graph = self.graph
+            params = graph.params_per_depth()
+            macs = graph.macs_per_depth()
+            weight_bytes = graph.bytes_per_depth()
+            cut_bytes = graph.out_bytes_per_depth()
+            time_s = wload_s = None
+        else:
+            dc = src.materialize(self.graph, spec)
+            params, macs = dc.params, dc.macs
+            weight_bytes, cut_bytes = dc.weight_bytes, dc.cut_bytes
+            time_s, wload_s = dc.time_s, dc.weight_load_s
+        self._params_prefix = _prefix(params)
+        self._macs_prefix = _prefix(macs)
+        self._bytes_prefix = _prefix(weight_bytes)
+        self._cut_bytes = list(cut_bytes)
+        # measured mode: per-depth times prefix-summed for O(1) segments
+        self._time_prefix = None if time_s is None else _fprefix(time_s)
+        self._wload_prefix = (None if wload_s is None
+                              else _fprefix(wload_s))
+
+    @property
+    def is_measured(self) -> bool:
+        """True when segment compute times come from a trace-backed source
+        instead of the closed-form analytic expression."""
+        return self._time_prefix is not None
 
     def with_spec(self, spec) -> "SegmentCostEngine":
         """An engine for the same graph under a different device spec.
 
-        Every precompute except the split cache is spec-independent
-        (prefix sums, sparse table, flat layer order), so the clone shares
-        them by reference — per-stage device limits (heterogeneous
-        topologies) cost O(1) per device class instead of another O(L)
-        build.  Only the capacity/time queries see the new spec.
+        The graph-side precomputes (sparse table, flat layer order, layer
+        prefix) are spec-independent, so the clone shares them by
+        reference — per-stage device limits (heterogeneous topologies)
+        cost O(1) per device class instead of another O(L) build.  Only
+        the capacity/time queries see the new spec; a measured cost
+        source re-materializes its per-depth times for the new device
+        (O(d), still amortized once per device class).
         """
         clone = object.__new__(SegmentCostEngine)
         clone.__dict__.update(self.__dict__)
         clone.spec = spec
         clone._split_cache = {}          # capacity differs under the new spec
+        if clone.cost_source is not None:
+            clone._materialize(spec)     # device-dependent per-depth arrays
         return clone
 
     # -- sparse-table range max ---------------------------------------------
@@ -126,6 +179,13 @@ class SegmentCostEngine:
     def segment_weight_bytes(self, depth_lo: int, depth_hi: int) -> int:
         return self._bytes_prefix[depth_hi + 1] - self._bytes_prefix[depth_lo]
 
+    def depth_weight_bytes(self) -> List[int]:
+        """Per-depth weight bytes as the cost source accounts them — the
+        refinement reporter's multi-step move sizing reads these, so the
+        refiner and the planner share one bytes model."""
+        p = self._bytes_prefix
+        return [p[d + 1] - p[d] for d in range(self.depth)]
+
     def cut_io_bytes(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
         """(input, output) activation bytes crossing the segment boundaries."""
         in_b = self._cut_bytes[depth_lo - 1] if depth_lo > 0 else 0
@@ -138,8 +198,8 @@ class SegmentCostEngine:
         """Weight capacity after the fixed + activation reserves."""
         spec = self.spec
         act = self.segment_max_activation(depth_lo, depth_hi)
-        return int(spec.onchip_bytes - spec.fixed_reserve
-                   - spec.act_reserve_factor * act)
+        return weight_capacity_bytes(spec.onchip_bytes, spec.fixed_reserve,
+                                     spec.act_reserve_factor, act)
 
     def segment_split(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
         """(device_bytes, host_bytes) of the greedy whole-layer placement.
@@ -165,16 +225,9 @@ class SegmentCostEngine:
             self._split_cache[key] = result
             return result
         idx = max(idx, a)
-        device = prefix[idx] - base
-        host = 0
-        layer_bytes = self._layer_bytes
-        for t in range(idx, b):           # tail: greedy continues per-layer
-            bt = layer_bytes[t]
-            if device + bt <= cap:
-                device += bt
-            else:
-                host += bt
-        result = (device, host)
+        # tail: greedy continues per-layer from the already-placed prefix
+        result = greedy_layer_split(self._layer_bytes[idx:b], cap,
+                                    device0=prefix[idx] - base)
         self._split_cache[key] = result
         return result
 
@@ -187,47 +240,65 @@ class SegmentCostEngine:
         a = self._level_start[depth_lo]
         b = self._level_start[depth_hi + 1]
         cap = self.segment_capacity(depth_lo, depth_hi)
-        device = 0
-        host = 0
-        placement: Dict[str, str] = {}
-        for t in range(a, b):
-            bt = self._layer_bytes[t]
-            if device + bt <= cap:
-                device += bt
-                placement[self._flat[t]] = "device"
-            else:
-                host += bt
-                placement[self._flat[t]] = "host"
-        return device, host, placement
+        return greedy_layer_placement(self._flat[a:b],
+                                      self._layer_bytes[a:b], cap)
 
     # -- time ----------------------------------------------------------------
     def segment_weight_load_time(self, depth_lo: int, depth_hi: int) -> float:
         """Systolic-array weight-fill time of the segment — the stage-time
         term that does NOT amortize when a stage is replicated (every
         replica re-fills its array per inference it serves)."""
+        if self._wload_prefix is not None:
+            return (self._wload_prefix[depth_hi + 1]
+                    - self._wload_prefix[depth_lo])
         weight_bytes = self.segment_weight_bytes(depth_lo, depth_hi)
         return weight_bytes / (self.spec.weight_load_gbps * 1e9)
+
+    def segment_compute_time(self, depth_lo: int, depth_hi: int) -> float:
+        """Compute + weight-load time only (no transfer terms): the term a
+        measured cost source replaces."""
+        if self._time_prefix is not None:
+            return self._time_prefix[depth_hi + 1] - self._time_prefix[depth_lo]
+        spec = self.spec
+        macs = self.segment_macs(depth_lo, depth_hi)
+        weight_bytes = self.segment_weight_bytes(depth_lo, depth_hi)
+        return (macs / spec.macs_per_s
+                + weight_bytes / (spec.weight_load_gbps * 1e9))
 
     def segment_time(self, depth_lo: int, depth_hi: int) -> float:
         """Per-inference latency of one segment on one TPU — O(1).
 
-        Same expression (and float evaluation order) as the naive
-        ``EdgeTPUModel.segment_time``: systolic compute + weight load +
-        host-resident weight streaming + spill overhead + stage I/O +
-        per-inference overhead.
+        Analytic mode: same expression (and float evaluation order) as the
+        naive ``EdgeTPUModel.segment_time`` — systolic compute + weight
+        load + host-resident weight streaming + spill overhead + stage I/O
+        + per-inference overhead.  Measured mode: the compute+weight-load
+        term is the prefix-summed per-depth source time; the transfer
+        terms still come from the memory model.
         """
         spec = self.spec
-        macs = self.segment_macs(depth_lo, depth_hi)
-        weight_bytes = self.segment_weight_bytes(depth_lo, depth_hi)
+        t_compute = self.segment_compute_time(depth_lo, depth_hi)
         host_bytes = self.segment_host_bytes(depth_lo, depth_hi)
-        t_compute = (macs / spec.macs_per_s
-                     + weight_bytes / (spec.weight_load_gbps * 1e9))
         t_stream = host_bytes / (spec.pcie_gbps * 1e9)
         t_spill = spec.spill_event_overhead_s if host_bytes > 0 else 0.0
         in_bytes, out_bytes = self.cut_io_bytes(depth_lo, depth_hi)
         t_io = (in_bytes + out_bytes) / (spec.pcie_gbps * 1e9)
         return (t_compute + t_stream + t_spill + t_io
                 + spec.per_inference_overhead_s)
+
+    def depth_cost_ns(self) -> List[int]:
+        """Integer per-depth compute cost in nanoseconds — the balance
+        weights of the ``balanced_cost`` strategy.  Analytic mode keeps
+        that strategy's historical expression exactly; measured mode uses
+        the source's per-depth times."""
+        if self._time_prefix is not None:
+            tp = self._time_prefix
+            return [int(1e9 * (tp[d + 1] - tp[d])) for d in range(self.depth)]
+        spec = self.spec
+        mp, bp = self._macs_prefix, self._bytes_prefix
+        return [int(1e9 * ((mp[d + 1] - mp[d]) / spec.macs_per_s
+                           + (bp[d + 1] - bp[d])
+                           / (spec.weight_load_gbps * 1e9)))
+                for d in range(self.depth)]
 
     def stage_times(self, cuts: Sequence[int]) -> List[float]:
         from .segmentation import segment_ranges

@@ -1,15 +1,72 @@
-"""Per-layer cost helpers shared by the CNN and LM graph builders.
+"""Per-layer cost helpers shared by the CNN and LM graph builders, plus the
+single bytes-accounting model every memory consumer prices with.
 
 MAC conventions follow the paper (§3): a conv layer's MACs = #params × output
 spatial dims (stride-1, zero padding keeps W×H constant); a dense layer's
 MACs = #params.  Activation byte counts assume int8 for the quantized CNN
 path (1 B/elt) and bf16 (2 B/elt) for LM archs.
+
+The memory helpers (:func:`weight_capacity_bytes`,
+:func:`greedy_layer_split`) are the paper's §4.2 compiler-report model in
+one place: the :class:`~repro.core.cost_engine.SegmentCostEngine`, the
+naive :class:`~repro.core.edge_tpu_model.EdgeTPUModel` paths, and the
+refinement reporter all call them, so device/host byte accounting cannot
+drift between the planner, the refiner, and the CostSource layer.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Tuple
+from typing import Dict, Sequence, Tuple
+
+
+# ---------------------------------------------------------------------------
+# bytes accounting (paper §4.2: the Edge TPU compiler's memory report)
+# ---------------------------------------------------------------------------
+def weight_capacity_bytes(onchip_bytes: int, fixed_reserve: int,
+                          act_reserve_factor: float,
+                          max_activation: int) -> int:
+    """Weight capacity of one device: on-chip memory minus the fixed
+    (instructions) reserve minus the activation reserve — the exact
+    expression (and float evaluation order) every capacity query uses."""
+    return int(onchip_bytes - fixed_reserve
+               - act_reserve_factor * max_activation)
+
+
+def greedy_layer_split(layer_bytes: Sequence[int], capacity: int,
+                       device0: int = 0) -> Tuple[int, int]:
+    """(device_bytes, host_bytes) of the paper's greedy whole-layer
+    placement: layers are placed in order while they fit; a rejected layer
+    goes to host, but smaller later layers may still fit (`§4.2: 'the
+    neural layer is the minimal storage unit'`).  ``device0`` seeds the
+    device counter — the cost engine's binary-searched fast path hands the
+    tail scan its already-placed prefix."""
+    device = device0
+    host = 0
+    for b in layer_bytes:
+        if device + b <= capacity:
+            device += b
+        else:
+            host += b
+    return device, host
+
+
+def greedy_layer_placement(names: Sequence[str],
+                           layer_bytes: Sequence[int], capacity: int
+                           ) -> Tuple[int, int, Dict[str, str]]:
+    """Full (device, host, {layer: "device"|"host"}) greedy placement —
+    the per-layer report variant of :func:`greedy_layer_split`."""
+    device = 0
+    host = 0
+    placement: Dict[str, str] = {}
+    for n, b in zip(names, layer_bytes):
+        if device + b <= capacity:
+            device += b
+            placement[n] = "device"
+        else:
+            host += b
+            placement[n] = "host"
+    return device, host, placement
 
 
 def conv2d_params(cin: int, cout: int, kh: int, kw: int, bias: bool = True) -> int:

@@ -29,6 +29,7 @@ import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from .cost_engine import SegmentCostEngine
+from .costs import greedy_layer_placement, weight_capacity_bytes
 from .graph import LayerGraph
 from .segmentation import segment_ranges
 
@@ -98,13 +99,20 @@ class EdgeTPUModel:
     bit-identical results, O(1) instead of O(layers) per query.
     ``use_engine=False`` keeps the naive walk-every-layer paths (the
     before/after baseline for benchmarks/planner_bench.py).
+
+    ``cost_source`` selects where per-depth costs come from (a
+    :class:`~repro.profiling.sources.CostSource`; ``None`` and the
+    analytic source are equivalent and bit-identical).  The naive
+    ``use_engine=False`` paths are the closed-form analytic model by
+    definition and ignore it.
     """
 
     def __init__(self, graph: LayerGraph, spec: Optional[EdgeTPUSpec] = None,
-                 use_engine: bool = True):
+                 use_engine: bool = True, cost_source=None):
         self.graph = graph
         self.spec = spec or EdgeTPUSpec()
         self.use_engine = use_engine
+        self.cost_source = cost_source
         self._engine: Optional[SegmentCostEngine] = None
         self._depths = graph.depths()
         self._levels = graph.levels()
@@ -113,7 +121,8 @@ class EdgeTPUModel:
     def engine(self) -> SegmentCostEngine:
         """Lazily built segment-cost fast path (always available)."""
         if self._engine is None:
-            self._engine = SegmentCostEngine(self.graph, self.spec)
+            self._engine = SegmentCostEngine(self.graph, self.spec,
+                                             cost_source=self.cost_source)
         return self._engine
 
     # -- memory -------------------------------------------------------------
@@ -128,19 +137,11 @@ class EdgeTPUModel:
         spec = self.spec
         layers = [n for lvl in self._levels[depth_lo:depth_hi + 1] for n in lvl]
         act = max([self.graph.nodes[n].out_bytes for n in layers] + [0])
-        capacity = int(spec.onchip_bytes - spec.fixed_reserve
-                       - spec.act_reserve_factor * act)
-        device_used = 0
-        host_used = 0
-        placement: Dict[str, str] = {}
-        for n in layers:
-            b = self.graph.nodes[n].bytes
-            if device_used + b <= capacity:
-                device_used += b
-                placement[n] = "device"
-            else:
-                host_used += b
-                placement[n] = "host"
+        capacity = weight_capacity_bytes(spec.onchip_bytes,
+                                         spec.fixed_reserve,
+                                         spec.act_reserve_factor, act)
+        device_used, host_used, placement = greedy_layer_placement(
+            layers, [self.graph.nodes[n].bytes for n in layers], capacity)
         return MemoryReport(device_bytes=device_used, host_bytes=host_used,
                             layer_placement=placement)
 

@@ -16,47 +16,24 @@ the exact cuts and modeled stage times the cut-list plans did.
 
 Since the ``repro.api`` front door (DeploymentSpec -> plan -> Deployment),
 this module owns only the plan *types* (:class:`StagePlacement`,
-:class:`PlacementPlan`) and the stage-count rules; the orchestration entry
-points ``plan`` / ``plan_placement`` / ``plan_summary_table`` are
-one-release deprecation shims that delegate to the strategy registry in
-:mod:`repro.api.strategies`.
+:class:`PlacementPlan`) and the stage-count rules.  The legacy
+orchestration entry points ``plan`` / ``plan_placement`` /
+``plan_summary_table`` spent their one deprecation release as delegating
+shims and are now **removed**: calling them raises with a pointer at the
+replacement (the repo's own surface migrated in the previous release; CI
+runs ``-W error::DeprecationWarning`` to keep it that way).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
-import warnings
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
-from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
+from .edge_tpu_model import EdgeTPUModel
 from .graph import LayerGraph
-from .refine import MemoryReporter, RefinementResult
+from .refine import RefinementResult
 from .segmentation import segment_ranges, segment_sums
-from .topology import DeviceSpec, Topology
-
-STRATEGIES = ("comp", "prof", "balanced", "balanced_norefine",
-              "balanced_cost", "opt")
-
-# -- legacy-entry-point deprecation (exactly one warning per entry point) ----
-_DEPRECATION_WARNED: set = set()
-
-
-def _warn_deprecated(entry: str, replacement: str) -> None:
-    """Emit a single DeprecationWarning per legacy entry point per process
-    (a serving loop replanning at 1 Hz must not flood the log), pointing
-    at the repro.api front door."""
-    if entry in _DEPRECATION_WARNED:
-        return
-    _DEPRECATION_WARNED.add(entry)
-    warnings.warn(
-        f"repro.core.planner.{entry} is deprecated and will be removed "
-        f"after one release; use {replacement} (see EXPERIMENTS.md "
-        f"§Deployment API)", DeprecationWarning, stacklevel=3)
-
-
-def _reset_deprecation_warnings() -> None:
-    """Test hook: re-arm the exactly-once gates."""
-    _DEPRECATION_WARNED.clear()
+from .topology import DeviceSpec
 
 
 @dataclasses.dataclass
@@ -296,68 +273,34 @@ class PlacementPlan:
 SegmentationPlan = PlacementPlan
 
 
-def plan(
-    graph: LayerGraph,
-    n_stages: int,
-    strategy: str = "balanced",
-    reporter: Optional[MemoryReporter] = None,
-    tpu_model: Optional[EdgeTPUModel] = None,
-    prof_batch: int = 15,
-) -> PlacementPlan:
-    """DEPRECATED shim (one release): delegates to the strategy registry
-    behind ``repro.api.plan`` and emits a single DeprecationWarning per
-    process.  Strategy semantics (and their docs) live in
-    :mod:`repro.api.strategies`; plans are bit-identical to what this
-    function historically produced.
+def _removed(entry: str, replacement: str):
+    """The legacy entry points had their one deprecation release (shims
+    delegating to the registry, warning once per process); they are now
+    stubs that fail fast with the migration pointer."""
+    raise RuntimeError(
+        f"repro.core.planner.{entry} was removed after its deprecation "
+        f"release; use {replacement} (see EXPERIMENTS.md §Deployment API)")
 
-    New call shape::
+
+def plan(*_args, **_kwargs) -> PlacementPlan:
+    """REMOVED — use ``repro.api.plan``::
 
         from repro.api import DeploymentSpec, plan
         plan(DeploymentSpec(stages=n, strategy="balanced"), graph=graph)
     """
-    _warn_deprecated(
-        "plan", "repro.api.plan(DeploymentSpec(stages=..., strategy=...))")
-    if strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {strategy!r}; pick from {STRATEGIES}")
-    from ..api import DeploymentSpec
-    from ..api import plan as api_plan
-    spec = DeploymentSpec(stages=n_stages, strategy=strategy,
-                          prof_batch=prof_batch)
-    return api_plan(spec, graph=graph, tpu_model=tpu_model,
-                    reporter=reporter, attach_report=False)
+    _removed("plan",
+             "repro.api.plan(DeploymentSpec(stages=..., strategy=...))")
 
 
-def plan_placement(
-    graph: LayerGraph,
-    topology: Topology,
-    strategy: str = "opt",
-    replicate: bool = True,
-    max_replicas: Optional[int] = None,
-    base_spec: Optional[EdgeTPUSpec] = None,
-) -> PlacementPlan:
-    """DEPRECATED shim (one release): delegates to the ``placement`` /
-    ``balanced_placement`` registry strategies behind ``repro.api.plan``
-    and emits a single DeprecationWarning per process.  Plans are
-    bit-identical to what this function historically produced.
-
-    New call shape::
+def plan_placement(*_args, **_kwargs) -> PlacementPlan:
+    """REMOVED — use ``repro.api.plan``::
 
         from repro.api import DeploymentSpec, plan
         plan(DeploymentSpec(topology=topo, strategy="placement"), graph=g)
     """
-    _warn_deprecated(
+    _removed(
         "plan_placement",
         "repro.api.plan(DeploymentSpec(topology=..., strategy='placement'))")
-    if strategy not in ("opt", "balanced"):
-        raise ValueError(f"plan_placement supports 'opt' and 'balanced', "
-                         f"got {strategy!r}")
-    from ..api import DeploymentSpec
-    from ..api import plan as api_plan
-    spec = DeploymentSpec(
-        strategy="placement" if strategy == "opt" else "balanced_placement",
-        topology=topology, replicate=replicate, max_replicas=max_replicas)
-    return api_plan(spec, graph=graph, base_spec=base_spec,
-                    attach_report=False)
 
 
 def min_stages_to_fit(graph: LayerGraph, capacity_bytes: int) -> int:
@@ -387,14 +330,7 @@ def min_stages_no_spill(graph: LayerGraph,
     return start + max_extra
 
 
-def plan_summary_table(graph: LayerGraph, n_stages: int,
-                       strategies: Sequence[str] = ("comp", "balanced")) -> Dict[str, PlacementPlan]:
-    """DEPRECATED shim — use ``repro.api.plan`` per strategy."""
-    _warn_deprecated(
-        "plan_summary_table",
-        "repro.api.plan(DeploymentSpec(...)) per strategy")
-    from ..api import DeploymentSpec
-    from ..api import plan as api_plan
-    return {s: api_plan(DeploymentSpec(stages=n_stages, strategy=s),
-                        graph=graph, attach_report=False)
-            for s in strategies}
+def plan_summary_table(*_args, **_kwargs) -> Dict[str, PlacementPlan]:
+    """REMOVED — call ``repro.api.plan(DeploymentSpec(...))`` per strategy."""
+    _removed("plan_summary_table",
+             "repro.api.plan(DeploymentSpec(...)) per strategy")

@@ -164,11 +164,23 @@ def refine_cuts(
 
 class GraphReporter:
     """MemoryReporter over an analytical EdgeTPUModel (or any object exposing
-    ``segment_memory`` + a LayerGraph) — used by tests and CNN benchmarks."""
+    ``segment_memory`` + a LayerGraph) — used by tests and CNN benchmarks.
+
+    Per-depth weight bytes come from the model's segment-cost engine when
+    it uses one, so the refiner's multi-step move sizing uses the exact
+    bytes accounting of the planner's cost source (one model, no
+    duplicated size math); objects without an engine — and the naive
+    ``use_engine=False`` baseline models, which must not silently build
+    one — fall back to the graph's own per-depth array, the same numbers
+    for the analytic source."""
 
     def __init__(self, tpu_model):
         self._m = tpu_model
-        self._bytes_per_depth = tpu_model.graph.bytes_per_depth()
+        engine = (getattr(tpu_model, "engine", None)
+                  if getattr(tpu_model, "use_engine", True) else None)
+        self._bytes_per_depth = (engine.depth_weight_bytes()
+                                 if engine is not None
+                                 else tpu_model.graph.bytes_per_depth())
 
     def segment_report(self, depth_lo: int, depth_hi: int) -> Tuple[int, int]:
         # fast path: bytes-only query, no per-layer placement dict

@@ -143,14 +143,19 @@ class TopologyCostModel:
     device limits without per-stage O(L) rebuilds).  This is the
     "per-stage device limits instead of one global ``tpu_mem_bytes``"
     object: each stage's memory capacity and time constants come from the
-    device the placement assigns it.
+    device the placement assigns it.  ``cost_source`` (a
+    :class:`~repro.profiling.sources.CostSource`) threads through to
+    every per-device engine — a trace-backed source re-materializes its
+    per-depth times per device class, scaled by the device's compute
+    rate.
     """
 
     def __init__(self, graph: LayerGraph, topology: Topology,
-                 base_spec: Optional[EdgeTPUSpec] = None):
+                 base_spec: Optional[EdgeTPUSpec] = None, cost_source=None):
         self.graph = graph
         self.topology = topology
-        self.base_model = EdgeTPUModel(graph, base_spec)
+        self.base_model = EdgeTPUModel(graph, base_spec,
+                                       cost_source=cost_source)
         self._engines: Dict[DeviceSpec, SegmentCostEngine] = {}
 
     def engine_for(self, device: DeviceSpec) -> SegmentCostEngine:
@@ -212,10 +217,13 @@ class TopologyCostModel:
 
 class _EngineReporterAdapter:
     """Duck-typed EdgeTPUModel stand-in for GraphReporter: exposes
-    ``segment_report_bytes`` + ``graph`` over a single engine."""
+    ``segment_report_bytes`` + ``graph`` + ``engine`` over a single
+    engine (``engine`` lets the reporter share the cost source's
+    per-depth bytes accounting)."""
 
     def __init__(self, engine: SegmentCostEngine, graph: LayerGraph):
         self._engine = engine
+        self.engine = engine
         self.graph = graph
 
     def segment_report_bytes(self, lo: int, hi: int) -> Tuple[int, int]:

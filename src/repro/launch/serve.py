@@ -91,7 +91,8 @@ def spec_from_args(args) -> DeploymentSpec:
         model=f"lm:{args.arch}:seq={args.seq}",
         microbatch=args.microbatch,
         microbatch_wait_s=args.microbatch_wait_ms / 1e3,
-        max_batch=args.requests, max_wait_s=0.005)
+        max_batch=args.requests, max_wait_s=0.005,
+        cost_source=args.cost_source)
     if args.device_budget:
         # joint cuts+replicas search: a bottleneck stage may get k devices
         # (round-robin fan-out in the executor, order-restoring fan-in)
@@ -117,8 +118,16 @@ def main() -> None:
                     help="max hold time for a micro-batch bucket to fill")
     ap.add_argument("--device-budget", type=int, default=0,
                     help="plan over this many devices with replicated "
-                         "bottleneck stages (plan_placement; 0 = off, use "
-                         "--stages identical devices, one per stage)")
+                         "bottleneck stages (the 'placement' strategy; "
+                         "0 = off, use --stages identical devices, one "
+                         "per stage)")
+    ap.add_argument("--cost-source", default="analytic",
+                    help="where the planner's per-depth costs come from: "
+                         "'analytic' (closed-form device model), "
+                         "'trace:<path>' (a repro.profiling ProfileTrace "
+                         "artifact), or 'calibrated:<path>' (analytic "
+                         "model least-squares-fit to that trace); see "
+                         "EXPERIMENTS.md §Profiling & calibration")
     args = ap.parse_args()
 
     mod = configs.get(args.arch)

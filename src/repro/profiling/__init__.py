@@ -1,0 +1,43 @@
+"""Profiling, trace, and calibration: the pluggable cost layer.
+
+The paper's segmentation is profile-based — measured per-layer times on
+the real device drive the balanced cuts.  This package provides that loop
+for the reproduction:
+
+* :func:`profile_model` — run a ``GraphModel`` depth-by-depth under
+  ``time.perf_counter`` (warmup / repeats / trimmed mean) and capture a
+  versioned, JSON-persisted :class:`ProfileTrace`;
+* :class:`CostSource` and its three implementations
+  (:class:`AnalyticCostSource`, :class:`TraceCostSource`,
+  :class:`CalibratedCostSource`) — the seam the
+  :class:`~repro.core.cost_engine.SegmentCostEngine` prices segments
+  through, selected per-deployment via ``DeploymentSpec.cost_source``
+  (``"analytic"`` / ``"trace:<path>"`` / ``"calibrated:<path>"``);
+* :func:`fit_trace` — least-squares calibration of the analytic model's
+  per-device coefficients against a trace.
+
+See EXPERIMENTS.md §Profiling & calibration for the capture -> calibrate
+-> plan workflow.
+"""
+from .calibrate import CalibrationFit, cliff_bytes_per_depth, fit_trace
+from .sources import (AnalyticCostSource, CalibratedCostSource, CostSource,
+                      DepthCosts, TraceCostSource, parse_cost_source,
+                      resolve_cost_source)
+from .trace import TRACE_FORMAT, DepthSample, ProfileTrace
+
+
+def __getattr__(name):
+    # the profiler runs real JAX forwards; import it lazily so spec
+    # validation / trace-backed planning stay jax-free
+    if name in ("profile_model", "trimmed_mean"):
+        from . import profiler
+        return getattr(profiler, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "ProfileTrace", "DepthSample", "TRACE_FORMAT",
+    "profile_model", "trimmed_mean",
+    "CostSource", "DepthCosts", "AnalyticCostSource", "TraceCostSource",
+    "CalibratedCostSource", "parse_cost_source", "resolve_cost_source",
+    "CalibrationFit", "fit_trace", "cliff_bytes_per_depth",
+]

@@ -4,8 +4,8 @@
 positional call shape most tests were written against — every test plans
 through the strategy registry (no DeprecationWarnings anywhere in the
 suite; CI runs a ``-W error::DeprecationWarning`` leg to prove it).  The
-*legacy shims themselves* are exercised only by the dedicated deprecation
-and equivalence tests in tests/test_deploy_api.py.
+removed ``repro.core.planner`` entry points are exercised only by the
+raises-with-pointer tests in tests/test_deploy_api.py.
 """
 from repro.api import DeploymentSpec
 from repro.api import plan as _front_door_plan

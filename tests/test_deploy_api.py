@@ -1,19 +1,18 @@
 """Front-door API tests (ISSUE 4): the declarative
 DeploymentSpec -> plan -> Deployment surface.
 
-* Equivalence matrix — every registered homogeneous strategy x all 21
-  Table-1 models: ``repro.api.plan(spec)`` cuts and modeled stage times
-  are bit-identical to the legacy ``repro.core.planner`` call paths; the
-  placement strategies likewise against ``plan_placement``.
+* Strategy self-consistency: placement delegation to the plain planner,
+  refine-override composition, explicit ``cost_source="analytic"``
+  bit-identical to the default (the full 21-model AnalyticCostSource
+  equivalence matrix lives in tests/test_profiling.py).
 * DeploymentSpec / PlanReport JSON round-trip property tests (hypothesis).
-* Deprecation shims emit exactly one DeprecationWarning per legacy entry
-  point per process, pointing at the new API.
+* The removed ``repro.core.planner`` entry points raise with a pointer at
+  the front door (ISSUE 5: the one-release shims are gone).
 * Neutral edge-case records: ``PlanReport`` on 1-stage/empty plans,
   ``latency_percentiles([])``.
 * Deployment handle: executor/serve wiring, reconfigure hot-swap,
   from_plan, spec validation errors.
 """
-import dataclasses
 import json
 import warnings
 
@@ -39,14 +38,6 @@ except ImportError:
 def toy_graph(n=6, params=50_000, macs=5_000_000, out_bytes=1024):
     return chain_graph("toy", [(f"l{i}", params, macs, out_bytes)
                                for i in range(n)])
-
-
-def _legacy(fn, *args, **kw):
-    """Call a deprecated entry point with its warning suppressed (the
-    strict -W error::DeprecationWarning CI leg runs this file too)."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return fn(*args, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -87,73 +78,50 @@ def test_register_strategy_plugs_in():
 
 
 # ---------------------------------------------------------------------------
-# equivalence matrix (acceptance criterion)
+# strategy self-consistency (the 21-model AnalyticCostSource equivalence
+# matrix — the ISSUE 5 acceptance criterion — lives in tests/test_profiling)
 # ---------------------------------------------------------------------------
-HOMOG_STRATEGIES = ("comp", "balanced", "balanced_norefine",
-                    "balanced_cost", "opt")
-
-
-@pytest.mark.parametrize("name", sorted(REAL_CNNS))
-def test_front_door_bit_identical_to_legacy_all_models(name):
-    """For every Table-1 model and every homogeneous strategy (prof at
-    s=2 — its C(d-1, s-1) search is the paper's infeasibility point),
-    plan(spec) == legacy plan(): same cuts, same modeled stage times,
-    same strategy tag, same refinement outcome."""
-    g = REAL_CNNS[name]().to_layer_graph()
-    m = EdgeTPUModel(g)
-    s = max(2, min(4, g.depth - 1))
-    matrix = [(strat, s) for strat in HOMOG_STRATEGIES] + [("prof", 2)]
-    for strat, n in matrix:
-        new = plan(DeploymentSpec(stages=n, strategy=strat), graph=g,
-                   tpu_model=m)
-        old = _legacy(legacy.plan, g, n, strat, tpu_model=m)
-        assert new.cuts == old.cuts, (name, strat)
-        assert new.stage_times_s == old.stage_times_s, (name, strat)
-        assert new.stage_params == old.stage_params, (name, strat)
-        assert new.strategy == old.strategy == strat, (name, strat)
-        assert (new.refinement is None) == (old.refinement is None)
-        if new.refinement is not None:
-            assert new.refinement.cuts == old.refinement.cuts
-
-
-@pytest.mark.parametrize("name", sorted(REAL_CNNS))
-def test_placement_delegation_bit_identical_all_models(name):
+@pytest.mark.parametrize("name", ("ResNet50", "MobileNetV2"))
+def test_placement_delegation_matches_plain_planner(name):
     """Homogeneous reference topology with replicate=False delegates to
-    the plain planner on both surfaces — bit-identical all the way."""
+    the plain 'opt' planner — bit-identical cuts and times."""
     g = REAL_CNNS[name]().to_layer_graph()
     s = max(2, min(3, g.depth - 1))
-    new = plan(DeploymentSpec(strategy="placement", device_budget=s,
-                              replicate=False), graph=g)
-    old = _legacy(legacy.plan_placement, g, Topology.homogeneous(s),
-                  strategy="opt", replicate=False)
-    assert new.cuts == old.cuts
-    assert new.stage_times_s == old.stage_times_s
-    assert new.replica_counts == old.replica_counts == [1] * s
+    placed = plan(DeploymentSpec(strategy="placement", device_budget=s,
+                                 replicate=False), graph=g)
+    plain = plan(DeploymentSpec(stages=s, strategy="opt"), graph=g)
+    assert placed.cuts == plain.cuts
+    assert placed.stage_times_s == plain.stage_times_s
+    assert placed.replica_counts == [1] * s
 
 
 @pytest.mark.parametrize("name", ("MobileNet", "MobileNetV2",
                                   "EfficientNetLiteB0"))
-def test_placement_joint_dp_bit_identical(name):
+def test_placement_joint_dp_ignores_cost_source_threading(name):
+    """The joint cuts+replicas DP must price identically through the
+    default path and an explicit analytic CostSource."""
     g = REAL_CNNS[name]().to_layer_graph()
-    topo = Topology.homogeneous(4)
     new = plan(DeploymentSpec(strategy="placement", device_budget=4),
                graph=g)
-    old = _legacy(legacy.plan_placement, g, topo, replicate=True)
-    assert new.cuts == old.cuts
-    assert new.replica_counts == old.replica_counts
-    assert new.stage_times_s == old.stage_times_s
-    assert new.strategy == old.strategy == "opt_placement"
+    explicit = plan(DeploymentSpec(strategy="placement", device_budget=4,
+                                   cost_source="analytic"), graph=g)
+    assert new.cuts == explicit.cuts
+    assert new.replica_counts == explicit.replica_counts
+    assert new.stage_times_s == explicit.stage_times_s
+    assert new.strategy == explicit.strategy == "opt_placement"
 
 
-def test_balanced_placement_heterogeneous_bit_identical():
+def test_balanced_placement_heterogeneous_devices_assigned():
     g = toy_graph(12)
     topo = Topology(devices=(DeviceSpec(name="fast", compute_scale=2.0),
                              DeviceSpec(), DeviceSpec()))
     new = plan(DeploymentSpec(strategy="balanced_placement", topology=topo),
                graph=g)
-    old = _legacy(legacy.plan_placement, g, topo, strategy="balanced")
-    assert new.cuts == old.cuts
-    assert new.stage_times_s == old.stage_times_s
+    explicit = plan(DeploymentSpec(strategy="balanced_placement",
+                                   topology=topo, cost_source="analytic"),
+                    graph=g)
+    assert new.cuts == explicit.cuts
+    assert new.stage_times_s == explicit.stage_times_s
     assert [d.name for d in topo.devices[:new.n_stages]] \
         == [s.device.name for s in new.stages]
 
@@ -254,6 +222,12 @@ def test_spec_validation_errors():
     with pytest.raises(ValueError, match="objective"):
         plan(DeploymentSpec(stages=2, strategy="opt",
                             objective="balance_params"), graph=toy_graph())
+    with pytest.raises(ValueError, match="cost source"):
+        DeploymentSpec(stages=2, cost_source="vibes")
+    with pytest.raises(ValueError, match="trace path"):
+        DeploymentSpec(stages=2, cost_source="trace:")
+    with pytest.raises(ValueError, match="no argument"):
+        DeploymentSpec(stages=2, cost_source="analytic:x")
 
 
 def test_spec_objective_accepted_when_matching():
@@ -305,6 +279,9 @@ if HAVE_HYPOTHESIS:
         refine=st.one_of(st.none(), st.booleans()),
         memory_headroom_bytes=st.integers(min_value=0, max_value=2 ** 24),
         prof_batch=st.integers(min_value=1, max_value=64),
+        cost_source=st.sampled_from(
+            ("analytic", "trace:artifacts/t.json",
+             "calibrated:artifacts/t.json")),
         max_batch=st.integers(min_value=1, max_value=256),
         max_wait_s=st.floats(min_value=0, max_value=10, allow_nan=False),
         queue_size=st.integers(min_value=1, max_value=1024),
@@ -397,46 +374,36 @@ def test_plan_report_empty_plan_is_neutral():
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims (satellite: exactly-once per entry point)
+# removed legacy entry points (ISSUE 5 satellite: shims deleted, stubs
+# raise with the migration pointer)
 # ---------------------------------------------------------------------------
-def _deprecations(w):
-    return [x for x in w if issubclass(x.category, DeprecationWarning)
-            and "repro.core.planner" in str(x.message)]
-
-
-def test_legacy_plan_warns_exactly_once():
-    legacy._reset_deprecation_warnings()
+@pytest.mark.parametrize("entry,args", [
+    ("plan", lambda g: (g, 2, "comp")),
+    ("plan_placement", lambda g: (g, Topology.homogeneous(2))),
+    ("plan_summary_table", lambda g: (g, 2)),
+])
+def test_removed_entry_points_raise_with_pointer(entry, args):
     g = toy_graph()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        p1 = legacy.plan(g, 2, "comp")
-        p2 = legacy.plan(g, 3, "balanced_norefine")
-    deps = _deprecations(w)
-    assert len(deps) == 1
-    assert "repro.api.plan" in str(deps[0].message)
-    assert p1.n_stages == 2 and p2.n_stages == 3      # still functional
+    stub = getattr(legacy, entry)
+    with pytest.raises(RuntimeError, match="repro.api"):
+        stub(*args(g))
+    with pytest.raises(RuntimeError, match=entry):
+        stub(*args(g))
 
 
-def test_legacy_plan_placement_and_summary_warn_once_each():
-    legacy._reset_deprecation_warnings()
-    g = toy_graph()
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        legacy.plan_placement(g, Topology.homogeneous(2))
-        legacy.plan_placement(g, Topology.homogeneous(3))
-        legacy.plan_summary_table(g, 2)
-        legacy.plan_summary_table(g, 2)
-    deps = _deprecations(w)
-    assert len(deps) == 2                      # one per entry point
-    msgs = "\n".join(str(d.message) for d in deps)
-    assert "plan_placement" in msgs and "plan_summary_table" in msgs
+def test_removed_entry_points_also_raise_via_core_namespace():
+    """`from repro.core import plan` still binds — but calling it fails
+    fast with the pointer, not silently re-planning the legacy way."""
+    from repro.core import plan as core_plan
+    with pytest.raises(RuntimeError, match="EXPERIMENTS.md"):
+        core_plan(toy_graph(), 2)
 
 
-def test_legacy_paths_never_warn_from_the_new_surface():
+def test_front_door_emits_no_deprecation_warnings():
     """The repo's own surface (api, benchmarks, examples, ElasticPlanner)
-    must not touch the shims: planning through the front door emits no
-    DeprecationWarning."""
-    legacy._reset_deprecation_warnings()
+    is fully off the removed entry points: planning through the front
+    door emits no DeprecationWarning (CI also runs the whole suite under
+    -W error::DeprecationWarning)."""
     g = toy_graph()
     from repro.runtime import ElasticPlanner
     with warnings.catch_warnings():
@@ -445,7 +412,7 @@ def test_legacy_paths_never_warn_from_the_new_surface():
         plan(DeploymentSpec(strategy="placement", device_budget=3),
              graph=g)
         ElasticPlanner(g, "balanced_norefine").plan_for(2)
-        legacy.min_stages_no_spill(g)            # helper is not deprecated
+        legacy.min_stages_no_spill(g)            # helper was kept
 
 
 # ---------------------------------------------------------------------------

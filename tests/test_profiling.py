@@ -1,0 +1,440 @@
+"""Profiling / CostSource tests (ISSUE 5).
+
+* ProfileTrace JSON round-trip: versioned schema, unknown-field tolerance
+  (trace and sample level), wrong-format rejection.
+* Layer-granular profiler: depth coverage, positive times, static columns
+  matching the graph, determinism of the static fields.
+* AnalyticCostSource plan equivalence over all 21 Table-1 models — plans
+  through an explicit analytic source are bit-identical to the default
+  path AND to the naive (use_engine=False) model, the pre-CostSource
+  ground truth (acceptance criterion).
+* TraceCostSource: measured per-depth times drive the engine (prefix-sum
+  additivity), analytic fallback for unprofiled depths, device scaling.
+* CalibratedCostSource determinism: same trace -> same coefficients ->
+  same materialized times and plans; degenerate traces fall back to the
+  analytic prediction.
+* PlanReport provenance: cost_source recorded, trace stage times +
+  modeled-vs-trace error present iff a trace covers the plan.
+"""
+import dataclasses
+import json
+
+import pytest
+
+from conftest import api_plan
+from repro.api import DeploymentSpec, plan
+from repro.core import EdgeTPUModel, EdgeTPUSpec, chain_graph
+from repro.core.cost_engine import SegmentCostEngine
+from repro.core.segmentation import segment_ranges
+from repro.models.cnn import REAL_CNNS, synthetic_cnn
+from repro.profiling import (AnalyticCostSource, CalibratedCostSource,
+                             DepthSample, ProfileTrace, TraceCostSource,
+                             fit_trace, parse_cost_source,
+                             resolve_cost_source, trimmed_mean)
+
+
+def toy_graph(n=8, params=50_000, macs=5_000_000, out_bytes=1024):
+    return chain_graph("toy", [(f"l{i}", params, macs, out_bytes)
+                               for i in range(n)])
+
+
+def toy_trace(g, base=1e-3, step=1e-4, skip=()):
+    """A synthetic trace over `g` with deterministic per-depth times."""
+    P, M, B = (g.params_per_depth(), g.macs_per_depth(),
+               g.bytes_per_depth())
+    samples = tuple(
+        DepthSample(depth=d, time_s=base + d * step,
+                    layers=tuple(g.levels()[d]), params=P[d], macs=M[d],
+                    weight_bytes=B[d], raw_times_s=(base + d * step,))
+        for d in range(g.depth) if d not in skip)
+    return ProfileTrace(graph_name=g.name, samples=samples,
+                        device="synthetic", warmup=1, repeats=1)
+
+
+# ---------------------------------------------------------------------------
+# trace schema
+# ---------------------------------------------------------------------------
+def test_trace_json_roundtrip_exact():
+    tr = toy_trace(toy_graph())
+    back = ProfileTrace.from_json(tr.to_json())
+    assert back == tr
+    json.loads(tr.to_json())               # plain JSON, no repr smuggling
+
+
+def test_trace_unknown_fields_tolerated():
+    """A newer profiler may add columns; an older planner must still read
+    the times (both at the trace level and the per-sample level)."""
+    tr = toy_trace(toy_graph(4))
+    doc = tr.to_dict()
+    doc["compiler_version"] = "edgetpu-2.99"        # unknown trace field
+    doc["samples"][0]["power_mw"] = 1234            # unknown sample field
+    back = ProfileTrace.from_dict(doc)
+    assert back.depth_time_map() == tr.depth_time_map()
+    assert back.samples[0].layers == tr.samples[0].layers
+
+
+def test_trace_minor_version_accepted_wrong_format_rejected():
+    tr = toy_trace(toy_graph(4))
+    doc = tr.to_dict()
+    doc["format"] = "repro.profile_trace/v1.1"      # minor bump: readable
+    ProfileTrace.from_dict(doc)
+    doc["format"] = "repro.profile_trace/v2"
+    with pytest.raises(ValueError, match="profile trace"):
+        ProfileTrace.from_dict(doc)
+    with pytest.raises(ValueError, match="profile trace"):
+        ProfileTrace.from_dict({"graph_name": "x", "samples": []})
+
+
+def test_trace_save_load_and_queries(tmp_path):
+    g = toy_graph(6)
+    tr = toy_trace(g, skip=(3,))
+    path = tr.save(str(tmp_path / "trace.json"))
+    back = ProfileTrace.load(path)
+    assert back == tr
+    assert back.coverage(g.depth) == pytest.approx(5 / 6)
+    assert back.stage_times([(0, 2)]) == pytest.approx(
+        [sum(back.depth_time_map()[d] for d in range(3))])
+    assert back.stage_times([(2, 4)]) is None       # touches unprofiled d=3
+
+
+def test_trimmed_mean():
+    assert trimmed_mean([1.0]) == 1.0
+    assert trimmed_mean([100.0, 1.0, 2.0, 3.0, 0.0]) == 2.0   # trims ends
+    with pytest.raises(ValueError):
+        trimmed_mean([])
+
+
+# ---------------------------------------------------------------------------
+# profiler (real JAX forwards on a tiny model)
+# ---------------------------------------------------------------------------
+def test_profiler_captures_every_depth():
+    from repro.profiling import profile_model
+    m = synthetic_cnn(8, L=3, hw=16)
+    g = m.to_layer_graph()
+    tr = profile_model(m, warmup=1, repeats=2, stamp_time=False)
+    assert tr.graph_name == g.name
+    assert tr.depths == tuple(range(g.depth))
+    assert all(s.time_s > 0 for s in tr.samples)
+    assert all(len(s.raw_times_s) == 2 for s in tr.samples)
+    # static columns are the graph's own accounting
+    assert [s.params for s in tr.samples] == g.params_per_depth()
+    assert [s.macs for s in tr.samples] == g.macs_per_depth()
+    assert [s.weight_bytes for s in tr.samples] == g.bytes_per_depth()
+    assert tr.captured_unix_s == 0.0
+
+
+# ---------------------------------------------------------------------------
+# analytic-source equivalence (acceptance criterion: all 21 models)
+# ---------------------------------------------------------------------------
+ALL_STRATEGIES = ("comp", "balanced", "balanced_norefine", "balanced_cost",
+                  "opt")
+
+
+@pytest.mark.parametrize("name", sorted(REAL_CNNS))
+def test_analytic_source_plans_bit_identical_all_models(name):
+    """For every Table-1 model and homogeneous strategy (prof at s=2 —
+    its C(d-1, s-1) search is the paper's infeasibility point), planning
+    through an explicit AnalyticCostSource equals the default engine path
+    AND the naive walk-every-layer model — the pre-CostSource ground
+    truth: same cuts, same modeled stage times, same refinement."""
+    g = REAL_CNNS[name]().to_layer_graph()
+    naive = EdgeTPUModel(g, use_engine=False)
+    src_model = EdgeTPUModel(g, cost_source=AnalyticCostSource())
+    s = max(2, min(4, g.depth - 1))
+    matrix = [(strat, s) for strat in ALL_STRATEGIES] + [("prof", 2)]
+    for strat, n in matrix:
+        spec = DeploymentSpec(stages=n, strategy=strat)
+        default = plan(spec, graph=g)
+        via_src = plan(spec, graph=g, tpu_model=src_model)
+        via_naive = plan(spec, graph=g, tpu_model=naive)
+        assert via_src.cuts == default.cuts == via_naive.cuts, (name, strat)
+        assert via_src.stage_times_s == default.stage_times_s \
+            == via_naive.stage_times_s, (name, strat)
+        assert (via_src.refinement is None) == (default.refinement is None)
+        if via_src.refinement is not None:
+            assert via_src.refinement.cuts == default.refinement.cuts
+
+
+def test_explicit_analytic_cost_source_spec_is_default():
+    g = REAL_CNNS["ResNet50"]().to_layer_graph()
+    a = plan(DeploymentSpec(stages=4, strategy="balanced"), graph=g)
+    b = plan(DeploymentSpec(stages=4, strategy="balanced",
+                            cost_source="analytic"), graph=g)
+    assert a.cuts == b.cuts and a.stage_times_s == b.stage_times_s
+    assert b.report.cost_source == "analytic"
+    assert not b.report.has_trace
+
+
+# ---------------------------------------------------------------------------
+# trace-backed sources
+# ---------------------------------------------------------------------------
+def test_trace_source_times_are_prefix_additive():
+    g = toy_graph(8)
+    tr = toy_trace(g)
+    eng = SegmentCostEngine(g, EdgeTPUSpec(), TraceCostSource(tr))
+    assert eng.is_measured
+    tmap = tr.depth_time_map()
+    for lo, hi in ((0, 0), (0, 3), (2, 7), (5, 6)):
+        expect = sum(tmap[d] for d in range(lo, hi + 1))
+        assert eng.segment_compute_time(lo, hi) == pytest.approx(expect)
+        # full segment time adds the memory-model transfer terms on top
+        assert eng.segment_time(lo, hi) >= expect
+
+
+def test_trace_source_unprofiled_depth_falls_back_to_analytic():
+    g = toy_graph(8)
+    spec = EdgeTPUSpec()
+    tr = toy_trace(g, skip=(5,))
+    eng = SegmentCostEngine(g, spec, TraceCostSource(tr))
+    analytic = (g.macs_per_depth()[5] / spec.macs_per_s
+                + g.bytes_per_depth()[5] / (spec.weight_load_gbps * 1e9))
+    assert eng.segment_compute_time(5, 5) == pytest.approx(analytic)
+    # profiled neighbours still use the measured numbers
+    assert eng.segment_compute_time(4, 4) == pytest.approx(
+        tr.depth_time_map()[4])
+
+
+def test_trace_source_scales_with_device_compute():
+    """with_spec on a 2x-compute device halves measured times (the same
+    way it doubles the analytic rate); the reference device applies no
+    float op at all."""
+    from repro.core import DeviceSpec
+    g = toy_graph(6)
+    base = EdgeTPUSpec()
+    tr = toy_trace(g)
+    eng = SegmentCostEngine(g, base, TraceCostSource(tr))
+    t_ref = eng.segment_compute_time(0, 5)
+    fast = DeviceSpec(name="fast", compute_scale=2.0).specialize(base)
+    eng2 = eng.with_spec(fast)
+    assert eng2.segment_compute_time(0, 5) == pytest.approx(t_ref / 2)
+    assert eng.segment_compute_time(0, 5) == t_ref      # original untouched
+
+
+def test_trace_backed_plan_balances_measured_time():
+    """A graph with uniform params but a heavily skewed measured profile:
+    the params-balanced split ignores the skew, the trace-backed
+    balanced_cost split shifts cuts toward the slow depths."""
+    g = toy_graph(10)
+    times = [1e-3] * 10
+    times[0] = times[1] = 20e-3                 # slow front
+    samples = tuple(DepthSample(depth=d, time_s=times[d],
+                                macs=g.macs_per_depth()[d],
+                                weight_bytes=g.bytes_per_depth()[d])
+                    for d in range(10))
+    tr = ProfileTrace(graph_name=g.name, samples=samples)
+    src_model = EdgeTPUModel(g, cost_source=TraceCostSource(tr))
+    traced = plan(DeploymentSpec(stages=2, strategy="balanced_cost",
+                                 refine=False), graph=g,
+                  tpu_model=src_model)
+    uniform = plan(DeploymentSpec(stages=2, strategy="balanced_norefine"),
+                   graph=g)
+    assert uniform.cuts == [4]                  # params see no skew
+    assert traced.cuts[0] < 4                   # measured time does
+
+
+def test_resolve_cost_source_and_parse(tmp_path):
+    assert parse_cost_source("analytic") == ("analytic", None)
+    assert parse_cost_source("trace:a/b.json") == ("trace", "a/b.json")
+    assert parse_cost_source("calibrated:c.json") == ("calibrated", "c.json")
+    for bad in ("vibes", "trace:", "analytic:x"):
+        with pytest.raises(ValueError):
+            parse_cost_source(bad)
+    g = toy_graph(6)
+    path = str(tmp_path / "t.json")
+    toy_trace(g).save(path)
+    assert isinstance(resolve_cost_source("analytic"), AnalyticCostSource)
+    assert isinstance(resolve_cost_source(f"trace:{path}"), TraceCostSource)
+    assert isinstance(resolve_cost_source(f"calibrated:{path}"),
+                      CalibratedCostSource)
+
+
+def test_spec_cost_source_end_to_end(tmp_path):
+    """cost_source='trace:<path>' through the whole front door: the plan
+    is priced from the artifact and the report records provenance +
+    modeled-vs-trace error."""
+    g = toy_graph(8)
+    path = str(tmp_path / "t.json")
+    toy_trace(g).save(path)
+    ref = f"trace:{path}"
+    pl = plan(DeploymentSpec(stages=2, strategy="opt", cost_source=ref),
+              graph=g)
+    rep = pl.report
+    assert rep.cost_source == ref
+    assert rep.has_trace
+    assert len(rep.trace_stage_times_s) == 2
+    assert rep.stage_time_error_pct >= 0.0
+    assert "vs trace" in rep.describe()
+    # round-trips with the plan document
+    from repro.core import PlacementPlan
+    back = PlacementPlan.from_json(pl.to_json())
+    assert back.report == rep
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+def _linear_trace(g, mac_s=2e-12, load_s=1e-9, fixed=5e-5):
+    samples = tuple(DepthSample(
+        depth=d, time_s=(g.macs_per_depth()[d] * mac_s
+                         + g.bytes_per_depth()[d] * load_s + fixed),
+        macs=g.macs_per_depth()[d], weight_bytes=g.bytes_per_depth()[d])
+        for d in range(g.depth))
+    return ProfileTrace(graph_name=g.name, samples=samples)
+
+
+def test_fit_recovers_planted_coefficients():
+    g = chain_graph("mix", [(f"l{i}", p, m, 64)
+                            for i, (p, m) in enumerate(
+                                [(10_000, 9e6), (80_000, 2e6), (5_000, 7e6),
+                                 (120_000, 1e6), (40_000, 4e6)])])
+    fit = fit_trace(_linear_trace(g))
+    assert fit.mac_s == pytest.approx(2e-12, rel=1e-6)
+    assert fit.load_s_per_byte == pytest.approx(1e-9, rel=1e-6)
+    assert fit.fixed_s == pytest.approx(5e-5, rel=1e-6)
+    assert fit.residual_rms_s < 1e-12
+
+
+def test_calibrated_source_is_deterministic():
+    """Same trace -> same coefficients -> same materialized times (the
+    acceptance-listed determinism property)."""
+    g = toy_graph(8, params=30_000, macs=8_000_000)
+    tr = toy_trace(g, base=2e-3, step=3e-4)
+    s1, s2 = CalibratedCostSource(tr), CalibratedCostSource(tr)
+    assert s1.coefficients() == s2.coefficients()
+    spec = EdgeTPUSpec()
+    e1 = SegmentCostEngine(g, spec, s1)
+    e2 = SegmentCostEngine(g, spec, s2)
+    for lo, hi in ((0, 7), (0, 3), (4, 7), (2, 2)):
+        assert e1.segment_time(lo, hi) == e2.segment_time(lo, hi)
+    p1 = api_plan(g, 3, "balanced_cost",
+                  tpu_model=EdgeTPUModel(g, cost_source=s1))
+    p2 = api_plan(g, 3, "balanced_cost",
+                  tpu_model=EdgeTPUModel(g, cost_source=s2))
+    assert p1.cuts == p2.cuts and p1.stage_times_s == p2.stage_times_s
+
+
+def test_calibrated_prediction_applies_the_cliff_coefficient():
+    """A trace whose per-depth times jump once cumulative weights cross
+    the on-chip cliff: the fit captures the jump in cliff_s_per_byte and
+    the source's predictions must apply it — post-cliff depths predict
+    far above the pre-cliff plateau (regression: the coefficient used to
+    be fit but dropped at prediction time)."""
+    MIB = 1024 * 1024
+    per_depth = 2 * MIB                      # 8 depths x 2 MiB: cliff ~d4
+    g = chain_graph("cliffy", [(f"l{i}", per_depth, 1_000, 64)
+                               for i in range(8)])
+    ref = EdgeTPUSpec()
+    capacity = ref.onchip_bytes - ref.fixed_reserve
+    from repro.profiling import cliff_bytes_per_depth
+    cliffs = cliff_bytes_per_depth(tuple(g.bytes_per_depth()), capacity)
+    samples = tuple(DepthSample(
+        depth=d, time_s=1e-3 + 5e-9 * cliffs[d],   # post-cliff: ~10x slower
+        macs=g.macs_per_depth()[d], weight_bytes=g.bytes_per_depth()[d])
+        for d in range(8))
+    src = CalibratedCostSource(ProfileTrace(graph_name=g.name,
+                                            samples=samples))
+    assert src.fit is not None and src.fit.cliff_s_per_byte > 0
+    eng = SegmentCostEngine(g, ref, src)
+    pre = eng.segment_compute_time(0, 0)
+    post = eng.segment_compute_time(7, 7)
+    assert post == pytest.approx(samples[7].time_s, rel=1e-3)
+    assert post > 3 * pre
+
+
+def test_cost_source_point_queries():
+    """The protocol's per-depth point queries answer from one cached
+    materialization (trace-backed and analytic alike)."""
+    g = toy_graph(6)
+    spec = EdgeTPUSpec()
+    tr = toy_trace(g)
+    src = TraceCostSource(tr)
+    for d in (0, 3, 5):
+        assert src.layer_time_s(d, g, spec) == tr.depth_time_map()[d]
+        assert src.layer_params(d, g) == g.params_per_depth()[d]
+        assert src.layer_weight_bytes(d, g) == g.bytes_per_depth()[d]
+        assert src.activation_bytes(d, g) == g.out_bytes_per_depth()[d]
+    ana = AnalyticCostSource()
+    assert ana.layer_time_s(2, g, spec) == pytest.approx(
+        g.macs_per_depth()[2] / spec.macs_per_s
+        + g.bytes_per_depth()[2] / (spec.weight_load_gbps * 1e9))
+
+
+def test_naive_model_reporter_does_not_build_engine():
+    """GraphReporter over the use_engine=False baseline must not silently
+    construct the fast engine (it is the before/after benchmark's naive
+    side)."""
+    from repro.core import GraphReporter
+    g = toy_graph(6)
+    naive = EdgeTPUModel(g, use_engine=False)
+    rep = GraphReporter(naive)
+    assert naive._engine is None
+    assert [rep.depth_bytes(d) for d in range(g.depth)] \
+        == g.bytes_per_depth()
+
+
+def test_calibrated_source_degenerate_trace_falls_back():
+    g = toy_graph(6)
+    one = ProfileTrace(graph_name=g.name, samples=(
+        DepthSample(depth=0, time_s=1e-3, macs=g.macs_per_depth()[0],
+                    weight_bytes=g.bytes_per_depth()[0]),))
+    src = CalibratedCostSource(one)
+    assert src.fit is None and src.coefficients() == {}
+    spec = EdgeTPUSpec()
+    eng = SegmentCostEngine(g, spec, src)
+    plain = SegmentCostEngine(g, spec)
+    for lo, hi in ((0, 5), (1, 3)):
+        assert eng.segment_time(lo, hi) == pytest.approx(
+            plain.segment_time(lo, hi))
+
+
+def test_calibrated_tracks_trace_better_than_analytic():
+    """The point of calibration: on a trace whose magnitudes the analytic
+    Edge TPU model mispredicts, the calibrated source's stage-time error
+    is smaller (the BENCH_profile acceptance, in miniature)."""
+    from repro.api import PlanReport
+    g = toy_graph(10, params=40_000, macs=20_000_000)
+    tr = toy_trace(g, base=3e-3, step=2e-4)       # ms-scale: CPU-like
+    pl = plan(DeploymentSpec(stages=3, strategy="balanced_norefine"),
+              graph=g)
+    analytic_rep = PlanReport.from_plan(
+        pl, base_model=EdgeTPUModel(g), trace=tr)
+    cal_model = EdgeTPUModel(g, cost_source=CalibratedCostSource(tr))
+    pl_c = plan(DeploymentSpec(stages=3, strategy="balanced_norefine"),
+                graph=g, tpu_model=cal_model)
+    cal_rep = PlanReport.from_plan(pl_c, base_model=cal_model, trace=tr)
+    assert analytic_rep.has_trace and cal_rep.has_trace
+    assert cal_rep.stage_time_error_pct < analytic_rep.stage_time_error_pct
+
+
+# ---------------------------------------------------------------------------
+# shared bytes accounting (satellite)
+# ---------------------------------------------------------------------------
+def test_refiner_bytes_come_from_the_engine():
+    """GraphReporter's multi-step move sizing reads the engine's per-depth
+    bytes — one accounting for planner and refiner."""
+    from repro.core import GraphReporter
+    g = toy_graph(6)
+    m = EdgeTPUModel(g)
+    rep = GraphReporter(m)
+    assert [rep.depth_bytes(d) for d in range(g.depth)] \
+        == m.engine.depth_weight_bytes() == g.bytes_per_depth()
+
+
+def test_memory_model_identical_across_paths():
+    """Naive EdgeTPUModel, engine, and the shared costs helpers agree on
+    capacity and greedy split for every segment of a real model."""
+    from repro.core.costs import greedy_layer_split, weight_capacity_bytes
+    g = REAL_CNNS["MobileNetV2"]().to_layer_graph()
+    fast = EdgeTPUModel(g)
+    naive = EdgeTPUModel(g, use_engine=False)
+    spec = fast.spec
+    for lo, hi in ((0, g.depth - 1), (3, 17), (10, 10)):
+        nr = naive.segment_memory(lo, hi)
+        assert fast.engine.segment_split(lo, hi) \
+            == (nr.device_bytes, nr.host_bytes)
+        cap = weight_capacity_bytes(
+            spec.onchip_bytes, spec.fixed_reserve, spec.act_reserve_factor,
+            fast.engine.segment_max_activation(lo, hi))
+        layers = [n for lvl in g.levels()[lo:hi + 1] for n in lvl]
+        assert greedy_layer_split([g.nodes[n].bytes for n in layers], cap) \
+            == (nr.device_bytes, nr.host_bytes)
