@@ -205,6 +205,7 @@ class Deployment:
             queue_size=self.spec.queue_size,
             microbatch=self.spec.microbatch,
             microbatch_wait_s=self.spec.microbatch_wait_s,
+            hedge_after=self.spec.hedge_after,
             name_prefix="deploy")
         if start:
             ex.start()
@@ -223,7 +224,9 @@ class Deployment:
             max_batch=self.spec.max_batch, max_wait_s=self.spec.max_wait_s,
             queue_size=self.spec.queue_size,
             microbatch=self.spec.microbatch,
-            microbatch_wait_s=self.spec.microbatch_wait_s)
+            microbatch_wait_s=self.spec.microbatch_wait_s,
+            hedge_after=self.spec.hedge_after,
+            stage_loss_retries=self.spec.stage_loss_retries)
         self._server = srv
         if start:
             srv.executor.start()

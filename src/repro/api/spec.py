@@ -77,6 +77,13 @@ class DeploymentSpec:
     ``queue_size`` (inter-stage backpressure), ``microbatch`` /
     ``microbatch_wait_s`` (stage-level shape-bucketed dynamic
     micro-batching).
+
+    Fault policy (also serving-side): ``hedge_after`` — seconds before a
+    straggling item on a replicated stage is speculatively re-dispatched
+    to another replica (first result wins via the merge's dedup; ``None``
+    — the default — disables hedging); ``stage_loss_retries`` — how many
+    times a request that failed with ``StageLost`` (a whole stage died)
+    is re-admitted, so it survives a degraded-mode replan (0 disables).
     """
 
     model: Optional[str] = None
@@ -97,6 +104,9 @@ class DeploymentSpec:
     queue_size: int = 64
     microbatch: Optional[int] = None
     microbatch_wait_s: float = 0.0
+    # fault policy
+    hedge_after: Optional[float] = None
+    stage_loss_retries: int = 0
 
     def __post_init__(self):
         if not self.strategy:
@@ -112,6 +122,12 @@ class DeploymentSpec:
                              f"got {self.device_budget}")
         if self.memory_headroom_bytes < 0:
             raise ValueError("memory_headroom_bytes must be >= 0")
+        if self.hedge_after is not None and self.hedge_after <= 0:
+            raise ValueError(f"hedge_after must be > 0, "
+                             f"got {self.hedge_after}")
+        if self.stage_loss_retries < 0:
+            raise ValueError(f"stage_loss_retries must be >= 0, "
+                             f"got {self.stage_loss_retries}")
         from ..profiling.sources import parse_cost_source
         parse_cost_source(self.cost_source)   # raises on malformed refs
 

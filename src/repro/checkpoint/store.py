@@ -51,6 +51,12 @@ class CheckpointStore:
         s = self.steps()
         return s[-1] if s else None
 
+    def has_checkpoint(self) -> bool:
+        """True if at least one checkpoint exists — lets restart logic
+        (``TrainSupervisor``, warm stage restore) distinguish "restore the
+        latest snapshot" from "start clean" without trying a restore."""
+        return bool(self.steps())
+
     # -- save -------------------------------------------------------------------
     def save(self, step: int, tree: Params, blocking: bool = True) -> None:
         # snapshot to host memory NOW (donated/updated arrays stay valid)

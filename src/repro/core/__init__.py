@@ -14,8 +14,8 @@ from .planner import (PlacementPlan, SegmentationPlan, StagePlacement,
                       min_stages_no_spill, min_stages_to_fit, plan,
                       plan_placement)
 from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec, MemoryReport
-from .pipeline import (PipelineExecutor, PipelineStopped,
-                       ShapeKeyedStageCache, simulated_stage,
+from .pipeline import (PipelineExecutor, PipelineStopped, ReplicaFailure,
+                       ShapeKeyedStageCache, StageLost, simulated_stage,
                        stage_balance_metrics)
 
 __all__ = [
@@ -29,6 +29,6 @@ __all__ = [
     "PlacementPlan", "SegmentationPlan", "StagePlacement",
     "plan", "plan_placement", "min_stages_to_fit", "min_stages_no_spill",
     "EdgeTPUModel", "EdgeTPUSpec", "MemoryReport",
-    "PipelineExecutor", "PipelineStopped", "ShapeKeyedStageCache",
-    "simulated_stage", "stage_balance_metrics",
+    "PipelineExecutor", "PipelineStopped", "ReplicaFailure", "StageLost",
+    "ShapeKeyedStageCache", "simulated_stage", "stage_balance_metrics",
 ]

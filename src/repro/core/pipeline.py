@@ -70,6 +70,34 @@ fuller bucket form.  Stages whose output does not split back along the
 leading axis are detected on the first stacked probe and run per-item
 from then on.
 
+**Failure domains** (fleet-scale serving, ROADMAP item 5): the executor
+distinguishes *item* failures from *replica* failures.  An ordinary stage
+exception travels the stream as :class:`_Failed` and resolves that item's
+future (unchanged).  A :class:`ReplicaFailure` — raised by a stage function
+when its device dies, or injected via :meth:`PipelineExecutor.kill_replica`
+by a health monitor / chaos harness — retires the *worker*: every envelope
+the replica had accepted but not emitted (tracked in a per-stage in-flight
+registry) is re-dispatched to a surviving replica and slots back into the
+order-restoring merge by stream sequence, so no request is lost or
+misordered.  When a stage loses its **last** replica the stage fails fast —
+envelopes cross it as ``_Failed(StageLost)`` so the stream keeps flowing and
+futures resolve promptly — and the ``on_stage_lost`` callback fires exactly
+once (the hook degraded-mode replanning hangs off; see
+``runtime.ft.HealthMonitor``).  Because re-dispatch is at-least-once, the
+merge deduplicates by sequence: the first result for a sequence wins,
+duplicates are dropped.
+
+**Hedged dispatch** (``hedge_after=t``): on a replicated stage, an envelope
+still in flight ``t`` seconds after dispatch is speculatively re-issued to a
+*different* live replica; first result wins via the merge's
+dedup-by-sequence, so outputs are bit-identical to unhedged execution —
+only tail latency changes.  Off by default; enabled per deployment through
+``DeploymentSpec.hedge_after``.
+
+Liveness/health is observable via :meth:`PipelineExecutor.health_snapshot`:
+per-replica alive flags, heartbeat ages, consecutive item-failure counts,
+and per-stage hedge/re-dispatch counters.
+
 This executor is the *paper-faithful* path (host-mediated transfers).  The
 pod-scale SPMD path (shard_map + ppermute over ICI) lives in
 launch/pipeline_spmd.py and consumes the same PlacementPlan.
@@ -84,11 +112,33 @@ from concurrent.futures import Future
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 _SHUTDOWN = object()      # terminates workers; forwarded by every stage
+_DEAD_TOKEN = object()    # a replica's one-time termination token on death
+_DISPATCHER_DONE = object()   # dispatcher -> merge: drain marker delivered
+_RETIRE = object()        # killer -> worker: your queue was reclaimed, exit
 
 
 class PipelineStopped(RuntimeError):
     """Completion error for futures still in flight when the executor (or a
     server built on it) shuts down: callers get this instead of hanging."""
+
+
+class ReplicaFailure(RuntimeError):
+    """The *replica* (device/worker) died, not the item.
+
+    Raised by a stage function when its backing device is gone (JAX device
+    loss, a withdrawn Edge TPU) or injected by the chaos harness.  The
+    worker retires and its in-flight envelopes are re-dispatched to a
+    surviving replica; the item that triggered it is *not* failed."""
+
+
+class StageLost(RuntimeError):
+    """Completion error for envelopes crossing a stage with no live
+    replicas left.  Carries ``stage`` so retry policies and the degraded-
+    mode replanner know which failure domain collapsed."""
+
+    def __init__(self, stage: int, name: str = "pipeline"):
+        super().__init__(f"{name}: stage {stage} has no live replicas")
+        self.stage = stage
 
 
 class _Failed:
@@ -126,6 +176,47 @@ class _BatchSink:
                 self.done.set()
 
 
+class _InFlight:
+    """Registry record for an envelope a replicated stage has accepted but
+    not yet emitted: the payload (for re-dispatch), the replica currently
+    working on it, the dispatch time (for hedging), and whether a hedged
+    duplicate was already issued."""
+
+    __slots__ = ("payload", "slot", "t_dispatch", "hedged")
+
+    def __init__(self, payload: Any, slot: int = -1):
+        self.payload = payload
+        self.slot = slot
+        self.t_dispatch = time.monotonic()
+        self.hedged = False
+
+
+class _StageState:
+    """Shared failure-domain state of one replicated stage: worker queues,
+    the merge input queue, per-replica liveness, and the in-flight
+    registry (seq -> :class:`_InFlight`).  ``token_emitted`` guarantees
+    each of the ``k`` workers contributes exactly one termination token
+    (_DEAD_TOKEN on death, _SHUTDOWN on drain) to the merge, whichever
+    path retires it first."""
+
+    __slots__ = ("idx", "k", "wqs", "mq", "lock", "alive", "token_emitted",
+                 "inflight", "hedges", "redispatches", "rr")
+
+    def __init__(self, idx: int, k: int, wqs: List[queue.Queue],
+                 mq: queue.Queue):
+        self.idx = idx
+        self.k = k
+        self.wqs = wqs
+        self.mq = mq
+        self.lock = threading.Lock()
+        self.alive = [True] * k
+        self.token_emitted = [False] * k
+        self.inflight: Dict[int, _InFlight] = {}
+        self.hedges = 0
+        self.redispatches = 0
+        self.rr = 0
+
+
 class PipelineExecutor:
     """Run inputs through a chain of stage functions with persistent
     worker threads and reusable bounded queues between stages.
@@ -141,9 +232,12 @@ class PipelineExecutor:
                  queue_size: int = 64, name: str = "pipeline",
                  replicas: Optional[Sequence[int]] = None,
                  microbatch: Optional[Union[int, Sequence[int]]] = None,
-                 microbatch_wait_s: float = 0.0):
+                 microbatch_wait_s: float = 0.0,
+                 hedge_after: Optional[float] = None):
         if not stage_fns:
             raise ValueError("need at least one stage")
+        if hedge_after is not None and hedge_after <= 0:
+            raise ValueError(f"hedge_after must be > 0, got {hedge_after}")
         self.stage_fns = list(stage_fns)
         self.queue_size = queue_size
         self.name = name
@@ -168,8 +262,14 @@ class PipelineExecutor:
             raise ValueError(f"microbatch sizes must be >= 1: "
                              f"{self.microbatch}")
         self.microbatch_wait_s = float(microbatch_wait_s)
+        self.hedge_after = hedge_after
+        # fired exactly once when stage i loses its last replica; called
+        # from an executor thread, so implementors must not block (the
+        # HealthMonitor hook just enqueues an event)
+        self.on_stage_lost: Optional[Callable[[int], None]] = None
         self._lock = threading.RLock()      # lifecycle
         self._submit_lock = threading.Lock()  # seq assignment + head put
+        self._health_lock = threading.Lock()  # stage-lost once-only guard
         self._queues: List[queue.Queue] = []
         self._threads: List[threading.Thread] = []
         # one busy slot per (stage, replica): each written by one thread
@@ -183,6 +283,15 @@ class PipelineExecutor:
         # stages proven unstackable (output does not split along axis 0):
         # skip aggregation instead of re-running every bucket twice
         self._mb_unstackable = [False] * n
+        # failure-domain state: per-replica liveness/heartbeats/consecutive
+        # item failures (single-writer slots like _busy), per-replicated-
+        # stage shared state, and the once-only stage-lost latches
+        self._dead = [[False] * r for r in self.replicas]
+        self._beats = [[time.monotonic()] * r for r in self.replicas]
+        self._consec_fails = [[0] * r for r in self.replicas]
+        self._stage_states: List[Optional[_StageState]] = [None] * n
+        self._stage_lost_fired = [False] * n
+        self._hedge_stop = threading.Event()
         # seq -> Future (submit) or (_BatchSink, idx) (run_batch)
         self._pending: Dict[int, Any] = {}
         self._seq = itertools.count()
@@ -194,6 +303,7 @@ class PipelineExecutor:
                  queue_size: int = 64,
                  microbatch: Optional[Union[int, Sequence[int]]] = None,
                  microbatch_wait_s: float = 0.0,
+                 hedge_after: Optional[float] = None,
                  name_prefix: str = "pipeline") -> "PipelineExecutor":
         """The one place a plan's execution shape (replica fan-out) meets
         a serving policy: both ``PipelinedModelServer`` and the
@@ -203,7 +313,8 @@ class PipelineExecutor:
                    name=f"{name_prefix}-{plan.graph_name}",
                    replicas=getattr(plan, "replica_counts", None),
                    microbatch=microbatch,
-                   microbatch_wait_s=microbatch_wait_s)
+                   microbatch_wait_s=microbatch_wait_s,
+                   hedge_after=hedge_after)
 
     @property
     def n_stages(self) -> int:
@@ -216,8 +327,12 @@ class PipelineExecutor:
     @property
     def n_threads(self) -> int:
         """Threads the running executor owns: stage workers, dispatcher +
-        merge per replicated stage, and the tail collector."""
-        return (sum(1 if k == 1 else k + 2 for k in self.replicas) + 1)
+        merge per replicated stage, the tail collector, and the hedge
+        monitor when hedging is enabled on a replicated pipeline."""
+        hedger = 1 if (self.hedge_after is not None
+                       and any(k > 1 for k in self.replicas)) else 0
+        return (sum(1 if k == 1 else k + 2 for k in self.replicas)
+                + 1 + hedger)
 
     @property
     def started(self) -> bool:
@@ -240,6 +355,13 @@ class PipelineExecutor:
             self._pending = {}
             self._seq = itertools.count()
             self._draining = False
+            # fresh failure-domain state: a restart resurrects every replica
+            self._dead = [[False] * r for r in self.replicas]
+            self._beats = [[time.monotonic()] * r for r in self.replicas]
+            self._consec_fails = [[0] * r for r in self.replicas]
+            self._stage_states = [None] * n
+            self._stage_lost_fired = [False] * n
+            self._hedge_stop = threading.Event()
             for i in range(n):
                 k = self.replicas[i]
                 if k == 1:
@@ -252,19 +374,27 @@ class PipelineExecutor:
                 wqs = [queue.Queue(max(2, self.queue_size // k))
                        for _ in range(k)]
                 mq: queue.Queue = queue.Queue(self.queue_size)
+                st = _StageState(i, k, wqs, mq)
+                self._stage_states[i] = st
                 self._threads.append(threading.Thread(
-                    target=self._dispatcher, args=(self._queues[i], wqs),
+                    target=self._dispatcher, args=(i, self._queues[i], st),
                     daemon=True, name=f"{self.name}-stage{i}-dispatch"))
                 for j in range(k):
                     self._threads.append(threading.Thread(
-                        target=self._stage_loop, args=(i, wqs[j], mq, j),
+                        target=self._stage_loop,
+                        args=(i, wqs[j], mq, j, st),
                         daemon=True, name=f"{self.name}-stage{i}-r{j}"))
                 self._threads.append(threading.Thread(
-                    target=self._merge, args=(mq, self._queues[i + 1], k),
+                    target=self._merge, args=(st, self._queues[i + 1]),
                     daemon=True, name=f"{self.name}-stage{i}-merge"))
             self._threads.append(threading.Thread(
                 target=self._collector, args=(self._queues[n], self._pending),
                 daemon=True, name=f"{self.name}-collect"))
+            if (self.hedge_after is not None
+                    and any(k > 1 for k in self.replicas)):
+                self._threads.append(threading.Thread(
+                    target=self._hedger, daemon=True,
+                    name=f"{self.name}-hedge"))
             for t in self._threads:
                 t.start()
             self._started = True
@@ -315,6 +445,7 @@ class PipelineExecutor:
                     self._queues[0].put_nowait(_SHUTDOWN)
                 except queue.Full:
                     pass
+            self._hedge_stop.set()
             for t in self._threads:
                 t.join(timeout=max(0.0, deadline - time.monotonic()))
             pending, self._pending = self._pending, {}
@@ -348,7 +479,12 @@ class PipelineExecutor:
 
     # -- workers -------------------------------------------------------------
     def _apply(self, i: int, slot: int, envelope: Tuple[int, Any]):
-        """Run stage ``i`` on one envelope; failures become _Failed."""
+        """Run stage ``i`` on one envelope; failures become _Failed.
+
+        :class:`ReplicaFailure` propagates — it retires the worker, not
+        the item.  Ordinary exceptions bump the replica's consecutive-
+        failure count (a health-monitor death signal); successes reset it.
+        """
         fn = self.stage_fns[i]
         seq, payload = envelope
         if isinstance(payload, _Failed):
@@ -357,7 +493,11 @@ class PipelineExecutor:
             t0 = time.perf_counter()
             out = fn(payload)
             self._busy[i][slot] += time.perf_counter() - t0
+            self._consec_fails[i][slot] = 0
+        except ReplicaFailure:
+            raise
         except BaseException as e:   # surface worker failures per item
+            self._consec_fails[i][slot] += 1
             return (seq, _Failed(e))
         return (seq, out)
 
@@ -391,6 +531,8 @@ class PipelineExecutor:
                     off += r
             else:
                 self._mb_unstackable[i] = True
+        except ReplicaFailure:
+            raise       # the replica died, not the bucket
         except BaseException:
             pass        # per-item rerun pins the failure to the right item
         if parts is None:
@@ -401,85 +543,345 @@ class PipelineExecutor:
         return [(seq, part) for (seq, _), part in zip(bucket, parts)]
 
     def _stage_loop(self, i: int, q_in: queue.Queue, q_out: queue.Queue,
-                    slot: int) -> None:
+                    slot: int, st: Optional[_StageState] = None) -> None:
         """Worker loop shared by plain stages and replica workers: FIFO in,
-        FIFO out, optional same-signature micro-batching."""
+        FIFO out, optional same-signature micro-batching.
+
+        Death semantics: a :class:`ReplicaFailure` out of the stage
+        function retires this worker.  A replica of a replicated stage
+        (``st`` given) re-dispatches its in-flight envelopes to a survivor
+        and exits; the sole worker of an unreplicated stage switches to a
+        *bypass* loop — it keeps draining its queue, forwarding every
+        envelope as ``_Failed(StageLost)`` so the stream never stalls and
+        shutdown still cascades."""
         k = self.microbatch[i]
         carry: Any = None
         while True:
-            item = carry if carry is not None else q_in.get()
+            item = carry
+            while item is None:
+                try:
+                    item = q_in.get(timeout=0.1)
+                except queue.Empty:
+                    # refresh the heartbeat while idle: a stale beat must
+                    # mean "stuck inside the stage fn (or dead)", never
+                    # "healthy but nothing to do"
+                    self._beats[i][slot] = time.monotonic()
             carry = None
             if item is _SHUTDOWN:
-                q_out.put(_SHUTDOWN)
+                if st is None:
+                    q_out.put(_SHUTDOWN)
+                else:
+                    self._emit_token(st, slot, _SHUTDOWN)
                 return
-            key = (_microbatch_key(item[1])
-                   if k > 1 and not self._mb_unstackable[i] else None)
-            if key is None:
-                q_out.put(self._apply(i, slot, item))
+            if item is _RETIRE:
+                return          # killer reclaimed our queue + in-flight
+            if self._dead[i][slot]:
+                if st is not None:
+                    return      # token + re-dispatch handled at kill time
+                q_out.put((item[0], _Failed(StageLost(i, self.name))))
                 continue
+            self._beats[i][slot] = time.monotonic()
             bucket = [item]
-            deadline: Optional[float] = None
-            while len(bucket) < k:
-                try:
-                    nxt = q_in.get_nowait()
-                except queue.Empty:
-                    if self.microbatch_wait_s <= 0.0:
-                        break
-                    if deadline is None:
-                        deadline = time.monotonic() + self.microbatch_wait_s
-                    remaining = deadline - time.monotonic()
-                    if remaining <= 0.0:
-                        break
+            try:
+                key = (_microbatch_key(item[1])
+                       if k > 1 and not self._mb_unstackable[i] else None)
+                if key is None:
+                    q_out.put(self._apply(i, slot, item))
+                    continue
+                deadline: Optional[float] = None
+                while len(bucket) < k:
                     try:
-                        nxt = q_in.get(timeout=remaining)
+                        nxt = q_in.get_nowait()
                     except queue.Empty:
+                        if self.microbatch_wait_s <= 0.0:
+                            break
+                        if deadline is None:
+                            deadline = (time.monotonic()
+                                        + self.microbatch_wait_s)
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0.0:
+                            break
+                        try:
+                            nxt = q_in.get(timeout=remaining)
+                        except queue.Empty:
+                            break
+                    if (nxt is _SHUTDOWN or nxt is _RETIRE
+                            or _microbatch_key(nxt[1]) != key):
+                        carry = nxt     # keep FIFO: process after bucket
                         break
-                if nxt is _SHUTDOWN or _microbatch_key(nxt[1]) != key:
-                    carry = nxt     # keep FIFO: process after this bucket
-                    break
-                bucket.append(nxt)
-            if len(bucket) == 1:
-                q_out.put(self._apply(i, slot, item))
-            else:
-                for env in self._apply_batched(i, slot, bucket):
-                    q_out.put(env)
+                    bucket.append(nxt)
+                if len(bucket) == 1:
+                    q_out.put(self._apply(i, slot, item))
+                else:
+                    for env in self._apply_batched(i, slot, bucket):
+                        q_out.put(env)
+            except ReplicaFailure:
+                self._dead[i][slot] = True
+                if st is not None:
+                    # in-hand envelopes (bucket + carry) are all in the
+                    # in-flight registry with our slot: retire re-places
+                    self._retire_replica(i, slot, st)
+                    return
+                # sole worker: fail what we hold, then bypass onward
+                for env in bucket:
+                    q_out.put((env[0], _Failed(StageLost(i, self.name))))
+                self._fire_stage_lost(i)
+                # carry (if any) is handled by the loop top: a _SHUTDOWN
+                # forwards, an envelope fails fast through the dead check
 
-    def _dispatcher(self, q_in: queue.Queue,
-                    wqs: List[queue.Queue]) -> None:
-        """Round-robin fan-out of one stage's input onto its replicas."""
-        rr = 0
+    # -- failure domains ------------------------------------------------------
+    def _emit_token(self, st: _StageState, slot: int, token: Any) -> None:
+        """Each replica contributes exactly one termination token to its
+        merge, whichever retires it first (drain or death)."""
+        with st.lock:
+            if st.token_emitted[slot]:
+                return
+            st.token_emitted[slot] = True
+        st.mq.put(token)
+
+    def _fire_stage_lost(self, i: int) -> None:
+        with self._health_lock:
+            if self._stage_lost_fired[i]:
+                return
+            self._stage_lost_fired[i] = True
+        cb = self.on_stage_lost
+        if cb is not None:
+            try:
+                cb(i)
+            except Exception:       # observer bugs must not kill workers
+                pass
+
+    def _place(self, i: int, st: _StageState, seq: int,
+               exclude: Optional[int] = None) -> None:
+        """(Re-)dispatch an in-flight envelope onto a live replica of
+        stage ``i``; with none left, fail it into the merge as
+        ``StageLost`` so the stream keeps flowing.  Safe to call from the
+        dispatcher, a dying worker, the hedge monitor, or an external
+        killer — the registry record is the single source of truth and a
+        seq whose record is gone (already emitted) is a no-op."""
+        while True:
+            with st.lock:
+                rec = st.inflight.get(seq)
+                if rec is None:
+                    return          # already completed downstream
+                live = [j for j in range(st.k)
+                        if st.alive[j] and j != exclude]
+                if not live:
+                    st.inflight.pop(seq, None)
+                    payload = rec.payload
+                    j = None
+                else:
+                    j = live[st.rr % len(live)]
+                    st.rr += 1
+                    rec.slot = j
+                    rec.t_dispatch = time.monotonic()
+            if j is None:
+                st.mq.put((seq, _Failed(StageLost(i, self.name))))
+                self._fire_stage_lost(i)
+                return
+            try:
+                st.wqs[j].put((seq, rec.payload), timeout=0.05)
+            except queue.Full:
+                continue            # re-check liveness, maybe new target
+            # j may have died between the choice and the put: anything
+            # stranded in its (now consumerless) queue gets re-placed
+            with st.lock:
+                died = not st.alive[j]
+            if not died:
+                return
+            for stray in self._drain_queue(st.wqs[j]):
+                if stray is _SHUTDOWN or stray is _RETIRE:
+                    continue
+                self._place(i, st, stray[0], exclude=j)
+            return
+
+    def _retire_replica(self, i: int, slot: int,
+                        st: _StageState) -> None:
+        """Retire one replica of a replicated stage: mark it dead, emit
+        its termination token, reclaim its queue, and re-dispatch every
+        envelope it had accepted but not emitted to a surviving replica
+        (or fail them as StageLost when it was the last one)."""
+        with st.lock:
+            self._dead[i][slot] = True
+            st.alive[slot] = False
+            assigned = [seq for seq, rec in st.inflight.items()
+                        if rec.slot == slot]
+            none_alive = not any(st.alive)
+        self._emit_token(st, slot, _DEAD_TOKEN)
+        # reclaim the dead replica's queue (no consumer anymore) and nudge
+        # a worker thread blocked on it out of its get()
+        strays = [x[0] for x in self._drain_queue(st.wqs[slot])
+                  if x is not _SHUTDOWN and x is not _RETIRE]
+        try:
+            st.wqs[slot].put_nowait(_RETIRE)
+        except queue.Full:
+            pass
+        for seq in dict.fromkeys(assigned + strays):
+            with st.lock:
+                known = seq in st.inflight
+                if known:
+                    st.redispatches += 1
+            if known:
+                self._place(i, st, seq, exclude=slot)
+        if none_alive:
+            self._fire_stage_lost(i)
+
+    @staticmethod
+    def _drain_queue(q: queue.Queue) -> List[Any]:
+        out = []
+        while True:
+            try:
+                out.append(q.get_nowait())
+            except queue.Empty:
+                return out
+
+    def kill_replica(self, stage: int, slot: int = 0) -> None:
+        """Withdraw one replica (health monitor / chaos entry point): its
+        in-flight envelopes are re-dispatched to surviving replicas; on an
+        unreplicated stage this is a stage loss — subsequent envelopes
+        fail fast as :class:`StageLost` (the item the worker is currently
+        applying, if any, still completes normally)."""
+        if not self._started:
+            raise RuntimeError(f"{self.name}: not started")
+        if not (0 <= stage < self.n_stages):
+            raise ValueError(f"no stage {stage}")
+        if not (0 <= slot < self.replicas[stage]):
+            raise ValueError(f"stage {stage} has no replica {slot}")
+        st = self._stage_states[stage]
+        if st is None:
+            self._dead[stage][slot] = True
+            self._fire_stage_lost(stage)
+            return
+        self._retire_replica(stage, slot, st)
+
+    def kill_stage(self, stage: int) -> None:
+        """Withdraw every replica of a stage (the degraded-mode trigger)."""
+        for slot in range(self.replicas[stage]):
+            self.kill_replica(stage, slot)
+
+    def _hedger(self) -> None:
+        """Hedge monitor: an envelope still in flight ``hedge_after``
+        seconds after dispatch is speculatively re-issued to a different
+        live replica; the merge's dedup-by-sequence keeps the first
+        result, so hedging never changes outputs — only tail latency."""
+        interval = max(0.001, self.hedge_after / 4.0)
+        while not self._hedge_stop.wait(interval):
+            now = time.monotonic()
+            for i, st in enumerate(self._stage_states):
+                if st is None:
+                    continue
+                with st.lock:
+                    stale = [seq for seq, rec in st.inflight.items()
+                             if (not rec.hedged and rec.slot >= 0
+                                 and now - rec.t_dispatch
+                                 >= self.hedge_after)]
+                for seq in stale:
+                    self._hedge_one(i, st, seq)
+
+    def _hedge_one(self, i: int, st: _StageState, seq: int) -> None:
+        with st.lock:
+            rec = st.inflight.get(seq)
+            if rec is None or rec.hedged:
+                return
+            live = [j for j in range(st.k)
+                    if st.alive[j] and j != rec.slot]
+            if not live:
+                return
+            j = live[st.rr % len(live)]
+            st.rr += 1
+            payload = rec.payload
+        try:
+            st.wqs[j].put_nowait((seq, payload))
+        except queue.Full:
+            return                  # backpressured: retry next scan
+        with st.lock:
+            rec = st.inflight.get(seq)
+            if rec is not None:
+                rec.hedged = True
+            st.hedges += 1
+
+    def health_snapshot(self) -> Dict[str, Any]:
+        """Failure-domain observability: per-replica liveness, heartbeat
+        ages (seconds since the replica last started work), consecutive
+        item-failure counts, and per-stage hedge / re-dispatch counters.
+        All monotonic or idempotent — safe to poll from a monitor."""
+        now = time.monotonic()
+        return {
+            "alive": [[not d for d in row] for row in self._dead],
+            "live_replicas": [sum(1 for d in row if not d)
+                              for row in self._dead],
+            "heartbeat_age_s": [[now - b for b in row]
+                                for row in self._beats],
+            "consecutive_failures": [list(row)
+                                     for row in self._consec_fails],
+            "hedges": [st.hedges if st else 0
+                       for st in self._stage_states],
+            "redispatches": [st.redispatches if st else 0
+                             for st in self._stage_states],
+        }
+
+    def _dispatcher(self, i: int, q_in: queue.Queue,
+                    st: _StageState) -> None:
+        """Fan one stage's input onto its replicas, registering every
+        envelope in the stage's in-flight registry before it is placed —
+        the registry is what failover re-dispatches from."""
         while True:
             item = q_in.get()
             if item is _SHUTDOWN:
-                for q in wqs:
-                    q.put(_SHUTDOWN)
+                with st.lock:
+                    targets = [j for j in range(st.k) if st.alive[j]]
+                for j in targets:
+                    while True:
+                        with st.lock:
+                            if not st.alive[j]:
+                                break   # died while draining: _DEAD covers it
+                        try:
+                            st.wqs[j].put(_SHUTDOWN, timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
+                st.mq.put(_DISPATCHER_DONE)
                 return
-            wqs[rr].put(item)
-            rr = (rr + 1) % len(wqs)
+            with st.lock:
+                st.inflight[item[0]] = _InFlight(item[1])
+            self._place(i, st, item[0])
 
-    def _merge(self, mq: queue.Queue, q_out: queue.Queue, k: int) -> None:
-        """Order-restoring fan-in: buffer out-of-order envelopes, emit by
-        monotonic stream sequence; collapse k shutdown markers into one.
+    def _merge(self, st: _StageState, q_out: queue.Queue) -> None:
+        """Order-restoring, deduplicating fan-in: buffer out-of-order
+        envelopes, emit by monotonic stream sequence, and drop duplicate
+        results (hedged or re-issued envelopes may complete twice — the
+        first one wins, which is what makes hedging/failover invisible
+        downstream).
 
         ``next_seq`` advances for the executor's whole lifetime — there is
-        no batch boundary to reset it at, which is what lets envelopes from
-        different callers overlap in flight through a replicated stage."""
-        shutdowns = 0
+        no batch boundary to reset it at, which is what lets batches
+        overlap in flight.  Termination: each of the ``k`` replicas emits
+        exactly one token (_SHUTDOWN on drain, _DEAD_TOKEN on death); the
+        merge forwards one _SHUTDOWN downstream once the dispatcher has
+        drained *and* all ``k`` tokens arrived."""
+        tokens = 0
+        dispatcher_done = False
         buf: Dict[int, Any] = {}
         next_seq = 0
         while True:
-            item = mq.get()
-            if item is _SHUTDOWN:
-                shutdowns += 1
-                if shutdowns == k:
-                    q_out.put(_SHUTDOWN)
-                    return
-                continue
-            seq, payload = item
-            buf[seq] = payload
-            while next_seq in buf:
-                q_out.put((next_seq, buf.pop(next_seq)))
-                next_seq += 1
+            item = st.mq.get()
+            if item is _DISPATCHER_DONE:
+                dispatcher_done = True
+            elif item is _SHUTDOWN or item is _DEAD_TOKEN:
+                tokens += 1
+            else:
+                seq, payload = item
+                with st.lock:
+                    st.inflight.pop(seq, None)
+                if seq < next_seq or seq in buf:
+                    continue        # duplicate (hedge / failover re-issue)
+                buf[seq] = payload
+                while next_seq in buf:
+                    q_out.put((next_seq, buf.pop(next_seq)))
+                    next_seq += 1
+            if dispatcher_done and tokens >= st.k:
+                q_out.put(_SHUTDOWN)
+                return
 
     def _collector(self, q_tail: queue.Queue,
                    pending: Dict[int, Any]) -> None:

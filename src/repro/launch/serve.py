@@ -92,7 +92,10 @@ def spec_from_args(args) -> DeploymentSpec:
         microbatch=args.microbatch,
         microbatch_wait_s=args.microbatch_wait_ms / 1e3,
         max_batch=args.requests, max_wait_s=0.005,
-        cost_source=args.cost_source)
+        cost_source=args.cost_source,
+        hedge_after=(getattr(args, "hedge_after_ms", 0.0) / 1e3
+                     or None),
+        stage_loss_retries=getattr(args, "stage_loss_retries", 0))
     if args.device_budget:
         # joint cuts+replicas search: a bottleneck stage may get k devices
         # (round-robin fan-out in the executor, order-restoring fan-in)
@@ -121,6 +124,14 @@ def main() -> None:
                          "bottleneck stages (the 'placement' strategy; "
                          "0 = off, use --stages identical devices, one "
                          "per stage)")
+    ap.add_argument("--hedge-after-ms", type=float, default=0.0,
+                    help="speculatively re-dispatch an item stuck on a "
+                         "replicated stage for this long to another "
+                         "replica (first result wins; 0 = off)")
+    ap.add_argument("--stage-loss-retries", type=int, default=0,
+                    help="re-admit a request that crossed a dead stage "
+                         "this many times (survives degraded-mode "
+                         "replans; 0 = fail fast)")
     ap.add_argument("--cost-source", default="analytic",
                     help="where the planner's per-depth costs come from: "
                          "'analytic' (closed-form device model), "

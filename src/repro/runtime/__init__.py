@@ -1,5 +1,10 @@
-from .ft import ElasticPlanner, FailureInjector, TrainSupervisor
+from .ft import (ElasticPlanner, FailureInjector, FaultPolicy,
+                 HealthMonitor, TrainSupervisor)
 from .straggler import SpeculativeExecutor
+from .chaos import (ChaosEvent, ChaosMonkey, ChaosReport,
+                    replica_kill_schedule, run_chaos_executor)
 
 __all__ = ["TrainSupervisor", "FailureInjector", "ElasticPlanner",
-           "SpeculativeExecutor"]
+           "FaultPolicy", "HealthMonitor", "SpeculativeExecutor",
+           "ChaosEvent", "ChaosMonkey", "ChaosReport",
+           "replica_kill_schedule", "run_chaos_executor"]

@@ -29,6 +29,18 @@ fed under load.
   (:meth:`reconfigure`, driven by ``runtime.ft.ElasticPlanner``) drains
   in-flight work and hot-swaps the plan + stage functions when the device
   pool resizes.
+
+  Fault tolerance: within a replicated stage, replica death is absorbed
+  by the executor (in-flight re-dispatch — requests never notice).  When
+  a stage loses its *last* replica its requests fail fast as
+  :class:`~repro.core.pipeline.StageLost`; with ``stage_loss_retries > 0``
+  the server re-admits them through the batcher instead of failing them,
+  so they are served by whatever plan is live once the degraded-mode
+  replan (``runtime.ft.HealthMonitor`` → ``ElasticPlanner.resize_server``
+  → :meth:`reconfigure`) lands.  ``hedge_after`` enables the executor's
+  hedged dispatch on replicated stages.  Stage-lost events fan out to
+  listeners registered via :meth:`add_stage_lost_listener` (re-wired
+  automatically across reconfigure swaps).
 """
 from __future__ import annotations
 
@@ -41,7 +53,7 @@ import time
 from collections import deque
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Union)
 
-from ..core.pipeline import PipelineExecutor, PipelineStopped
+from ..core.pipeline import PipelineExecutor, PipelineStopped, StageLost
 from ..core.planner import PlacementPlan
 
 # process-wide request ids: ``id(payload)`` collided when payload objects
@@ -56,6 +68,7 @@ class Request:
     t_submit: float = dataclasses.field(default_factory=time.perf_counter)
     result: Any = None
     error: Optional[BaseException] = None
+    retries: int = 0          # stage-loss re-admissions of this request
     t_done: Optional[float] = None
     event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
@@ -132,13 +145,20 @@ class PipelinedModelServer:
                  queue_size: int = 64,
                  microbatch: Optional[Union[int, Sequence[int]]] = None,
                  microbatch_wait_s: float = 0.0,
+                 hedge_after: Optional[float] = None,
+                 stage_loss_retries: int = 0,
                  latency_window: int = 4096):
         assert len(stage_fns) == plan.n_stages
+        if stage_loss_retries < 0:
+            raise ValueError("stage_loss_retries must be >= 0")
         self.plan = plan
         self.stage_fns = list(stage_fns)
         self.queue_size = queue_size
         self.microbatch = microbatch
         self.microbatch_wait_s = microbatch_wait_s
+        self.hedge_after = hedge_after
+        self.stage_loss_retries = stage_loss_retries
+        self._stage_lost_listeners: List[Callable[[int], None]] = []
         self.executor = self._make_executor(plan, self.stage_fns)
         self.batcher = MicroBatcher(max_batch, max_wait_s)
         self._stop_evt = threading.Event()
@@ -147,22 +167,41 @@ class PipelinedModelServer:
         self._stopped = False
         # monotonic counters; read intervals via snapshot() deltas
         self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
-                                      "completed": 0, "failed": 0}
+                                      "completed": 0, "failed": 0,
+                                      "retried": 0}
         self._stats_lock = threading.Lock()
         self._recent_lat: deque = deque(maxlen=latency_window)
         self._window_lat: List[float] = []
         self._snap_state = {"t": time.perf_counter(),
                             "busy": self.executor.busy_snapshot(),
-                            "requests": 0, "failed": 0}
+                            "requests": 0, "failed": 0, "retried": 0}
 
     def _make_executor(self, plan: PlacementPlan,
                        stage_fns: Sequence[Callable[[Any], Any]]
                        ) -> PipelineExecutor:
-        return PipelineExecutor.for_plan(
+        ex = PipelineExecutor.for_plan(
             plan, stage_fns, queue_size=self.queue_size,
             microbatch=self.microbatch,
             microbatch_wait_s=self.microbatch_wait_s,
+            hedge_after=self.hedge_after,
             name_prefix="serve")
+        # every executor epoch (initial + each reconfigure swap) reports
+        # stage losses to the same listeners (HealthMonitor et al.)
+        ex.on_stage_lost = self._notify_stage_lost
+        return ex
+
+    def add_stage_lost_listener(self, cb: Callable[[int], None]) -> None:
+        """Register an observer for last-replica-of-a-stage losses.
+        Called from executor threads — observers must not block (enqueue
+        and return; ``runtime.ft.HealthMonitor`` does exactly that)."""
+        self._stage_lost_listeners.append(cb)
+
+    def _notify_stage_lost(self, stage: int) -> None:
+        for cb in list(self._stage_lost_listeners):
+            try:
+                cb(stage)
+            except Exception:
+                pass
 
     def __enter__(self) -> "PipelinedModelServer":
         self.executor.start()
@@ -235,9 +274,23 @@ class PipelinedModelServer:
 
     def _on_done(self, req: Request, fut) -> None:
         try:
-            self._finish(req, fut.result(), None)
+            result = fut.result()
         except BaseException as e:
+            # a request that crossed a dead stage is not lost: re-admit it
+            # through the batcher so it is served by whatever plan is live
+            # after the degraded-mode replan (reconfigure holds admission
+            # while it swaps, so queued retries land on the new executor)
+            if (isinstance(e, StageLost)
+                    and req.retries < self.stage_loss_retries
+                    and not self._stopped):
+                req.retries += 1
+                with self._stats_lock:
+                    self.stats["retried"] += 1
+                self.batcher.q.put(req)
+                return
             self._finish(req, None, e)
+            return
+        self._finish(req, result, None)
 
     def _finish(self, req: Request, result: Any,
                 error: Optional[BaseException]) -> None:
@@ -276,6 +329,7 @@ class PipelinedModelServer:
             self._window_lat = []
             requests = self.stats["requests"]
             failed = self.stats["failed"]
+            retried = self.stats["retried"]
         prev = self._snap_state
         dt = now - prev["t"]
         done = requests - prev["requests"]
@@ -283,12 +337,13 @@ class PipelinedModelServer:
             "dt_s": dt,
             "requests": done,
             "failed": failed - prev["failed"],
+            "retried": retried - prev.get("retried", 0),
             "throughput_rps": (done / dt) if dt > 0 else 0.0,
             "stage_busy_s": [b - a for a, b in zip(prev["busy"], busy)],
             "latency": latency_percentiles(window),
         }
-        self._snap_state = {"t": now, "busy": busy,
-                            "requests": requests, "failed": failed}
+        self._snap_state = {"t": now, "busy": busy, "requests": requests,
+                            "failed": failed, "retried": retried}
         return snap
 
     # -- elastic hook --------------------------------------------------------

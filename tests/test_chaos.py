@@ -1,0 +1,478 @@
+"""Fault-tolerance tier tests (ISSUE 6): replica failover with in-flight
+re-dispatch, stage-loss fail-fast + degraded-mode replanning through
+HealthMonitor -> ElasticPlanner -> reconfigure(), hedged dispatch
+(off by default, bit-identical outputs), the chaos harness's
+exactly-once audit, reconfigure under concurrent submitters, and the
+runtime satellites (SpeculativeExecutor, TrainSupervisor,
+FailureInjector).  All seeds fixed — this file runs in tier-1 CI."""
+import tempfile
+import threading
+import time
+
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.core.pipeline import (PipelineExecutor, ReplicaFailure,
+                                 StageLost)
+from repro.models.cnn import synthetic_cnn
+from repro.runtime import (ChaosEvent, ChaosMonkey, ElasticPlanner,
+                           FailureInjector, FaultPolicy, HealthMonitor,
+                           SpeculativeExecutor, TrainSupervisor,
+                           replica_kill_schedule, run_chaos_executor)
+from repro.serving import PipelinedModelServer
+from conftest import api_plan as plan
+
+
+# ---------------------------------------------------------------------------
+# executor failover: in-flight re-dispatch, order preserved
+# ---------------------------------------------------------------------------
+def test_replica_failure_redispatches_in_flight():
+    """A replica that dies mid-stream (ReplicaFailure out of the stage fn)
+    hands its accepted-but-unfinished envelopes to survivors; every
+    request completes, in submission order."""
+    inj = FailureInjector(fail_at_steps=[5], exc_type=ReplicaFailure)
+
+    def work(x):
+        time.sleep(0.001)
+        return x * 2
+
+    fns = [lambda x: x + 0, inj.wrap(work, "mid"), lambda x: x + 1]
+    with PipelineExecutor(fns, replicas=[1, 3, 1]) as ex:
+        futs = [ex.submit(i) for i in range(40)]
+        assert [f.result(timeout=20) for f in futs] == \
+            [i * 2 + 1 for i in range(40)]
+        h = ex.health_snapshot()
+    assert sum(h["live_replicas"]) == 4          # one replica retired
+    assert sum(h["redispatches"]) >= 1
+
+
+def test_external_kill_replica_under_load():
+    def slow(x):
+        time.sleep(0.002)
+        return x
+
+    with PipelineExecutor([slow], replicas=[3]) as ex:
+        futs = [ex.submit(i) for i in range(30)]
+        time.sleep(0.01)
+        ex.kill_replica(0, 1)
+        assert [f.result(timeout=20) for f in futs] == list(range(30))
+        assert ex.health_snapshot()["live_replicas"] == [2]
+
+
+def test_stage_loss_fails_fast_and_fires_callback_once():
+    """k=1 stage death: in-flight + later requests resolve with StageLost
+    (the stream never stalls), and on_stage_lost fires exactly once."""
+    fired = []
+
+    def boom(x):
+        raise ReplicaFailure("device fell over")
+
+    ex = PipelineExecutor([lambda x: x, boom])
+    ex.on_stage_lost = fired.append
+    with ex:
+        futs = [ex.submit(i) for i in range(6)]
+        for f in futs:
+            with pytest.raises(StageLost) as ei:
+                f.result(timeout=10)
+            assert ei.value.stage == 1
+        # stream is still accepting; new work fails fast, no hang
+        with pytest.raises(StageLost):
+            ex.submit(99).result(timeout=10)
+    assert fired == [1]
+
+
+def test_kill_stage_loses_all_replicas():
+    with PipelineExecutor([lambda x: x], replicas=[2]) as ex:
+        ex.kill_stage(0)
+        with pytest.raises(StageLost):
+            ex.submit(1).result(timeout=10)
+        assert ex.health_snapshot()["live_replicas"] == [0]
+
+
+# ---------------------------------------------------------------------------
+# hedged dispatch
+# ---------------------------------------------------------------------------
+def _straggler_fns(base=0.002, every=5, factor=40.0):
+    """First attempt of every ``every``-th item sleeps ``factor``x; any
+    re-attempt runs at base speed (a transiently throttled device)."""
+    seen = {}
+    lock = threading.Lock()
+
+    def fn(x):
+        with lock:
+            attempt = seen.get(x, 0)
+            seen[x] = attempt + 1
+        slow = x % every == every - 1 and attempt == 0
+        time.sleep(base * (factor if slow else 1.0))
+        return x * 3
+
+    return [fn]
+
+
+def test_hedging_off_by_default_and_bit_identical_when_on():
+    inputs = list(range(20))
+    with PipelineExecutor(_straggler_fns(), replicas=[3]) as ex:
+        plain = [ex.submit(i).result(timeout=30) for i in inputs]
+        assert sum(ex.health_snapshot()["hedges"]) == 0   # default: off
+
+    with PipelineExecutor(_straggler_fns(), replicas=[3],
+                          hedge_after=0.01) as ex:
+        futs = [ex.submit(i) for i in inputs]
+        hedged = [f.result(timeout=30) for f in futs]
+        h = ex.health_snapshot()
+    assert hedged == plain                # bit-identical, same order
+    assert sum(h["hedges"]) >= 1          # stragglers were hedged
+
+
+def test_hedge_duplicates_complete_exactly_once():
+    """The merge's dedup-by-sequence makes duplicate results invisible:
+    every future resolves once, outputs match submission order."""
+    exits = []
+    lock = threading.Lock()
+
+    def tap(x):
+        with lock:
+            exits.append(x)
+        return x
+
+    fns = _straggler_fns(every=3) + [tap]
+    with PipelineExecutor(fns, replicas=[3, 1], hedge_after=0.01) as ex:
+        futs = [ex.submit(i) for i in range(18)]
+        assert [f.result(timeout=30) for f in futs] == \
+            [i * 3 for i in range(18)]
+    assert exits == [i * 3 for i in range(18)]    # once each, in order
+
+
+# ---------------------------------------------------------------------------
+# chaos harness
+# ---------------------------------------------------------------------------
+def test_kill_schedule_deterministic_and_constrained():
+    a = replica_kill_schedule([2, 3, 3], 4, 1.0, seed=11)
+    b = replica_kill_schedule([2, 3, 3], 4, 1.0, seed=11)
+    assert a == b and len(a) == 4
+    assert all(ev.slot != 0 for ev in a)          # spare_last
+    capped = replica_kill_schedule([2, 3, 3], 9, 1.0, seed=11,
+                                   max_per_stage=1)
+    stages = [ev.stage for ev in capped]
+    assert len(stages) == len(set(stages))
+    full = replica_kill_schedule([2], 2, 1.0, seed=0, spare_last=False)
+    assert {ev.slot for ev in full} == {0, 1}     # stage loss allowed
+
+
+def test_chaos_run_exactly_once_under_kills():
+    def work(x):
+        time.sleep(0.001)
+        return x
+
+    reps = [3, 3]
+    events = replica_kill_schedule(reps, 2, 0.08, seed=4, spare_last=True)
+    rep = run_chaos_executor([work, work], reps, n_requests=80,
+                             interval_s=0.001, events=events)
+    assert rep.kills_applied == 2
+    assert rep.lost == 0 and rep.misordered == 0 and rep.failed == 0
+    assert rep.completed == rep.submitted == 80
+
+
+def test_chaos_monkey_tracks_hot_swapped_executor():
+    """The monkey resolves its target through a getter at fire time, so a
+    reconfigure between events retargets the live executor."""
+    ex1 = PipelineExecutor([lambda x: x], replicas=[2]).start()
+    ex2 = PipelineExecutor([lambda x: x], replicas=[2]).start()
+    current = {"ex": ex1}
+    monkey = ChaosMonkey(lambda: current["ex"], [
+        ChaosEvent(at_s=0.0, kind="kill_replica", stage=0, slot=1),
+        ChaosEvent(at_s=0.05, kind="kill_replica", stage=0, slot=1),
+    ]).start()
+    time.sleep(0.02)
+    current["ex"] = ex2
+    deadline = time.monotonic() + 5
+    while len(monkey.applied) < 2 and time.monotonic() < deadline:
+        time.sleep(0.005)
+    monkey.join(timeout=5)                 # join after the schedule ran
+    assert [ok for _, ok in monkey.applied] == [True, True]
+    assert ex1.health_snapshot()["live_replicas"] == [1]
+    assert ex2.health_snapshot()["live_replicas"] == [1]
+    ex1.stop()
+    ex2.stop()
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode replanning (HealthMonitor -> ElasticPlanner -> reconfigure)
+# ---------------------------------------------------------------------------
+def _builder(delta=1, sleep_s=0.0):
+    def build(p):
+        def fn(x):
+            if sleep_s:
+                time.sleep(sleep_s)
+            return x + delta
+        return [fn] * p.n_stages
+    return build
+
+
+def test_stage_loss_triggers_automatic_replan_zero_lost():
+    g = synthetic_cnn(600).to_layer_graph()
+    ep = ElasticPlanner(g, "balanced_norefine")
+    pl = ep.plan_for(3)
+    # ~1 ms per stage: the kill below lands while the first wave is still
+    # in flight, so some requests must cross the dead stage and retry
+    build = _builder(sleep_s=0.001)
+    srv = PipelinedModelServer(pl, build(pl), max_batch=8,
+                               max_wait_s=0.002, stage_loss_retries=8)
+    srv.executor.start()
+    srv.start()
+    restores = []
+    mon = HealthMonitor(srv, ep, build,
+                        policy=FaultPolicy(poll_interval_s=0.005),
+                        warm_restore=lambda: restores.append(1)).start()
+    try:
+        reqs = [srv.submit(i) for i in range(30)]
+        time.sleep(0.005)
+        srv.executor.kill_stage(1)            # last replicas of stage 1
+        reqs += [srv.submit(i) for i in range(30, 60)]
+        assert all(r.event.wait(30) for r in reqs)      # zero lost
+        assert not [r for r in reqs if r.error is not None]
+        # served by the 3-stage plan (+3) or, post-replan, the 2-stage
+        # plan (+2) — never anything else
+        assert {r.result - r.payload for r in reqs} <= {2, 3}
+        assert len(mon.replans) == 1
+        assert mon.replans[0]["lost_stages"] == [1]
+        assert mon.replans[0]["n_stages"] == 2
+        assert srv.plan.n_stages == 2
+        assert restores == [1]                # warm restore ran first
+        assert srv.snapshot()["retried"] >= 1
+    finally:
+        mon.stop()
+        srv.stop()
+
+
+def test_health_monitor_withdraws_sick_replica_then_replans():
+    """Persistent item failures cross max_consecutive_failures: the probe
+    withdraws replicas; when the whole stage is sick, withdrawal becomes
+    stage loss and the degraded replan serves the retries."""
+    g = synthetic_cnn(600).to_layer_graph()
+    ep = ElasticPlanner(g, "balanced_norefine")
+    pl = ep.plan_for(2)
+    epoch = {"n": 0}
+
+    def build(p):
+        e = epoch["n"]
+        epoch["n"] += 1
+        if e == 0:
+            def sick(x):
+                raise ValueError("persistent device error")
+            return [lambda x: x, sick][:p.n_stages] \
+                + [lambda x: x] * max(0, p.n_stages - 2)
+        return [lambda x: x] * p.n_stages
+
+    srv = PipelinedModelServer(pl, build(pl), max_batch=4,
+                               max_wait_s=0.002, stage_loss_retries=8)
+    srv.executor.start()
+    srv.start()
+    mon = HealthMonitor(
+        srv, ep, build,
+        policy=FaultPolicy(max_consecutive_failures=3,
+                           poll_interval_s=0.005)).start()
+    try:
+        reqs = [srv.submit(i) for i in range(40)]
+        deadline = time.monotonic() + 30
+        while not mon.replans and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert mon.replans, "sick stage never triggered a replan"
+        assert any(reason == "sick" for *_, reason in mon.kills)
+        done = [r for r in reqs if r.event.wait(30)]
+        assert len(done) == 40
+        # casualties of the sick epoch fail with the item error; retries
+        # admitted after the swap succeed — nothing hangs, nothing lost
+        for r in reqs:
+            assert r.error is None or isinstance(r.error, ValueError)
+    finally:
+        mon.stop()
+        srv.stop()
+
+
+def test_health_monitor_heartbeat_kills_hung_replica():
+    """A replica stuck inside the stage fn goes heartbeat-stale while work
+    is in flight; the probe withdraws it and the in-flight envelope is
+    re-dispatched to a live replica (re-attempt runs fast)."""
+    g = synthetic_cnn(600).to_layer_graph()
+    ep = ElasticPlanner(g, "balanced_norefine")
+    pl = ep.plan_for(1)
+    attempts = {}
+    lock = threading.Lock()
+
+    def hang_once(x):
+        with lock:
+            n = attempts.get(x, 0)
+            attempts[x] = n + 1
+        if x == 3 and n == 0:
+            time.sleep(0.6)               # "hung" first attempt
+        return x
+
+    class Plan2:                           # 1 logical stage, 2 replicas
+        pass
+
+    srv = PipelinedModelServer(pl, [hang_once], max_batch=4,
+                               max_wait_s=0.002)
+    # replicate by hand: swap in an executor with 2 replicas of the fn
+    srv.executor.stop()
+    srv.executor = PipelineExecutor([hang_once], replicas=[2],
+                                    name="hung-test")
+    srv.executor.on_stage_lost = srv._notify_stage_lost
+    srv.executor.start()
+    srv.start()
+    mon = HealthMonitor(
+        srv, ep, _builder(0),
+        policy=FaultPolicy(heartbeat_timeout_s=0.1,
+                           poll_interval_s=0.02)).start()
+    try:
+        reqs = [srv.submit(i) for i in range(8)]
+        assert all(r.event.wait(30) for r in reqs)
+        assert not [r for r in reqs if r.error is not None]
+        assert [r.result for r in reqs] == list(range(8))
+        assert any(reason == "stale" for *_, reason in mon.kills)
+    finally:
+        mon.stop()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# reconfigure() under concurrent submitters (satellite)
+# ---------------------------------------------------------------------------
+def test_reconfigure_under_concurrent_submitters():
+    """In-flight requests drain to the old plan, queued requests are
+    served by the new plan, snapshot() counters stay consistent, and
+    nothing is lost or failed across the swap."""
+    g = synthetic_cnn(600).to_layer_graph()
+    pl3 = plan(g, 3, "balanced_norefine")
+    pl2 = plan(g, 2, "balanced_norefine")
+
+    def old_fn(x):
+        time.sleep(0.001)
+        return ("old", x)
+
+    def new_fn(x):
+        return ("new", x)
+
+    srv = PipelinedModelServer(pl3, [old_fn, lambda x: x, lambda x: x],
+                               max_batch=8, max_wait_s=0.002)
+    srv.executor.start()
+    srv.start()
+    srv.snapshot()                         # rebase the delta window
+    n_threads, n_each = 4, 25
+    results = [None] * n_threads
+
+    def submitter(t):
+        out = []
+        for i in range(n_each):
+            out.append(srv.submit((t, i)))
+            time.sleep(0.0005)
+        results[t] = out
+
+    threads = [threading.Thread(target=submitter, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    time.sleep(0.01)
+    srv.reconfigure(pl2, [new_fn, lambda x: x])
+    for th in threads:
+        th.join()
+    reqs = [r for out in results for r in out]
+    assert all(r.event.wait(30) for r in reqs)
+    assert not [r for r in reqs if r.error is not None]
+    tags = {r.result[0] for r in reqs}
+    assert tags <= {"old", "new"}
+    assert "new" in tags                   # the swap happened under load
+    # every request kept its own payload through whichever plan served it
+    for r in reqs:
+        assert r.result[1] == r.payload
+    snap = srv.snapshot()
+    assert snap["requests"] == n_threads * n_each
+    assert snap["failed"] == 0
+    # a post-swap wave is served exclusively by the new plan
+    wave = [srv.submit(("w", i)) for i in range(10)]
+    assert all(r.event.wait(10) for r in wave)
+    assert {r.result[0] for r in wave} == {"new"}
+    srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# runtime satellites
+# ---------------------------------------------------------------------------
+def test_speculative_executor_prefers_first_success():
+    """A fast-failing primary must not win over a later-succeeding
+    backup (the old FIRST_COMPLETED bug)."""
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def flaky(x):
+        with lock:
+            calls["n"] += 1
+            first = calls["n"] == 1
+        if first:
+            raise RuntimeError("transient")
+        return x + 1
+
+    se = SpeculativeExecutor(flaky, hedge_after=0.05)
+    assert se.submit(1) == 2
+    assert se.hedged == 1
+    se.shutdown()                          # joins the pool (wait=True)
+
+
+def test_speculative_executor_raises_when_all_attempts_fail():
+    def always(x):
+        raise ValueError("both died")
+
+    se = SpeculativeExecutor(always, hedge_after=0.005)
+    with pytest.raises(ValueError, match="both died"):
+        se.submit(0)
+    se.shutdown(wait=False)
+
+
+def test_supervisor_restarts_clean_on_empty_store_any_exception():
+    """No checkpoint yet + a non-RuntimeError failure: restart from
+    start_step with the *initial* state (the old code called restore()
+    on an empty store and only caught RuntimeError)."""
+    store = CheckpointStore(tempfile.mkdtemp(), keep=2)
+    assert not store.has_checkpoint()
+    failed = []
+
+    def step_fn(state, step):
+        if step == 2 and not failed:
+            failed.append(step)
+            raise OSError("device fell off the bus")
+        return state + 1, {}
+
+    sup = TrainSupervisor(store, step_fn, ckpt_every=100, async_ckpt=False)
+    state, rep = sup.run(0, 5)
+    assert rep.restarts == 1 and rep.final_step == 5
+    assert state == 5                      # replayed from scratch exactly
+    assert store.has_checkpoint()          # final checkpoint landed
+
+
+def test_failure_injector_rate_independent_of_deterministic():
+    """A deterministic firing at step k no longer suppresses the seeded
+    random decision at the same step (separate fired sets), and the rate
+    coin is flipped exactly once per (target, step)."""
+    inj = FailureInjector(fail_at_steps=[3], fail_rate=1.0, seed=0)
+    with pytest.raises(RuntimeError, match="at step 3"):
+        inj.check(3)                       # deterministic fires first
+    with pytest.raises(RuntimeError, match="random failure at step 3"):
+        inj.check(3)                       # rate=1.0 still fires after
+    inj.check(3)                           # both decided: clean from now
+
+    targeted = FailureInjector(fail_at_steps=[0], fail_target="s1")
+    targeted.check(0, target="s0")         # filtered: wrong target
+    with pytest.raises(RuntimeError):
+        targeted.check(0, target="s1")
+
+
+def test_failure_injector_wrap_counts_calls_per_target():
+    inj = FailureInjector(fail_at_steps=[1], exc_type=ReplicaFailure)
+    fa = inj.wrap(lambda x: x * 2, "a")
+    fb = inj.wrap(lambda x: x * 3, "b")
+    assert fa(1) == 2 and fb(1) == 3       # call #0 per target
+    with pytest.raises(ReplicaFailure):
+        fa(1)                              # a's call #1
+    with pytest.raises(ReplicaFailure):
+        fb(1)                              # b's own call #1: independent
+    assert fa(4) == 8 and fb(4) == 12
