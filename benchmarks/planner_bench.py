@@ -14,7 +14,7 @@ It also runs the exact O(d^2 s) DP oracle to confirm ``opt`` achieves a max
 modeled stage time <= ``balanced``'s on every model, and folds in the
 persistent-executor throughput microbenchmark.  Summary lands in
 ``BENCH_planner.json`` at the repo root (plus the usual artifacts JSON).
-All plans are :class:`~repro.core.planner.PlacementPlan` objects; the
+All plans are :class:`~repro.core.placement.PlacementPlan` objects; the
 replicated-placement comparison (joint cuts+replicas DP vs. the best
 non-replicated plan) lives in ``benchmarks/placement_bench.py``.
 
@@ -32,7 +32,7 @@ from typing import Dict, List
 
 from repro.api import DeploymentSpec, plan
 from repro.core import EdgeTPUModel
-from repro.core.planner import min_stages_no_spill
+from repro.core.placement import min_stages_no_spill
 from repro.core.segmentation import minimax_time_split
 from repro.models.cnn import REAL_CNNS
 

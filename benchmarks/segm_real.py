@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from repro.api import DeploymentSpec, plan
 from repro.core import EdgeTPUModel
-from repro.core.planner import min_stages_no_spill
+from repro.core.placement import min_stages_no_spill
 from repro.models.cnn import REAL_CNNS
 
 from .common import emit

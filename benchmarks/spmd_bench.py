@@ -1,0 +1,297 @@
+"""SPMD pipeline benchmark: modeled-vs-real on a forced multi-device mesh.
+
+Exercises the :class:`~repro.launch.pipeline_spmd.SpmdPipelineExecutor` —
+the plan lowered onto a shard_map device mesh (fused per-stage callables,
+ppermute hops, last-stage-only gather) — and records three things in
+``BENCH_spmd.json`` at the repo root:
+
+1. **Equivalence + throughput** — a CNN ``GraphModel`` (apply_subset layer
+   ranges) and an LM smoke config (scan-block ranges) each lowered onto a
+   4-stage mesh; per ``--microbatches`` count the end-to-end batch time and
+   items/s, plus the max abs error against direct single-device
+   application.
+2. **Predicted vs achieved per-stage times** — the plan's modeled
+   ``stage_times_s`` next to each stage's fused callable timed in
+   isolation on its own mesh device (the paper's modeled-vs-real loop at
+   execution granularity).
+3. **Weight-streaming fill** — ``stream_stage_weights`` with
+   ``overlap=True`` (per-stage transfers issued async, the pipeline's AOT
+   compile running while they land) vs ``overlap=False`` (each stage's
+   transfer completes before the next; compile strictly after).  Two
+   numbers per arm, from the :class:`StreamReport`: the wall fill and
+   ``blocked_s``, the host time spent *waiting* on transfers.  Overlap
+   eliminates the blocked time on any backend (transfers land behind the
+   compile; the final drain finds them done) — that is the asserted
+   savings.  Wall fill is recorded but not asserted: on the CPU-emulated
+   mesh host-to-device copies run on the same worker pool and memory bus
+   as every other XLA op, so wall time is conserved whatever the issue
+   order; it shrinks only where transfers have their own DMA engine
+   (real accelerators).  The measurement uses warm host buffers, per-rep
+   device-shard deletion, interleaved arms, and medians
+   (fresh-allocation page faults otherwise swamp the signal).
+
+Forced-mesh note: the device count is forced *before* the first jax import
+via ``XLA_FLAGS=--xla_force_host_platform_device_count``; all heavy
+imports therefore live inside functions.
+
+    PYTHONPATH=src python -m benchmarks.spmd_bench            # full, writes JSON
+    PYTHONPATH=src python -m benchmarks.spmd_bench --smoke    # CI: small, no write
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DEVICES = 4
+STAGES = 4
+
+
+# ---------------------------------------------------------------------------
+# section 1+2: executor equivalence, throughput, predicted-vs-achieved
+# ---------------------------------------------------------------------------
+def bench_cnn(mesh, microbatch_counts, *, f, L, hw, batch):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import DeploymentSpec
+    from repro.api import plan as api_plan
+    from repro.launch.pipeline_spmd import SpmdPipelineExecutor
+    from repro.models.cnn import synthetic_cnn
+
+    model = synthetic_cnn(f, L=L, hw=hw)
+    params = model.init(jax.random.PRNGKey(0))
+    pl = api_plan(DeploymentSpec(stages=STAGES,
+                                 strategy="balanced_norefine"),
+                  graph=model.to_layer_graph())
+    x = jax.random.normal(jax.random.PRNGKey(1), (batch, hw, hw, 3))
+    ref = model.apply(params, x)
+
+    rows, max_err, pred, ach = [], 0.0, None, None
+    for m in microbatch_counts:
+        with SpmdPipelineExecutor.for_cnn(model, params, pl,
+                                          mesh=mesh, n_microbatches=m,
+                                          batch_size=batch) as ex:
+            got = ex(x)                      # warmup (compile)
+            t0 = time.perf_counter()
+            got = ex(x)
+            dt = time.perf_counter() - t0
+            err = float(jnp.max(jnp.abs(got - ref)))
+            max_err = max(max_err, err)
+            rows.append({"n_microbatches": m, "batch_s": dt,
+                         "items_per_s": batch / dt, "max_err": err,
+                         "fill_s": ex.fill_s})
+            if m == microbatch_counts[-1]:
+                pred = ex.predicted_stage_times()
+                ach = ex.achieved_stage_times()
+        print(f"  cnn m={m}: {batch / dt:8.1f} items/s  err {err:.2e}")
+    return {"model": model.name, "stages": STAGES, "batch": batch,
+            "equivalence_max_err": max_err, "throughput": rows,
+            "predicted_stage_s": pred, "achieved_stage_s": ach}
+
+
+def bench_lm(mesh, microbatch_counts, *, arch, seq, batch):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.api import DeploymentSpec
+    from repro.api import plan as api_plan
+    from repro.configs.common import concrete_batch
+    from repro.launch.pipeline_spmd import SpmdPipelineExecutor
+    from repro.models import api as lm_api
+    from repro.models import lm_graph
+
+    cfg = configs.get(arch).smoke_config()
+    params = lm_api.init(cfg, jax.random.PRNGKey(0))
+    tokens = concrete_batch(cfg, seq, batch, kind="prefill")["tokens"]
+    g = lm_graph.lm_layer_graph(cfg, seq_len=seq)
+    pl = api_plan(DeploymentSpec(stages=STAGES,
+                                 strategy="balanced_norefine"), graph=g)
+    ref = lm_api.forward(cfg, params, {"tokens": tokens})
+
+    rows, max_err, pred, ach = [], 0.0, None, None
+    for m in microbatch_counts:
+        with SpmdPipelineExecutor.for_lm(cfg, params, pl,
+                                         mesh=mesh, n_microbatches=m,
+                                         batch_size=batch,
+                                         seq_len=seq) as ex:
+            got = ex(tokens)                 # warmup (compile)
+            t0 = time.perf_counter()
+            got = ex(tokens)
+            dt = time.perf_counter() - t0
+            err = float(jnp.max(jnp.abs(got - ref)))
+            max_err = max(max_err, err)
+            rows.append({"n_microbatches": m, "batch_s": dt,
+                         "items_per_s": batch / dt, "max_err": err,
+                         "fill_s": ex.fill_s})
+            if m == microbatch_counts[-1]:
+                pred = ex.predicted_stage_times()
+                ach = ex.achieved_stage_times()
+        print(f"  lm  m={m}: {batch / dt:8.1f} items/s  err {err:.2e}")
+    return {"arch": f"{arch}-smoke", "stages": STAGES, "seq": seq,
+            "batch": batch, "equivalence_max_err": max_err,
+            "throughput": rows, "predicted_stage_s": pred,
+            "achieved_stage_s": ach}
+
+
+# ---------------------------------------------------------------------------
+# section 3: weight-streaming fill, overlapped vs serial
+# ---------------------------------------------------------------------------
+def _make_compile_fn(seed: int, depth: int):
+    """A cache-busted stand-in for the pipeline's AOT compile: the baked
+    ``seed`` constant makes every rep's HLO distinct (same structure and
+    cost both arms), so jit's cache cannot turn later compiles into
+    no-ops and erase the overlap partner."""
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        y = x
+        for i in range(depth):
+            y = jnp.tanh(y @ x + (seed + i))
+        return y
+
+    jitted = jax.jit(f)
+    struct = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    return lambda: jitted.lower(struct).compile()
+
+
+def bench_fill(mesh, *, payload_mb: int, reps: int, compile_depth: int):
+    import numpy as np
+
+    import jax
+
+    from repro.launch.pipeline_spmd import stream_stage_weights
+
+    elems = int(payload_mb * 2**20 / 4 / STAGES)
+    rng = np.random.default_rng(0)
+    # warm host buffer: allocated (and its pages touched) exactly once —
+    # fresh giant allocations per rep cause page-fault storms that swamp
+    # the transfer-vs-compile signal
+    stacked = {"w": rng.standard_normal((STAGES, elems)).astype(np.float32)}
+
+    wall = {True: [], False: []}
+    blocked = {True: [], False: []}
+    for rep in range(reps):
+        arms = [("serial", False), ("overlap", True)]
+        if rep % 2:                    # alternate order to cancel drift
+            arms.reverse()
+        for name, ov in arms:
+            g, compiled, stream = stream_stage_weights(
+                mesh, stacked, "model", overlap=ov,
+                compile_fn=_make_compile_fn(rep * 2 + int(ov),
+                                            compile_depth))
+            assert compiled is not None
+            for leaf in jax.tree.leaves(g):
+                leaf.delete()          # release device memory for next rep
+            wall[ov].append(stream.fill_s)
+            blocked[ov].append(stream.blocked_s)
+            print(f"  fill rep {rep} {name}: wall {stream.fill_s * 1e3:7.1f}"
+                  f"  blocked {stream.blocked_s * 1e3:7.1f} ms")
+    med = statistics.median
+    return {"payload_mb": payload_mb, "stages": STAGES, "reps": reps,
+            "serial_fill_s": wall[False], "overlap_fill_s": wall[True],
+            "serial_blocked_s": blocked[False],
+            "overlap_blocked_s": blocked[True],
+            "serial_median_s": med(wall[False]),
+            "overlap_median_s": med(wall[True]),
+            "serial_blocked_median_s": med(blocked[False]),
+            "overlap_blocked_median_s": med(blocked[True]),
+            "wall_savings_s": med(wall[False]) - med(wall[True]),
+            "blocked_savings_s": (med(blocked[False])
+                                  - med(blocked[True]))}
+
+
+# ---------------------------------------------------------------------------
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: tiny models and payload, no "
+                         "BENCH_spmd.json write, no overlap timing assert "
+                         "(functional equivalence still asserted)")
+    ap.add_argument("--fill-mb", type=int, default=None,
+                    help="total synthetic stage-weight payload for the "
+                         "streaming section (default 1024 full / 8 smoke)")
+    ap.add_argument("--fill-reps", type=int, default=None,
+                    help="interleaved serial/overlap rep pairs "
+                         "(default 5 full / 1 smoke)")
+    args = ap.parse_args()
+
+    # must precede the first jax import anywhere in the process
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={N_DEVICES} "
+        + os.environ.get("XLA_FLAGS", ""))
+    import jax
+
+    from repro.launch.mesh import make_mesh
+
+    assert jax.device_count() >= N_DEVICES, (
+        f"need {N_DEVICES} devices, got {jax.device_count()} — jax was "
+        f"imported before the XLA_FLAGS override took effect")
+    mesh = make_mesh((1, N_DEVICES), ("data", "model"))
+
+    smoke = args.smoke
+    fill_mb = args.fill_mb or (8 if smoke else 1024)
+    fill_reps = args.fill_reps or (1 if smoke else 5)
+    microbatches = [2, 4] if smoke else [1, 2, 4, 8]
+
+    print("# cnn executor")
+    cnn = bench_cnn(mesh, microbatches,
+                    f=4 if smoke else 8, L=6 if smoke else 8,
+                    hw=16 if smoke else 32, batch=8 if smoke else 16)
+    print("# lm executor")
+    lm = bench_lm(mesh, microbatches, arch="qwen3-1.7b",
+                  seq=16 if smoke else 32, batch=8 if smoke else 16)
+    print("# weight-streaming fill")
+    fill = bench_fill(mesh, payload_mb=fill_mb, reps=fill_reps,
+                      compile_depth=20 if smoke else 60)
+
+    summary = {
+        "note": "PlacementPlan lowered onto a forced "
+                f"{N_DEVICES}-device host mesh (shard_map + ppermute, "
+                "fused per-stage callables, last-stage-only gather); "
+                "see EXPERIMENTS.md §SPMD execution",
+        "smoke": smoke,
+        "n_devices": N_DEVICES,
+        "cnn": cnn,
+        "lm": lm,
+        "weight_streaming": fill,
+        "acceptance": {
+            "cnn_equivalent": bool(cnn["equivalence_max_err"] < 1e-3),
+            "lm_equivalent": bool(lm["equivalence_max_err"] < 2e-2),
+            # overlap drives host-blocked transfer time to ~0: the
+            # non-amortizing weight-load term lands behind the compile
+            "overlap_unblocks_host": bool(
+                fill["blocked_savings_s"] > 0
+                and fill["overlap_blocked_median_s"]
+                    < 0.5 * fill["serial_blocked_median_s"]),
+            "blocked_savings_ms": fill["blocked_savings_s"] * 1e3,
+            # wall fill on the CPU-emulated mesh is informational only
+            # (shared worker pool + memory bus conserve it; see module
+            # docstring) — real accelerators convert the unblocked time
+            # into wall savings via their DMA engines
+            "wall_savings_ms": fill["wall_savings_s"] * 1e3,
+        },
+    }
+    assert summary["acceptance"]["cnn_equivalent"], cnn["equivalence_max_err"]
+    assert summary["acceptance"]["lm_equivalent"], lm["equivalence_max_err"]
+    print(f"fill wall   serial -> overlap: "
+          f"{fill['serial_median_s'] * 1e3:7.0f} -> "
+          f"{fill['overlap_median_s'] * 1e3:7.0f} ms")
+    print(f"fill blocked serial -> overlap: "
+          f"{fill['serial_blocked_median_s'] * 1e3:7.0f} -> "
+          f"{fill['overlap_blocked_median_s'] * 1e3:7.0f} ms")
+    if not smoke:
+        assert summary["acceptance"]["overlap_unblocks_host"], fill
+        out = os.path.join(REPO_ROOT, "BENCH_spmd.json")
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

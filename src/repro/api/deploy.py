@@ -6,7 +6,7 @@ PRs 1-3 that pipeline was exposed as ~10 loose functions whose orchestration
 every consumer hand-copied.  This module is the single typed entry point:
 
 * :func:`plan` — declarative :class:`~repro.api.spec.DeploymentSpec` in,
-  :class:`~repro.core.planner.PlacementPlan` (with an attached
+  :class:`~repro.core.placement.PlacementPlan` (with an attached
   :class:`~repro.api.report.PlanReport`) out, dispatched through the
   strategy registry.
 * :func:`deploy` / :class:`Deployment` — the runtime handle.  It owns
@@ -29,18 +29,21 @@ every consumer hand-copied.  This module is the single typed entry point:
 from __future__ import annotations
 
 import dataclasses
+import logging
 from typing import Any, Callable, List, Optional, Sequence
 
 from ..core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
 from ..core.graph import LayerGraph
 from ..core.pipeline import PipelineExecutor
-from ..core.planner import PlacementPlan
+from ..core.placement import PlacementPlan
 from ..core.refine import MemoryReporter
 from .report import PlanReport
 from .spec import DeploymentSpec, resolve_model_graph
 from .strategies import PlanContext, get_strategy
 
 StageFnBuilder = Callable[[PlacementPlan], List[Callable[[Any], Any]]]
+
+logger = logging.getLogger(__name__)
 
 
 def plan(spec: DeploymentSpec, *,
@@ -197,9 +200,54 @@ class Deployment:
         raise ValueError("deployment has no stage functions; pass "
                          "stage_fns or stage_fn_builder to deploy()")
 
-    def executor(self, start: bool = False) -> PipelineExecutor:
-        """A pipeline executor wired from the plan + spec (caller owns its
-        lifecycle; use as a context manager or call stop())."""
+    def executor(self, start: bool = False, *,
+                 backend: Optional[str] = None,
+                 model: Any = None, params: Any = None,
+                 mesh: Any = None, n_microbatches: int = 4,
+                 overlap_streaming: bool = True,
+                 batch_size: Optional[int] = None,
+                 seq_len: Optional[int] = None):
+        """An executor wired from the plan + spec (caller owns its
+        lifecycle; use as a context manager or call stop()).
+
+        ``backend`` (default: the spec's) picks the execution tier:
+
+        * ``"host"`` — the threaded :class:`PipelineExecutor` over this
+          deployment's stage functions.
+        * ``"spmd"`` — the
+          :class:`~repro.launch.pipeline_spmd.SpmdPipelineExecutor`:
+          the plan lowered onto a device mesh (shard_map + ppermute, one
+          stage per mesh slice, overlapped weight streaming).  Needs the
+          live model (a ``GraphModel`` or LM config) and its ``params`` —
+          runtime objects that cannot live in the spec.  A plan with
+          replicated stages cannot map one-stage-one-slice: it falls back
+          to the host executor with a logged one-line notice (the
+          low-level SPMD entry points keep the hard error).
+        """
+        backend = backend if backend is not None else self.spec.backend
+        if backend not in ("host", "spmd"):
+            raise ValueError(f"unknown backend {backend!r}; pick 'host' "
+                             f"or 'spmd'")
+        if backend == "spmd":
+            from ..launch.pipeline_spmd import (SpmdPipelineExecutor,
+                                                plan_supports_spmd)
+            if not plan_supports_spmd(self.plan):
+                logger.warning(
+                    "spmd backend: plan has replicated stages "
+                    "(replica_counts=%s); falling back to the host "
+                    "PipelineExecutor", self.plan.replica_counts)
+            else:
+                if model is None or params is None:
+                    raise ValueError(
+                        "backend='spmd' needs the live model and params: "
+                        "executor(backend='spmd', model=..., params=...)")
+                return SpmdPipelineExecutor.for_model(
+                    model, params, self.plan, mesh=mesh,
+                    n_microbatches=n_microbatches,
+                    overlap_streaming=overlap_streaming,
+                    batch_size=batch_size,
+                    **({"seq_len": seq_len} if seq_len is not None
+                       else {}))
         ex = PipelineExecutor.for_plan(
             self.plan, self.stage_functions(),
             queue_size=self.spec.queue_size,

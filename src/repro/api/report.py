@@ -22,7 +22,7 @@ from typing import Dict, Optional, Tuple
 
 from ..core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
 from ..core.graph import LayerGraph
-from ..core.planner import PlacementPlan
+from ..core.placement import PlacementPlan
 
 REPORT_FORMAT = "repro.plan_report/v1"
 

@@ -3,7 +3,7 @@
 A :class:`DeploymentSpec` says *what* to deploy — which model graph, over
 which devices, optimized how, under which constraints and serving policy —
 without naming any of the machinery that does it.  ``repro.api.plan`` turns
-a spec into a :class:`~repro.core.planner.PlacementPlan`;
+a spec into a :class:`~repro.core.placement.PlacementPlan`;
 ``repro.api.deploy`` turns it into a live :class:`~repro.api.deploy.Deployment`.
 DistrEdge (PAPERS.md, arXiv 2202.01699) frames multi-device CNN serving as
 exactly this: one placement decision over a declarative description of
@@ -78,6 +78,16 @@ class DeploymentSpec:
     ``microbatch_wait_s`` (stage-level shape-bucketed dynamic
     micro-batching).
 
+    ``backend`` — which execution tier ``Deployment.executor()`` builds:
+    ``"host"`` (default; the threaded
+    :class:`~repro.core.pipeline.PipelineExecutor`, one worker per stage
+    with queues between) or ``"spmd"`` (the
+    :class:`~repro.launch.pipeline_spmd.SpmdPipelineExecutor`:
+    shard_map/ppermute pipeline over a device mesh with overlapped weight
+    streaming; needs one device per stage and an unreplicated plan —
+    replicated plans fall back to the host executor with a logged
+    notice).
+
     Fault policy (also serving-side): ``hedge_after`` — seconds before a
     straggling item on a replicated stage is speculatively re-dispatched
     to another replica (first result wins via the merge's dedup; ``None``
@@ -104,6 +114,7 @@ class DeploymentSpec:
     queue_size: int = 64
     microbatch: Optional[int] = None
     microbatch_wait_s: float = 0.0
+    backend: str = "host"
     # fault policy
     hedge_after: Optional[float] = None
     stage_loss_retries: int = 0
@@ -128,6 +139,9 @@ class DeploymentSpec:
         if self.stage_loss_retries < 0:
             raise ValueError(f"stage_loss_retries must be >= 0, "
                              f"got {self.stage_loss_retries}")
+        if self.backend not in ("host", "spmd"):
+            raise ValueError(f"backend must be 'host' or 'spmd', "
+                             f"got {self.backend!r}")
         from ..profiling.sources import parse_cost_source
         parse_cost_source(self.cost_source)   # raises on malformed refs
 

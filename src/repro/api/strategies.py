@@ -48,7 +48,7 @@ from typing import Callable, Dict, List, Optional, Tuple, Type
 
 from ..core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
 from ..core.graph import LayerGraph
-from ..core.planner import PlacementPlan
+from ..core.placement import PlacementPlan
 from ..core.refine import (GraphReporter, MemoryReporter, RefinementResult,
                            refine_cuts)
 from ..core.segmentation import (balanced_split, comp_split,
@@ -131,7 +131,7 @@ class PlanContext:
         count whose refined balanced plan avoids host memory)."""
         if self.spec.stages is not None:
             return self.spec.stages
-        from ..core.planner import min_stages_no_spill
+        from ..core.placement import min_stages_no_spill
         return min_stages_no_spill(self.graph, self.model())
 
     def topology(self) -> Topology:

@@ -10,9 +10,8 @@ from .segmentation import (balanced_split, comp_split, dp_split, imbalance,
 from .cost_engine import SegmentCostEngine
 from .refine import GraphReporter, RefinementResult, refine_cuts
 from .topology import DeviceSpec, Topology, TopologyCostModel
-from .planner import (PlacementPlan, SegmentationPlan, StagePlacement,
-                      min_stages_no_spill, min_stages_to_fit, plan,
-                      plan_placement)
+from .placement import (PlacementPlan, SegmentationPlan, StagePlacement,
+                        min_stages_no_spill, min_stages_to_fit)
 from .edge_tpu_model import EdgeTPUModel, EdgeTPUSpec, MemoryReport
 from .pipeline import (PipelineExecutor, PipelineStopped, ReplicaFailure,
                        ShapeKeyedStageCache, StageLost, simulated_stage,
@@ -27,7 +26,7 @@ __all__ = [
     "GraphReporter", "RefinementResult", "refine_cuts",
     "DeviceSpec", "Topology", "TopologyCostModel",
     "PlacementPlan", "SegmentationPlan", "StagePlacement",
-    "plan", "plan_placement", "min_stages_to_fit", "min_stages_no_spill",
+    "min_stages_to_fit", "min_stages_no_spill",
     "EdgeTPUModel", "EdgeTPUSpec", "MemoryReport",
     "PipelineExecutor", "PipelineStopped", "ReplicaFailure", "StageLost",
     "ShapeKeyedStageCache", "simulated_stage", "stage_balance_metrics",

@@ -44,7 +44,7 @@ does exactly that — note the delta spans everything the executor ran in the
 interval, which equals the batch only when no other traffic interleaves).
 
 **Replicated stages** (``replicas=[...]``, from a
-:class:`~repro.core.planner.PlacementPlan`): a stage with ``k > 1``
+:class:`~repro.core.placement.PlacementPlan`): a stage with ``k > 1``
 replicas — a bottleneck a single dominant layer pins, which no cut
 placement can fix — runs ``k`` workers sharing the stage function.  A
 dispatcher thread round-robins envelopes from the stage's input queue onto

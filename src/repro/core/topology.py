@@ -5,7 +5,7 @@ bare cut list.  DistrEdge-style distributed-edge setups (PAPERS.md, arXiv
 2202.01699) break both assumptions: devices differ (on-chip memory, compute
 rate, link bandwidth) and a bottleneck stage may be *replicated* across
 several devices.  This module provides the vocabulary the
-:class:`~repro.core.planner.PlacementPlan` hand-off needs:
+:class:`~repro.core.placement.PlacementPlan` hand-off needs:
 
 * :class:`DeviceSpec` — one device, expressed as deltas against the
   calibrated :class:`~repro.core.edge_tpu_model.EdgeTPUSpec` (memory

@@ -6,7 +6,8 @@ Demonstrates the paper's full deployment story at LM scale, on CPU:
    ``--stages`` devices;
 2. split the stacked block params by the plan; one host thread per stage
    with queues between (paper Fig. 5 executor) — or the SPMD
-   shard_map/ppermute pipeline with ``--spmd`` (needs >=stages devices);
+   shard_map/ppermute pipeline with ``--backend spmd`` (needs >=stages
+   devices, e.g. ``XLA_FLAGS=--xla_force_host_platform_device_count=4``);
 3. serve a *stream* of requests: each request is admitted into the
    pipeline as it arrives (no inter-batch barrier) and completes its own
    future; report throughput, per-request latency percentiles, and
@@ -89,6 +90,7 @@ def spec_from_args(args) -> DeploymentSpec:
     devices, one per stage, with the requested split strategy."""
     common = dict(
         model=f"lm:{args.arch}:seq={args.seq}",
+        backend=getattr(args, "backend", "host"),
         microbatch=args.microbatch,
         microbatch_wait_s=args.microbatch_wait_ms / 1e3,
         max_batch=args.requests, max_wait_s=0.005,
@@ -113,6 +115,14 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--strategy", default="balanced",
                     choices=["balanced", "balanced_norefine", "comp"])
+    ap.add_argument("--backend", default="host",
+                    choices=["host", "spmd"],
+                    help="execution tier: 'host' (threaded stage workers, "
+                         "streaming admission) or 'spmd' (the plan lowered "
+                         "onto a device mesh: shard_map + ppermute with "
+                         "overlapped weight streaming; needs >= --stages "
+                         "devices — set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     ap.add_argument("--microbatch", type=int, default=1,
                     help="stage-level dynamic micro-batching bucket size "
                          "(stack up to k same-shape in-flight requests "
@@ -167,6 +177,38 @@ def main() -> None:
                            key=jax.random.PRNGKey(i),
                            kind="prefill")["tokens"]
             for i in range(args.requests)]
+
+    if args.backend == "spmd":
+        # batch path: the whole request set rides one mesh dispatch (the
+        # SPMD tier has no streaming admission loop — that is the host
+        # executor's job; see EXPERIMENTS.md §SPMD execution)
+        ex = dep.executor(backend="spmd", model=cfg, params=params,
+                          n_microbatches=max(1, args.microbatch),
+                          batch_size=args.requests, seq_len=args.seq)
+        if isinstance(ex, PipelineExecutor):     # replicated-plan fallback
+            raise SystemExit("plan has replicated stages; rerun without "
+                             "--device-budget or use --backend host")
+        rows = [r[0] for r in reqs]              # (seq,) token rows
+        with ex:
+            ex.run_batch(rows[:1])               # warmup (compile)
+            t0 = time.perf_counter()
+            outs, stats = ex.run_batch(rows)
+            dt = time.perf_counter() - t0
+            print(f"{len(outs)} requests in {dt*1e3:.1f} ms "
+                  f"({stats['items_per_s']:.1f} req/s, "
+                  f"m={stats['n_microbatches']}, "
+                  f"weight-stream fill {stats['fill_s']*1e3:.0f} ms)")
+            print("predicted stage times (s):",
+                  [round(t, 4) for t in ex.predicted_stage_times()])
+            print("achieved stage times (s): ",
+                  [round(t, 4) for t in ex.achieved_stage_times()])
+        ref = api.forward(cfg, params, {"tokens": reqs[0]},
+                          last_token_only=True)
+        err = float(jnp.max(jnp.abs(outs[0][-1:] - ref[0])))
+        print(f"pipeline vs direct max err: {err:.2e}")
+        assert err < 2e-2
+        return
+
     # persistent streaming executor: stage workers live for the whole
     # serving session; requests are admitted continuously (no barrier).
     # The Deployment handle owns the server wiring (spec's serving policy).

@@ -45,7 +45,7 @@ from ..api import DeploymentSpec
 from ..api import plan as plan_spec
 from ..checkpoint import CheckpointStore
 from ..core.graph import LayerGraph
-from ..core.planner import PlacementPlan
+from ..core.placement import PlacementPlan
 
 
 class FailureInjector:

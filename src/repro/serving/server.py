@@ -54,7 +54,7 @@ from collections import deque
 from typing import (Any, Callable, Dict, List, Optional, Sequence, Union)
 
 from ..core.pipeline import PipelineExecutor, PipelineStopped, StageLost
-from ..core.planner import PlacementPlan
+from ..core.placement import PlacementPlan
 
 # process-wide request ids: ``id(payload)`` collided when payload objects
 # were reused (or GC'd and their addresses recycled) across requests

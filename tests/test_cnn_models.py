@@ -101,7 +101,7 @@ def test_pipelined_branchy_model_equals_direct():
 def test_min_stages_matches_paper_table5():
     """Paper Table 5: ceil(size/8MiB) — e.g. ResNet101 -> 6, ResNet152 -> 8,
     InceptionV4 -> 7, Xception -> 4 (int8 bytes == param count)."""
-    from repro.core.planner import min_stages_to_fit
+    from repro.core.placement import min_stages_to_fit
     expect = {"ResNet101": 6, "ResNet152": 8, "InceptionV4": 7,
               "Xception": 3, "DenseNet121": 2}
     for name, n in expect.items():

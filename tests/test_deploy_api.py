@@ -146,7 +146,8 @@ def test_auto_stage_count_matches_min_stages_rule():
     g = REAL_CNNS["ResNet50"]().to_layer_graph()
     m = EdgeTPUModel(g)
     pl = plan(DeploymentSpec(strategy="balanced"), graph=g, tpu_model=m)
-    assert pl.n_stages == legacy.min_stages_no_spill(g, m)
+    from repro.core.placement import min_stages_no_spill
+    assert pl.n_stages == min_stages_no_spill(g, m)
 
 
 def test_model_ref_resolution():
@@ -391,12 +392,19 @@ def test_removed_entry_points_raise_with_pointer(entry, args):
         stub(*args(g))
 
 
-def test_removed_entry_points_also_raise_via_core_namespace():
-    """`from repro.core import plan` still binds — but calling it fails
-    fast with the pointer, not silently re-planning the legacy way."""
-    from repro.core import plan as core_plan
-    with pytest.raises(RuntimeError, match="EXPERIMENTS.md"):
-        core_plan(toy_graph(), 2)
+def test_removed_entry_points_not_reexported_from_core():
+    """The planner shim re-exports nothing: repro.core no longer carries
+    the removed legacy callables, the plan types resolve to their
+    canonical home (repro.core.placement), and asking the shim for a
+    moved type points at it."""
+    import repro.core as core
+    for entry in ("plan", "plan_placement", "plan_summary_table"):
+        assert not hasattr(core, entry)
+        assert entry not in core.__all__
+    from repro.core.placement import PlacementPlan as canonical
+    assert core.PlacementPlan is canonical
+    with pytest.raises(AttributeError, match="repro.core.placement"):
+        legacy.PlacementPlan
 
 
 def test_front_door_emits_no_deprecation_warnings():
@@ -412,7 +420,8 @@ def test_front_door_emits_no_deprecation_warnings():
         plan(DeploymentSpec(strategy="placement", device_budget=3),
              graph=g)
         ElasticPlanner(g, "balanced_norefine").plan_for(2)
-        legacy.min_stages_no_spill(g)            # helper was kept
+        from repro.core.placement import min_stages_no_spill
+        min_stages_no_spill(g)                   # helper was kept (moved)
 
 
 # ---------------------------------------------------------------------------

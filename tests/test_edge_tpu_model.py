@@ -86,7 +86,7 @@ def test_table7_superlinear_speedup_real_models():
     deepest models whose first stage is MAC-heavy (ResNet152; the
     beyond-paper cost-balanced planner closes that gap — see
     benchmarks/segm_real.py)."""
-    from repro.core.planner import min_stages_no_spill
+    from repro.core.placement import min_stages_no_spill
     from repro.models.cnn import REAL_CNNS
     for name, floor in (("ResNet101", 1.0), ("ResNet152", 0.85),
                         ("DenseNet121", 1.0)):

@@ -123,7 +123,7 @@ def test_balanced_cost_strategy_reduces_stage_time():
     whose MAC intensity varies with depth (high-res early CNN layers)."""
     from conftest import api_plan as plan
     from repro.core import EdgeTPUModel
-    from repro.core.planner import min_stages_no_spill
+    from repro.core.placement import min_stages_no_spill
     from repro.models.cnn import REAL_CNNS
     g = REAL_CNNS["ResNet152"]().to_layer_graph()
     m = EdgeTPUModel(g)

@@ -4,7 +4,7 @@ import pytest
 
 from repro import configs
 from conftest import api_plan as plan
-from repro.core.planner import min_stages_to_fit
+from repro.core.placement import min_stages_to_fit
 from repro.core.segmentation import segment_sums
 from repro.models import api
 from repro.models.lm_graph import lm_layer_graph

@@ -170,7 +170,7 @@ def test_paper_claim_balanced_avoids_host_on_all_real_models():
     in all models' at the paper's TPU-count rule (§5.2.2: minimum count
     that ideally avoids host memory), and that count is close to the
     paper's Table 5 choice."""
-    from repro.core.planner import min_stages_no_spill
+    from repro.core.placement import min_stages_no_spill
     paper_n = {"ResNet50": 4, "ResNet101": 6, "InceptionV3": 4,
                "DenseNet169": 3, "ResNet152": 8}
     for name, expect in paper_n.items():
@@ -186,7 +186,7 @@ def test_paper_claim_balanced_avoids_host_on_all_real_models():
 def test_refinement_only_when_needed():
     """§6.2: refinement ran for only 5/15 real models; balanced_norefine
     must already avoid host memory for most."""
-    from repro.core.planner import min_stages_no_spill
+    from repro.core.placement import min_stages_no_spill
     clean = 0
     names = ("ResNet50", "ResNet101", "DenseNet121", "InceptionV3",
              "MobileNet")

@@ -87,6 +87,166 @@ def test_spmd_pipeline_unequal_stage_counts():
     assert "OK" in out
 
 
+def test_spmd_cnn_executor_matches_direct():
+    """CNN GraphModel lowered via apply_subset ranges onto a 4-stage mesh:
+    fused per-stage branches + ppermute hops must reproduce model.apply."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models.cnn import synthetic_cnn
+        from repro.api import DeploymentSpec
+        from repro.api import plan as api_plan
+        from repro.launch.pipeline_spmd import SpmdPipelineExecutor
+
+        model = synthetic_cnn(8, L=6, hw=32)
+        params = model.init(jax.random.PRNGKey(0))
+        pl = api_plan(DeploymentSpec(stages=4,
+                                     strategy="balanced_norefine"),
+                      graph=model.to_layer_graph())
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 32, 32, 3))
+        ref = model.apply(params, x)
+        with SpmdPipelineExecutor.for_model(model, params, pl,
+                                            n_microbatches=4,
+                                            batch_size=8) as ex:
+            got = ex(x)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 1e-4, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_spmd_cnn_2stage_indivisible_batch():
+    """2-stage mesh with a batch the microbatch count does not divide:
+    the pad-and-slice path must stay exact."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro.models.cnn import synthetic_cnn
+        from repro.api import DeploymentSpec
+        from repro.api import plan as api_plan
+        from repro.launch.pipeline_spmd import SpmdPipelineExecutor
+
+        model = synthetic_cnn(4, L=5, hw=16)
+        params = model.init(jax.random.PRNGKey(0))
+        pl = api_plan(DeploymentSpec(stages=2,
+                                     strategy="balanced_norefine"),
+                      graph=model.to_layer_graph())
+        x = jax.random.normal(jax.random.PRNGKey(1), (7, 16, 16, 3))
+        ref = model.apply(params, x)
+        with SpmdPipelineExecutor.for_model(model, params, pl,
+                                            n_microbatches=4) as ex:
+            outs, stats = ex.run_batch(list(x))
+        got = jnp.stack(outs)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 1e-4, err
+        assert stats["items_per_s"] > 0
+        print("OK", err)
+    """, n_devices=2)
+    assert "OK" in out
+
+
+def test_spmd_cnn_skip_dag_uneven_plan():
+    """Skip connection crossing every cut of an uneven (comp) plan: the
+    boundary value must ride through intermediate stages untouched."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro.models.layers import Builder
+        from repro.api import DeploymentSpec
+        from repro.api import plan as api_plan
+        from repro.launch.pipeline_spmd import (SpmdPipelineExecutor,
+                                                cnn_boundary_specs)
+
+        b = Builder("skipnet", (16, 16), 3)
+        s = b.act(b.conv(b.model.INPUT, 8, 3, name="c1"), name="c1_relu")
+        x = s
+        for i in range(6):
+            x = b.conv(x, 8, 3, name=f"mid{i}")
+        x = b.add([x, s], name="skip_add")
+        x = b.dense(b.gap(x, name="pool"), 10, name="head")
+        model = b.build()
+
+        params = model.init(jax.random.PRNGKey(0))
+        pl = api_plan(DeploymentSpec(stages=4, strategy="comp"),
+                      graph=model.to_layer_graph())
+        bounds, _ = cnn_boundary_specs(model, pl)
+        assert any("c1_relu" in dict(bs) for bs in bounds[2:]), bounds
+        xin = jax.random.normal(jax.random.PRNGKey(1), (7, 16, 16, 3))
+        ref = model.apply(params, xin)
+        with SpmdPipelineExecutor.for_model(model, params, pl,
+                                            n_microbatches=3,
+                                            overlap_streaming=False) as ex:
+            got = ex(xin)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 1e-4, err
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_spmd_lm_executor_pad_and_probes():
+    """LM executor front-to-back: token batch the microbatch count does
+    not divide, plus the predicted/achieved probe surface."""
+    out = run_with_devices("""
+        import jax, jax.numpy as jnp
+        from repro import configs
+        from repro.configs.common import concrete_batch
+        from repro.models import api, lm_graph
+        from repro.api import DeploymentSpec
+        from repro.api import plan as api_plan
+        from repro.launch.pipeline_spmd import SpmdPipelineExecutor
+
+        cfg = configs.get("qwen3-1.7b").smoke_config()
+        params = api.init(cfg, jax.random.PRNGKey(0))
+        batch = concrete_batch(cfg, 16, 7, kind="prefill")
+        g = lm_graph.lm_layer_graph(cfg, seq_len=16)
+        pl = api_plan(DeploymentSpec(stages=4,
+                                     strategy="balanced_norefine"), graph=g)
+        ref = api.forward(cfg, params, batch)
+        with SpmdPipelineExecutor.for_model(cfg, params, pl,
+                                            n_microbatches=4,
+                                            batch_size=7,
+                                            seq_len=16) as ex:
+            got = ex(batch["tokens"])
+            pred = ex.predicted_stage_times()
+            ach = ex.achieved_stage_times(reps=2, warmup=1)
+        err = float(jnp.max(jnp.abs(got - ref)))
+        assert err < 2e-2, err
+        assert len(pred) == len(ach) == 4
+        assert all(t > 0 for t in ach)
+        assert ex.fill_s > 0
+        print("OK", err)
+    """)
+    assert "OK" in out
+
+
+def test_stream_stage_weights_overlap_matches_serial():
+    """Overlapped and serial streaming must assemble identical global
+    arrays (the overlap only reorders transfers against compilation)."""
+    out = run_with_devices("""
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.launch.pipeline_spmd import stream_stage_weights
+
+        mesh = make_mesh((1, 4), ("data", "model"))
+        rng = np.random.default_rng(0)
+        stacked = {"w": rng.standard_normal((4, 64)).astype(np.float32),
+                   "b": rng.standard_normal((4, 8)).astype(np.float32)}
+        g1, _, r1 = stream_stage_weights(mesh, stacked, "model",
+                                         overlap=True)
+        g2, _, r2 = stream_stage_weights(mesh, stacked, "model",
+                                         overlap=False)
+        for k in stacked:
+            np.testing.assert_array_equal(np.asarray(g1[k]),
+                                          np.asarray(g2[k]))
+            assert g1[k].sharding.spec == g2[k].sharding.spec
+        assert r1.fill_s > 0 and r2.fill_s > 0
+        assert 0 <= r1.blocked_s <= r1.fill_s
+        assert 0 <= r2.blocked_s <= r2.fill_s
+        print("OK", r1, r2)
+    """)
+    assert "OK" in out
+
+
 def test_sharded_train_step_matches_single_device():
     out = run_with_devices("""
         import jax, jax.numpy as jnp
@@ -138,6 +298,79 @@ def test_mini_dryrun_cell_includes_roofline():
         print("OK")
     """, n_devices=512)
     assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# backend routing (in-process: the fallback decision never builds a mesh)
+# ---------------------------------------------------------------------------
+def _replicated_plan():
+    import dataclasses
+
+    from repro.api import DeploymentSpec
+    from repro.api import plan as api_plan
+    from repro.models.cnn import synthetic_cnn
+
+    pl = api_plan(DeploymentSpec(stages=2, strategy="balanced_norefine"),
+                  graph=synthetic_cnn(4, L=4, hw=16).to_layer_graph())
+    stages = [dataclasses.replace(pl.stages[0], replicas=2), pl.stages[1]]
+    return dataclasses.replace(pl, stages=stages)
+
+
+def test_spmd_backend_replicated_plan_falls_back_to_host(caplog):
+    """Front door: a replicated plan cannot map one-stage-one-mesh-slice;
+    executor(backend='spmd') must fall back to the host executor with a
+    logged notice, not die."""
+    import logging
+
+    from repro.api.deploy import Deployment
+    from repro.core.pipeline import PipelineExecutor
+
+    pl = _replicated_plan()
+    dep = Deployment.from_plan(pl, stage_fns=[lambda x: x, lambda x: x])
+    with caplog.at_level(logging.WARNING, logger="repro.api.deploy"):
+        ex = dep.executor(backend="spmd")
+    try:
+        assert isinstance(ex, PipelineExecutor)
+        assert any("falling back" in r.message for r in caplog.records)
+    finally:
+        ex.stop()
+
+
+def test_spmd_backend_requires_model_and_params():
+    from repro.api import DeploymentSpec
+    from repro.api import plan as api_plan
+    from repro.api.deploy import Deployment
+    from repro.models.cnn import synthetic_cnn
+
+    model = synthetic_cnn(4, L=4, hw=16)
+    pl = api_plan(DeploymentSpec(stages=2, strategy="balanced_norefine"),
+                  graph=model.to_layer_graph())
+    dep = Deployment.from_plan(pl)
+    with pytest.raises(ValueError, match="model"):
+        dep.executor(backend="spmd")
+    with pytest.raises(ValueError, match="'host' or 'spmd'"):
+        dep.executor(backend="tpu")
+
+
+def test_require_unreplicated_direct_raises():
+    """The low-level SPMD entry points keep the hard error (only the
+    Deployment front door downgrades it to a fallback)."""
+    from repro.launch.pipeline_spmd import (_require_unreplicated,
+                                            plan_supports_spmd)
+
+    pl = _replicated_plan()
+    assert not plan_supports_spmd(pl)
+    with pytest.raises(NotImplementedError, match="replicated"):
+        _require_unreplicated(pl)
+
+
+def test_spec_backend_field_round_trips():
+    from repro.api import DeploymentSpec
+
+    spec = DeploymentSpec(stages=2, backend="spmd")
+    assert DeploymentSpec.from_json(spec.to_json()) == spec
+    with pytest.raises(ValueError, match="backend"):
+        DeploymentSpec(stages=2, backend="mesh")
 
 
 def test_collectives_appear_in_sharded_hlo():
