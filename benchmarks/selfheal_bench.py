@@ -1,0 +1,376 @@
+"""Self-healing serving benchmark (ISSUE 8 acceptance).
+
+A live ``PipelinedModelServer`` runs a Table-1 model's balanced plan on a
+*synthetic device the analytic model badly mispredicts*: dense MACs are
+fast, but low-arithmetic-intensity MACs (MobileNet's depthwise convs) pay
+an 80x penalty the closed-form model knows nothing about — the class of
+off-chip/intensity cliffs BENCH_profile.json measures offline.  The
+self-healing controller must discover this *online*, from nothing but
+``snapshot()`` deltas, and re-cut the pipeline through guarded (canary +
+rollback) reconfigures:
+
+* **phase 1 — miscalibration**: serving starts on the analytic plan.
+  The controller's rolling live trace exposes the true per-stage shape;
+  drift triggers replans (front-door registry, live trace cost source)
+  until the committed cuts stop improving.  Recovery = true bottleneck
+  stage time of the analytic plan / the converged plan's.
+* **phase 2 — injected drift**: a sustained ``slowdown`` ChaosEvent
+  (the PR-6 chaos hooks) multiplies the service time of the widest
+  committed stage's depth range by ``SLOWDOWN_X`` mid-serving.  The
+  first canary attempt is sabotaged (the guarded builder returns
+  exploding stage fns once) to exercise the rollback + backoff path;
+  the retry commits and the loop converges again.  Recovery = true
+  bottleneck right after the slowdown / after reconvergence.
+
+"True" stage times are a static per-depth table (sleep-based stage fns),
+so both recovery ratios are exact properties of the committed cuts — not
+wall-clock measurements.  Functional acceptance in every mode (``--smoke``
+included): zero lost requests, zero misordered outputs across every
+hot-swap, >= 1 exercised rollback, >= 1 commit.  Full mode additionally
+asserts phase-2 recovery >= ``RECOVERY_BOUND`` and runs the overload
+scenario (deadline shedding + jittered retry hints under a burst), then
+writes ``BENCH_selfheal.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.selfheal_bench
+    PYTHONPATH=src python -m benchmarks.selfheal_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import threading
+import time
+from typing import Dict, List, Optional
+
+from repro.api import DeploymentSpec, deploy, plan
+from repro.models.cnn import REAL_CNNS
+from repro.profiling.live import LOW_INTENSITY_MACS_PER_BYTE
+from repro.runtime import ChaosEvent, ChaosMonkey, DriftPolicy
+from repro.serving import DeadlineExceeded, Overloaded
+
+from .common import emit
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+MODEL = "MobileNet"          # Table-1; depthwise convs = low-MAC cliffs
+STAGES = 4
+TRUE_SUM_S = 8e-3            # whole-model true service time (sleep scale)
+SLOWDOWN_X = 5.0             # phase-2 sustained slowdown factor
+RECOVERY_BOUND = 2.0         # phase-2 bottleneck recovery (full mode)
+
+# the synthetic truth: dense MACs at 4 TMAC/s, low-intensity MACs 80x
+# slower, weights over 30 GB/s.  The analytic model prices every MAC the
+# same, so it stacks MobileNet's cheap-looking depthwise depths into one
+# catastrophically slow stage.
+MAC_RATE = 4.0e12
+LOW_MAC_RATE = 0.05e12
+WEIGHT_RATE = 30e9
+
+
+def true_depth_times(g) -> List[float]:
+    """Static per-depth service times of the synthetic device, scaled so
+    the whole model sums to ``TRUE_SUM_S``."""
+    levels = g.levels()
+    macs = g.macs_per_depth()
+    wb = g.bytes_per_depth()
+    low = [sum(g.nodes[n].macs for n in lvl
+               if g.nodes[n].macs
+               <= LOW_INTENSITY_MACS_PER_BYTE * max(1, g.nodes[n].out_bytes))
+           for lvl in levels]
+    raw = [m / MAC_RATE + lo / LOW_MAC_RATE + b / WEIGHT_RATE
+           for m, lo, b in zip(macs, low, wb)]
+    scale = TRUE_SUM_S / sum(raw)
+    return [t * scale for t in raw]
+
+
+def true_stage_times(pl, true_s, factor) -> List[float]:
+    return [sum(true_s[d] * factor[d] for d in range(lo, hi + 1))
+            for (lo, hi) in pl.stage_depth_ranges]
+
+
+class Scenario:
+    """One self-healing serving run over the synthetic-truth device."""
+
+    def __init__(self, model: str = MODEL, stages: int = STAGES,
+                 window_reqs: int = 8, true_sum_s: float = TRUE_SUM_S):
+        self.g = REAL_CNNS[model]().to_layer_graph()
+        self.true_s = [t * (true_sum_s / TRUE_SUM_S)
+                       for t in true_depth_times(self.g)]
+        self.factor = [1.0] * self.g.depth       # live slowdown state
+        self.window_reqs = window_reqs
+        self.fail_next_canary = False            # sabotage flag (rollback)
+        self.exit_order: List[int] = []
+        self._tap_lock = threading.Lock()
+        self._next_id = 0
+        self.lost = 0
+        self.errors = 0
+
+    # -- stage functions ------------------------------------------------------
+    def builder(self, pl):
+        """Stage fns sleeping the *current* true time of their depth range
+        (``factor`` is read per call, so chaos slowdowns apply live).  The
+        last stage taps exit order for non-negative payloads — canaries
+        ride negative ids and stay out of the audit."""
+        if self.fail_next_canary:
+            self.fail_next_canary = False
+
+            def boom(x):
+                raise RuntimeError("injected canary fault")
+            return [boom] * pl.n_stages
+
+        fns = []
+        n = pl.n_stages
+        for si, (lo, hi) in enumerate(pl.stage_depth_ranges):
+            def fn(x, lo=lo, hi=hi, last=(si == n - 1)):
+                time.sleep(sum(self.true_s[d] * self.factor[d]
+                               for d in range(lo, hi + 1)))
+                if last and x >= 0:
+                    with self._tap_lock:
+                        self.exit_order.append(int(x))
+                return x
+            fns.append(fn)
+        return fns
+
+    # -- windows --------------------------------------------------------------
+    def run_window(self, server) -> None:
+        reqs = []
+        for _ in range(self.window_reqs):
+            reqs.append(server.submit(self._next_id))
+            self._next_id += 1
+        for r in reqs:
+            if not r.event.wait(30):
+                self.lost += 1
+            elif r.error is not None:
+                self.errors += 1
+
+    def drive(self, server, ctl, max_windows: int,
+              stable_after: int = 8) -> int:
+        """Window loop: serve a batch, then one synchronous control tick.
+        Stops early once no commit landed for ``stable_after`` windows
+        (and the loop is not mid-backoff).  Returns windows driven."""
+        last_commit_w = ctl.windows
+        for w in range(max_windows):
+            self.run_window(server)
+            n_commits = ctl.commits
+            ctl.tick()
+            if ctl.commits > n_commits:
+                last_commit_w = ctl.windows
+            if (ctl.windows - last_commit_w >= stable_after
+                    and ctl.state in ("steady", "degraded")):
+                break
+        return w + 1
+
+    def misordered(self) -> int:
+        return sum(1 for a, b in zip(self.exit_order, self.exit_order[1:])
+                   if b < a)
+
+
+def run_selfheal(window_reqs: int, p1_windows: int, p2_windows: int,
+                 true_sum_s: float, smoke: bool) -> Dict:
+    sc = Scenario(window_reqs=window_reqs, true_sum_s=true_sum_s)
+    spec = DeploymentSpec(stages=STAGES, strategy="balanced",
+                          max_batch=window_reqs, max_wait_s=0.002,
+                          drift_threshold=0.2, canary_requests=4)
+    policy = DriftPolicy(drift_threshold=0.2, hysteresis=2,
+                         cooldown_windows=1, ewma_alpha=0.5, live_alpha=0.5,
+                         canary_margin=1.2, max_canary_retries=4,
+                         backoff_base_windows=1, backoff_max_windows=4,
+                         canary_requests=4)
+    dep = deploy(spec, graph=sc.g, stage_fn_builder=sc.builder)
+    analytic_plan = dep.plan
+    p1_pre = max(true_stage_times(analytic_plan, sc.true_s, sc.factor))
+
+    with dep.serve() as server:
+        server.start()
+        # canaries are negative ids: they validate candidate executors
+        # only and never touch the exit-order audit
+        ctl = dep.self_heal([-1, -2, -3, -4], policy=policy)
+
+        # phase 1: analytic miscalibration
+        w1 = sc.drive(server, ctl, p1_windows)
+        p1_plan = server.plan
+        p1_post = max(true_stage_times(p1_plan, sc.true_s, sc.factor))
+        p1_commits = ctl.commits
+        print(f"phase 1: {w1} windows, {p1_commits} commits, cuts "
+              f"{analytic_plan.cuts} -> {p1_plan.cuts}, true bottleneck "
+              f"{p1_pre*1e3:.2f} -> {p1_post*1e3:.2f} ms "
+              f"({p1_pre/p1_post:.2f}x)")
+
+        # phase 2: sustained slowdown on the widest committed stage,
+        # injected through the chaos hooks; first canary sabotaged
+        widths = [hi - lo for lo, hi in p1_plan.stage_depth_ranges]
+        slow_stage = max(range(len(widths)), key=lambda i: widths[i])
+
+        def apply_slowdown(stage: int, f: float) -> None:
+            lo, hi = server.plan.stage_depth_ranges[stage]
+            for d in range(lo, hi + 1):
+                sc.factor[d] *= f
+
+        monkey = ChaosMonkey(lambda: server.executor,
+                             [ChaosEvent(at_s=0.0, kind="slowdown",
+                                         stage=slow_stage,
+                                         factor=SLOWDOWN_X)],
+                             slowdown_target=apply_slowdown)
+        monkey.start()
+        monkey.join(timeout=5)
+        assert monkey.applied and monkey.applied[0][1], \
+            "slowdown event did not apply"
+        sc.fail_next_canary = True               # exercise the rollback
+        p2_pre = max(true_stage_times(p1_plan, sc.true_s, sc.factor))
+
+        w2 = sc.drive(server, ctl, p2_windows)
+        p2_plan = server.plan
+        p2_post = max(true_stage_times(p2_plan, sc.true_s, sc.factor))
+        print(f"phase 2: {w2} windows, {ctl.commits - p1_commits} commits,"
+              f" {ctl.rollbacks} rollbacks, cuts {p1_plan.cuts} -> "
+              f"{p2_plan.cuts}, true bottleneck {p2_pre*1e3:.2f} -> "
+              f"{p2_post*1e3:.2f} ms ({p2_pre/p2_post:.2f}x)")
+
+    # functional acceptance: every mode
+    mis = sc.misordered()
+    assert sc.lost == 0, f"{sc.lost} lost requests"
+    assert sc.errors == 0, f"{sc.errors} request errors"
+    assert mis == 0, f"{mis} misordered outputs"
+    assert len(sc.exit_order) == sc._next_id, \
+        (len(sc.exit_order), sc._next_id)
+    assert ctl.commits >= 1, "no guarded reconfigure committed"
+    assert ctl.rollbacks >= 1, "rollback path never exercised"
+    kinds = [e["kind"] for e in ctl.events]
+    assert "rollback" in kinds and "commit" in kinds
+
+    recovery1 = p1_pre / p1_post
+    recovery2 = p2_pre / p2_post
+    if not smoke:
+        assert recovery2 >= RECOVERY_BOUND, \
+            (recovery2, p1_plan.cuts, p2_plan.cuts)
+        assert recovery1 >= 1.5, (recovery1, p1_plan.cuts)
+
+    return {
+        "model": MODEL, "stages": STAGES,
+        "requests": sc._next_id,
+        "windows": ctl.windows, "replans": ctl.replans,
+        "commits": ctl.commits, "rollbacks": ctl.rollbacks,
+        "final_state": ctl.state,
+        "events": [{k: v for k, v in e.items()} for e in ctl.events],
+        "phase1": {"analytic_cuts": list(analytic_plan.cuts),
+                   "converged_cuts": list(p1_plan.cuts),
+                   "true_bottleneck_pre_ms": round(p1_pre * 1e3, 3),
+                   "true_bottleneck_post_ms": round(p1_post * 1e3, 3),
+                   "recovery_x": round(recovery1, 2)},
+        "phase2": {"slow_stage": slow_stage, "slowdown_x": SLOWDOWN_X,
+                   "converged_cuts": list(p2_plan.cuts),
+                   "true_bottleneck_pre_ms": round(p2_pre * 1e3, 3),
+                   "true_bottleneck_post_ms": round(p2_post * 1e3, 3),
+                   "recovery_x": round(recovery2, 2)},
+        "acceptance": {"lost": sc.lost, "misordered": mis,
+                       "rollbacks_exercised": ctl.rollbacks,
+                       "recovery_bound": RECOVERY_BOUND,
+                       "bound_met": bool(recovery2 >= RECOVERY_BOUND)},
+    }
+
+
+def run_overload(n_requests: int = 60) -> Dict:
+    """Burst a deadline-shedding server far past its capacity: every
+    request must resolve (completed, ``Overloaded`` with a positive
+    jittered retry hint, or ``DeadlineExceeded``) — nothing hangs."""
+    g = REAL_CNNS[MODEL]().to_layer_graph()
+    # a small executor queue makes admission completion-paced: the pace
+    # EWMA primes after the first drains and the queue-delay estimate
+    # (in_flight x pace) starts exceeding later arrivals' budgets
+    spec = DeploymentSpec(stages=2, strategy="balanced",
+                          max_batch=8, max_wait_s=0.001, queue_size=4,
+                          deadline_ms=30.0, shed_policy="deadline")
+
+    def builder(pl):
+        def slow(x):
+            time.sleep(0.004)
+            return x
+
+        def fast(x):
+            return x
+        return [slow] + [fast] * (pl.n_stages - 1)
+
+    dep = deploy(spec, graph=g, stage_fn_builder=builder)
+    with dep.serve() as server:
+        server.start()
+        reqs = [server.submit(i) for i in range(n_requests)]
+        for r in reqs:
+            assert r.event.wait(30), f"request {r.rid} hung"
+        snap = server.snapshot()
+
+    completed = sum(1 for r in reqs if r.error is None)
+    shed = [r for r in reqs if isinstance(r.error, Overloaded)]
+    late = [r for r in reqs if isinstance(r.error, DeadlineExceeded)]
+    assert completed + len(shed) + len(late) == n_requests
+    assert completed >= 1, "burst starved completely"
+    assert shed, "shed policy never engaged under the burst"
+    assert all(r.error.retry_after_s > 0 for r in shed)
+    assert snap["shed"] == len(shed)
+    assert snap["deadline_exceeded"] == len(late)
+    hints = [r.error.retry_after_s for r in shed]
+    return {"submitted": n_requests, "completed": completed,
+            "shed": len(shed), "deadline_exceeded": len(late),
+            "retry_after_ms": {"min": round(min(hints) * 1e3, 2),
+                               "max": round(max(hints) * 1e3, 2)}}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--window-reqs", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: smaller true times + fewer "
+                         "windows, functional asserts only (loop "
+                         "mechanics: 0 lost / 0 misordered, >= 1 commit, "
+                         ">= 1 rollback), no BENCH_selfheal.json write")
+    args = ap.parse_args()
+    smoke = args.smoke
+
+    heal = run_selfheal(
+        window_reqs=4 if smoke else args.window_reqs,
+        p1_windows=20 if smoke else 48,
+        p2_windows=20 if smoke else 48,
+        true_sum_s=2e-3 if smoke else TRUE_SUM_S,
+        smoke=smoke)
+
+    summary = {
+        "note": "closed-loop self-healing serving: live snapshot deltas "
+                "-> rolling trace -> drift detection -> guarded (canary "
+                "+ rollback) replans on a synthetic device the analytic "
+                "model mispredicts, plus a sustained chaos slowdown; "
+                "see EXPERIMENTS.md §Self-healing serving",
+        "selfheal": heal,
+    }
+    if not smoke:
+        summary["overload"] = run_overload()
+        out = os.path.join(REPO_ROOT, "BENCH_selfheal.json")
+        with open(out, "w") as f:
+            json.dump(summary, f, indent=1)
+        print(f"wrote {out}")
+
+    p1, p2 = heal["phase1"], heal["phase2"]
+    rows = [
+        {"name": "selfheal_phase1_bottleneck",
+         "us_per_call": round(1e3 * p1["true_bottleneck_post_ms"], 1),
+         "derived": f"recovery={p1['recovery_x']}x,"
+                    f"commits={heal['commits']}"},
+        {"name": "selfheal_phase2_bottleneck",
+         "us_per_call": round(1e3 * p2["true_bottleneck_post_ms"], 1),
+         "derived": f"recovery={p2['recovery_x']}x,"
+                    f"rollbacks={heal['rollbacks']}"},
+    ]
+    if not smoke:
+        ov = summary["overload"]
+        rows.append({"name": "selfheal_overload",
+                     "us_per_call": ov["submitted"],
+                     "derived": f"completed={ov['completed']},"
+                                f"shed={ov['shed']},"
+                                f"late={ov['deadline_exceeded']}"})
+    emit("selfheal_bench", rows, ["name", "us_per_call", "derived"])
+    print(f"phase1 {p1['recovery_x']}x, phase2 {p2['recovery_x']}x, "
+          f"{heal['commits']} commits, {heal['rollbacks']} rollbacks, "
+          f"0 lost, 0 misordered")
+
+
+if __name__ == "__main__":
+    main()

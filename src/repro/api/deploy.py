@@ -51,6 +51,7 @@ def plan(spec: DeploymentSpec, *,
          tpu_model: Optional[EdgeTPUModel] = None,
          reporter: Optional[MemoryReporter] = None,
          base_spec: Optional[EdgeTPUSpec] = None,
+         cost_source: Optional[Any] = None,
          attach_report: bool = True) -> PlacementPlan:
     """Turn a declarative spec into a placement plan.
 
@@ -58,10 +59,13 @@ def plan(spec: DeploymentSpec, *,
     you already built); ``tpu_model``/``reporter``/``base_spec`` override
     the default analytical device model, the refinement memory reporter,
     and the per-device constants — runtime objects that cannot live in the
-    JSON spec.  Every registered strategy is reachable; plans are
-    bit-identical to the legacy ``repro.core.planner`` entry points for
-    the same inputs (asserted over all 21 Table-1 models in
-    tests/test_deploy_api.py)."""
+    JSON spec.  ``cost_source`` overrides ``spec.cost_source`` resolution
+    with a live :class:`~repro.profiling.sources.CostSource` instance —
+    the self-healing loop replans against its in-memory live trace this
+    way (there is no file to point a ``trace:<path>`` ref at).  Every
+    registered strategy is reachable; plans are bit-identical to the
+    legacy ``repro.core.planner`` entry points for the same inputs
+    (asserted over all 21 Table-1 models in tests/test_deploy_api.py)."""
     if graph is None:
         if spec.model is None:
             raise ValueError("spec has no model ref; pass plan(spec, "
@@ -77,7 +81,9 @@ def plan(spec: DeploymentSpec, *,
                          f"topology; set DeploymentSpec.topology or "
                          f"device_budget")
     ctx = PlanContext(spec=spec, graph=graph, tpu_model=tpu_model,
-                      reporter=reporter, base_spec=base_spec)
+                      reporter=reporter, base_spec=base_spec,
+                      _cost_source=cost_source,
+                      _cost_source_resolved=cost_source is not None)
     pl = strategy.plan(ctx)
     if attach_report:
         # price the report with the model the planner itself used (the
@@ -85,8 +91,10 @@ def plan(spec: DeploymentSpec, *,
         # the plan; ctx.model() reuses the context's cached instance.
         # Trace-backed cost sources also contribute the measured stage
         # times and the modeled-vs-trace error column.
+        src_tag = (spec.cost_source if cost_source is None
+                   else f"live:{getattr(cost_source, 'name', 'object')}")
         pl.report = PlanReport.from_plan(pl, base_model=ctx.model(),
-                                         cost_source=spec.cost_source,
+                                         cost_source=src_tag,
                                          trace=ctx.trace())
     return pl
 
@@ -274,12 +282,43 @@ class Deployment:
             microbatch=self.spec.microbatch,
             microbatch_wait_s=self.spec.microbatch_wait_s,
             hedge_after=self.spec.hedge_after,
-            stage_loss_retries=self.spec.stage_loss_retries)
+            stage_loss_retries=self.spec.stage_loss_retries,
+            deadline_s=(None if self.spec.deadline_ms is None
+                        else self.spec.deadline_ms / 1e3),
+            shed_policy=self.spec.shed_policy)
         self._server = srv
         if start:
             srv.executor.start()
             srv.start()
         return srv
+
+    def self_heal(self, canary_payloads: Sequence[Any], *,
+                  policy=None, poll_interval_s: float = 0.25):
+        """A :class:`~repro.runtime.selfheal.SelfHealingController` wired
+        to this deployment's live server: live telemetry -> rolling trace
+        -> drift detection -> guarded (canary + rollback) replans through
+        the front-door registry.  Needs a live :meth:`serve` server and a
+        ``stage_fn_builder`` (replans change the stage shapes).  The
+        spec's ``drift_threshold``/``canary_requests`` seed the policy
+        unless an explicit ``policy`` is given.  Caller owns the
+        controller's lifecycle (use as a context manager)."""
+        srv = self._live_server()
+        if srv is None:
+            raise RuntimeError("self_heal needs a live server; call "
+                               "serve() first")
+        if self._builder is None:
+            raise ValueError("self_heal needs stage_fn_builder (guarded "
+                             "replans rebuild the stage functions)")
+        from ..runtime.selfheal import DriftPolicy, SelfHealingController
+        if policy is None:
+            policy = DriftPolicy(
+                drift_threshold=self.spec.drift_threshold or 0.5,
+                canary_requests=self.spec.canary_requests)
+        return SelfHealingController(
+            srv, self.spec, self.graph, self._builder,
+            policy=policy, canary_payloads=canary_payloads,
+            poll_interval_s=poll_interval_s,
+            tpu_model=self._tpu_model, base_spec=self._base_spec)
 
     def reconfigure(self, spec: Optional[DeploymentSpec] = None, *,
                     stages: Optional[int] = None,

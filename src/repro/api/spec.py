@@ -94,6 +94,21 @@ class DeploymentSpec:
     — the default — disables hedging); ``stage_loss_retries`` — how many
     times a request that failed with ``StageLost`` (a whole stage died)
     is re-admitted, so it survives a degraded-mode replan (0 disables).
+
+    Overload / self-healing policy (see EXPERIMENTS.md §Self-healing
+    serving): ``deadline_ms`` — default per-request latency budget; a
+    request past it completes with
+    :class:`~repro.serving.server.DeadlineExceeded` at admission or merge
+    exit instead of waiting unbounded (``None`` disables).  ``shed_policy``
+    — ``"deadline"`` enables admission control: requests whose estimated
+    queue delay outlives the deadline budget are shed with
+    :class:`~repro.serving.server.Overloaded` + a jittered-backoff
+    ``retry_after_s`` hint (``"none"`` disables).  ``drift_threshold`` —
+    relative modeled-vs-observed per-stage time drift past which the
+    self-healing controller (:class:`~repro.runtime.selfheal
+    .SelfHealingController`) replans from live telemetry (0 disables the
+    loop).  ``canary_requests`` — held-aside requests used to validate a
+    candidate executor before a guarded reconfigure commits.
     """
 
     model: Optional[str] = None
@@ -118,6 +133,11 @@ class DeploymentSpec:
     # fault policy
     hedge_after: Optional[float] = None
     stage_loss_retries: int = 0
+    # overload / self-healing policy
+    deadline_ms: Optional[float] = None
+    shed_policy: str = "none"
+    drift_threshold: float = 0.0
+    canary_requests: int = 4
 
     def __post_init__(self):
         if not self.strategy:
@@ -142,6 +162,22 @@ class DeploymentSpec:
         if self.backend not in ("host", "spmd"):
             raise ValueError(f"backend must be 'host' or 'spmd', "
                              f"got {self.backend!r}")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0 (or None), "
+                             f"got {self.deadline_ms}")
+        if self.shed_policy not in ("none", "deadline"):
+            raise ValueError(f"shed_policy must be 'none' or 'deadline', "
+                             f"got {self.shed_policy!r}")
+        if self.shed_policy == "deadline" and self.deadline_ms is None:
+            raise ValueError("shed_policy='deadline' needs deadline_ms "
+                             "(the budget the queue-delay estimate is "
+                             "compared against)")
+        if self.drift_threshold < 0:
+            raise ValueError(f"drift_threshold must be >= 0, "
+                             f"got {self.drift_threshold}")
+        if self.canary_requests < 1:
+            raise ValueError(f"canary_requests must be >= 1, "
+                             f"got {self.canary_requests}")
         from ..profiling.sources import parse_cost_source
         parse_cost_source(self.cost_source)   # raises on malformed refs
 

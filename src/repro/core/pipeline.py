@@ -275,6 +275,10 @@ class PipelineExecutor:
         # one busy slot per (stage, replica): each written by one thread
         # only, never reset — read intervals via busy_snapshot() deltas
         self._busy = [[0.0] * r for r in self.replicas]
+        # items successfully applied per (stage, replica), same single-
+        # writer discipline: busy/items deltas = observed per-item stage
+        # time, the live-telemetry signal the self-healing loop refits from
+        self._items = [[0] * r for r in self.replicas]
         # micro-batching amortization counters (calls / items): one slot
         # per (stage, replica) like _busy, so concurrent replica workers
         # never lose updates; monotonic
@@ -493,6 +497,7 @@ class PipelineExecutor:
             t0 = time.perf_counter()
             out = fn(payload)
             self._busy[i][slot] += time.perf_counter() - t0
+            self._items[i][slot] += 1
             self._consec_fails[i][slot] = 0
         except ReplicaFailure:
             raise
@@ -538,6 +543,7 @@ class PipelineExecutor:
         if parts is None:
             return [self._apply(i, slot, env) for env in bucket]
         self._busy[i][slot] += dt
+        self._items[i][slot] += len(bucket)
         self._mb_calls[i][slot] += 1
         self._mb_items[i][slot] += len(bucket)
         return [(seq, part) for (seq, _), part in zip(bucket, parts)]
@@ -913,6 +919,14 @@ class PipelineExecutor:
         """Monotonic per-stage busy seconds (summed over replicas).
         Measure an interval as the delta of two snapshots."""
         return [sum(slots) for slots in self._busy]
+
+    def items_snapshot(self) -> List[int]:
+        """Monotonic per-stage successfully-applied item counts (summed
+        over replicas).  ``busy_snapshot`` delta / ``items_snapshot``
+        delta = the interval's observed per-item stage time — the live
+        telemetry the self-healing control loop feeds back into the
+        planner's cost model (``runtime.selfheal``)."""
+        return [sum(slots) for slots in self._items]
 
     def microbatch_snapshot(self) -> Dict[str, List[int]]:
         """Monotonic per-stage micro-batching counters (summed over

@@ -97,7 +97,11 @@ def spec_from_args(args) -> DeploymentSpec:
         cost_source=args.cost_source,
         hedge_after=(getattr(args, "hedge_after_ms", 0.0) / 1e3
                      or None),
-        stage_loss_retries=getattr(args, "stage_loss_retries", 0))
+        stage_loss_retries=getattr(args, "stage_loss_retries", 0),
+        deadline_ms=(getattr(args, "deadline_ms", 0.0) or None),
+        shed_policy=getattr(args, "shed_policy", "none"),
+        drift_threshold=getattr(args, "drift_threshold", 0.0),
+        canary_requests=getattr(args, "canary_requests", 4))
     if args.device_budget:
         # joint cuts+replicas search: a bottleneck stage may get k devices
         # (round-robin fan-out in the executor, order-restoring fan-in)
@@ -142,6 +146,25 @@ def main() -> None:
                     help="re-admit a request that crossed a dead stage "
                          "this many times (survives degraded-mode "
                          "replans; 0 = fail fast)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request latency budget: a request past it "
+                         "completes with DeadlineExceeded at admission or "
+                         "merge exit instead of waiting unbounded (0 = "
+                         "off)")
+    ap.add_argument("--shed-policy", default="none",
+                    choices=["none", "deadline"],
+                    help="'deadline': shed requests at admission when the "
+                         "queue-delay estimate (in_flight x service pace) "
+                         "would outlive their deadline budget; callers "
+                         "get Overloaded + a jittered retry_after_s hint")
+    ap.add_argument("--drift-threshold", type=float, default=0.0,
+                    help="relative modeled-vs-observed per-stage drift "
+                         "past which the self-healing controller replans "
+                         "from live telemetry (0 = loop off; see "
+                         "EXPERIMENTS.md §Self-healing serving)")
+    ap.add_argument("--canary-requests", type=int, default=4,
+                    help="held-aside requests validating a candidate "
+                         "executor before a guarded reconfigure commits")
     ap.add_argument("--cost-source", default="analytic",
                     help="where the planner's per-depth costs come from: "
                          "'analytic' (closed-form device model), "
@@ -215,6 +238,11 @@ def main() -> None:
     with dep.serve() as server:
         server.serve_batch(reqs[:1])           # warmup (jit)
         server.start()                          # admission loop
+        healer = None
+        if args.drift_threshold > 0:
+            # closed-loop calibration: live telemetry -> rolling trace ->
+            # guarded (canary + rollback) replans; see runtime.selfheal
+            healer = dep.self_heal(reqs[:args.canary_requests]).start()
         server.snapshot()                       # reset the delta window
         t0 = time.perf_counter()
         pending = [server.submit(r) for r in reqs]
@@ -233,6 +261,12 @@ def main() -> None:
               f"{lat['p95_s']*1e3:.1f} / {lat['p99_s']*1e3:.1f}")
         print(f"stage busy (s): {[round(b,4) for b in busy]}")
         print(f"balance (mean/max): {metrics['balance']:.3f}")
+        if healer is not None:
+            healer.stop()
+            print(f"self-heal: {healer.windows} windows, "
+                  f"{healer.commits} commits, "
+                  f"{healer.rollbacks} rollbacks "
+                  f"(state={healer.state})")
 
         # reference check
         ref = api.forward(cfg, params, {"tokens": reqs[0]},

@@ -14,12 +14,17 @@ for the reproduction:
   through, selected per-deployment via ``DeploymentSpec.cost_source``
   (``"analytic"`` / ``"trace:<path>"`` / ``"calibrated:<path>"``);
 * :func:`fit_trace` — least-squares calibration of the analytic model's
-  per-device coefficients against a trace.
+  per-device coefficients against a trace;
+* :class:`LiveTraceBuilder` — the online variant: fold serving telemetry
+  (observed per-stage per-item times) into a rolling partial trace and a
+  continuously-refit calibrated source, the feedback half of the
+  self-healing loop (:mod:`repro.runtime.selfheal`).
 
 See EXPERIMENTS.md §Profiling & calibration for the capture -> calibrate
 -> plan workflow.
 """
 from .calibrate import CalibrationFit, cliff_bytes_per_depth, fit_trace
+from .live import LiveTraceBuilder
 from .sources import (AnalyticCostSource, CalibratedCostSource, CostSource,
                       DepthCosts, TraceCostSource, parse_cost_source,
                       resolve_cost_source)
@@ -40,4 +45,5 @@ __all__ = [
     "CostSource", "DepthCosts", "AnalyticCostSource", "TraceCostSource",
     "CalibratedCostSource", "parse_cost_source", "resolve_cost_source",
     "CalibrationFit", "fit_trace", "cliff_bytes_per_depth",
+    "LiveTraceBuilder",
 ]

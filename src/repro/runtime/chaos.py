@@ -33,19 +33,27 @@ from ..core.pipeline import PipelineExecutor
 @dataclasses.dataclass(frozen=True)
 class ChaosEvent:
     """One scheduled fault: at ``at_s`` seconds into the run, kill
-    ``stage``'s replica ``slot`` (``kind="kill_replica"``) or the whole
-    stage (``kind="kill_stage"``, slot ignored)."""
+    ``stage``'s replica ``slot`` (``kind="kill_replica"``), the whole
+    stage (``kind="kill_stage"``, slot ignored), or apply a *sustained
+    slowdown* — multiply the stage's service time by ``factor`` from this
+    point on (``kind="slowdown"``; the drift scenario the self-healing
+    loop reacts to, delivered through the monkey's ``slowdown_target``
+    hook since stage-fn timing lives in the harness, not the executor)."""
 
     at_s: float
     kind: str
     stage: int
     slot: int = 0
+    factor: float = 1.0
 
     def __post_init__(self):
-        if self.kind not in ("kill_replica", "kill_stage"):
+        if self.kind not in ("kill_replica", "kill_stage", "slowdown"):
             raise ValueError(f"unknown chaos kind: {self.kind!r}")
         if self.at_s < 0:
             raise ValueError(f"at_s must be >= 0, got {self.at_s}")
+        if self.kind == "slowdown" and self.factor <= 0:
+            raise ValueError(f"slowdown factor must be > 0, "
+                             f"got {self.factor}")
 
 
 def replica_kill_schedule(replicas: Sequence[int], n_kills: int,
@@ -92,9 +100,14 @@ class ChaosMonkey:
     recorded as skipped, not raised."""
 
     def __init__(self, executor_getter: Callable[[], PipelineExecutor],
-                 events: Sequence[ChaosEvent]):
+                 events: Sequence[ChaosEvent],
+                 slowdown_target: Optional[Callable[[int, float],
+                                                    None]] = None):
         self.get = executor_getter
         self.events = sorted(events, key=lambda e: e.at_s)
+        # ``slowdown`` events land here (stage, factor) — the harness owns
+        # stage-fn timing, so it decides what "this stage got slower" means
+        self.slowdown_target = slowdown_target
         self.applied: List[Tuple[ChaosEvent, bool]] = []
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -121,11 +134,17 @@ class ChaosMonkey:
                 continue
             ok = True
             try:
-                ex = self.get()
-                if ev.kind == "kill_stage":
-                    ex.kill_stage(ev.stage)
+                if ev.kind == "slowdown":
+                    if self.slowdown_target is None:
+                        ok = False
+                    else:
+                        self.slowdown_target(ev.stage, ev.factor)
                 else:
-                    ex.kill_replica(ev.stage, ev.slot)
+                    ex = self.get()
+                    if ev.kind == "kill_stage":
+                        ex.kill_stage(ev.stage)
+                    else:
+                        ex.kill_replica(ev.stage, ev.slot)
             except (RuntimeError, ValueError, IndexError):
                 ok = False
             self.applied.append((ev, ok))

@@ -41,6 +41,21 @@ fed under load.
   hedged dispatch on replicated stages.  Stage-lost events fan out to
   listeners registered via :meth:`add_stage_lost_listener` (re-wired
   automatically across reconfigure swaps).
+
+  Overload protection (ISSUE 8): per-request **deadlines** — a request
+  carries an absolute deadline (``deadline_ms`` server default, or per
+  ``submit``); one that is already past due at admission, or whose result
+  exits the merge after its deadline, is completed with
+  :class:`DeadlineExceeded` instead of waiting (or returning) unbounded —
+  a request is *never* silently stuck.  **Admission control** — with
+  ``shed_policy="deadline"`` the admission loop estimates queue delay as
+  ``executor.in_flight x pace`` (pace = EWMA of inter-completion gaps
+  while the pipeline is saturated) and *sheds* a request whose estimated
+  completion would outlive its deadline, completing it immediately with
+  :class:`Overloaded` carrying a ``retry_after_s`` hint — jittered
+  exponential backoff over consecutive sheds (seeded: deterministic in
+  tests), reset on the first successful admission.  Shed/deadline counts
+  ride the same monotonic stats stream (:meth:`snapshot` deltas).
 """
 from __future__ import annotations
 
@@ -48,6 +63,7 @@ import dataclasses
 import itertools
 import math
 import queue
+import random
 import threading
 import time
 from collections import deque
@@ -61,6 +77,38 @@ from ..core.placement import PlacementPlan
 _RID = itertools.count()
 
 
+class DeadlineExceeded(RuntimeError):
+    """Completion error for a request that outlived its deadline — either
+    already past due at admission (it sat in the batcher too long) or its
+    result exited the merge after the deadline.  Either way the request
+    *completes* (event set, error recorded); it is never silently stuck."""
+
+    def __init__(self, rid: int, overshoot_s: float, where: str):
+        super().__init__(f"request {rid} exceeded its deadline by "
+                         f"{overshoot_s * 1e3:.1f} ms ({where})")
+        self.rid = rid
+        self.overshoot_s = overshoot_s
+        self.where = where
+
+
+class Overloaded(RuntimeError):
+    """Completion error for a request shed at admission: the estimated
+    queue delay would outlive its deadline budget.  Carries
+    ``retry_after_s`` — a jittered exponential-backoff hint that grows
+    with consecutive sheds, so synchronized callers spread their
+    retries instead of stampeding the recovering server."""
+
+    def __init__(self, rid: int, retry_after_s: float,
+                 queue_delay_est_s: float):
+        super().__init__(f"request {rid} shed at admission "
+                         f"(queue-delay estimate "
+                         f"{queue_delay_est_s * 1e3:.1f} ms past deadline); "
+                         f"retry after {retry_after_s * 1e3:.0f} ms")
+        self.rid = rid
+        self.retry_after_s = retry_after_s
+        self.queue_delay_est_s = queue_delay_est_s
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -70,6 +118,7 @@ class Request:
     error: Optional[BaseException] = None
     retries: int = 0          # stage-loss re-admissions of this request
     t_done: Optional[float] = None
+    deadline_s: Optional[float] = None    # absolute (perf_counter) deadline
     event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
 
@@ -84,9 +133,12 @@ class MicroBatcher:
         self.max_wait_s = max_wait_s
         self.q: "queue.Queue[Request]" = queue.Queue()
 
-    def submit(self, payload: Any, rid: Optional[int] = None) -> Request:
+    def submit(self, payload: Any, rid: Optional[int] = None,
+               deadline_s: Optional[float] = None) -> Request:
         req = Request(rid=rid if rid is not None else next(_RID),
                       payload=payload)
+        if deadline_s is not None:
+            req.deadline_s = req.t_submit + deadline_s
         self.q.put(req)
         return req
 
@@ -147,10 +199,22 @@ class PipelinedModelServer:
                  microbatch_wait_s: float = 0.0,
                  hedge_after: Optional[float] = None,
                  stage_loss_retries: int = 0,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096,
+                 deadline_s: Optional[float] = None,
+                 shed_policy: str = "none",
+                 backoff_base_s: float = 0.05,
+                 backoff_max_s: float = 2.0,
+                 backoff_seed: int = 0):
         assert len(stage_fns) == plan.n_stages
         if stage_loss_retries < 0:
             raise ValueError("stage_loss_retries must be >= 0")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 (or None)")
+        if shed_policy not in ("none", "deadline"):
+            raise ValueError(f"unknown shed_policy {shed_policy!r} "
+                             f"(expected 'none' or 'deadline')")
+        if backoff_base_s <= 0 or backoff_max_s < backoff_base_s:
+            raise ValueError("need 0 < backoff_base_s <= backoff_max_s")
         self.plan = plan
         self.stage_fns = list(stage_fns)
         self.queue_size = queue_size
@@ -158,6 +222,18 @@ class PipelinedModelServer:
         self.microbatch_wait_s = microbatch_wait_s
         self.hedge_after = hedge_after
         self.stage_loss_retries = stage_loss_retries
+        self.deadline_s = deadline_s
+        self.shed_policy = shed_policy
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        # service pace: EWMA of inter-completion gaps observed while the
+        # pipeline still holds work (saturated => gap == service pace);
+        # queue-delay estimate for admission control = in_flight * pace
+        self._pace_ewma: Optional[float] = None
+        self._pace_alpha = 0.2
+        self._last_done_t: Optional[float] = None
+        self._consec_sheds = 0
+        self._backoff_rng = random.Random(backoff_seed)
         self._stage_lost_listeners: List[Callable[[int], None]] = []
         self.executor = self._make_executor(plan, self.stage_fns)
         self.batcher = MicroBatcher(max_batch, max_wait_s)
@@ -168,13 +244,17 @@ class PipelinedModelServer:
         # monotonic counters; read intervals via snapshot() deltas
         self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
                                       "completed": 0, "failed": 0,
-                                      "retried": 0}
+                                      "retried": 0, "shed": 0,
+                                      "deadline_exceeded": 0}
         self._stats_lock = threading.Lock()
         self._recent_lat: deque = deque(maxlen=latency_window)
         self._window_lat: List[float] = []
         self._snap_state = {"t": time.perf_counter(),
                             "busy": self.executor.busy_snapshot(),
-                            "requests": 0, "failed": 0, "retried": 0}
+                            "items": self.executor.items_snapshot(),
+                            "requests": 0, "completed": 0, "failed": 0,
+                            "retried": 0, "shed": 0,
+                            "deadline_exceeded": 0}
 
     def _make_executor(self, plan: PlacementPlan,
                        stage_fns: Sequence[Callable[[Any], Any]]
@@ -260,15 +340,44 @@ class PipelinedModelServer:
             name=f"serve-{self.plan.graph_name}-admit")
         self._thread.start()
 
-    def submit(self, payload: Any) -> Request:
-        return self.batcher.submit(payload)
+    def submit(self, payload: Any,
+               deadline_s: Optional[float] = None) -> Request:
+        """Enqueue a request.  ``deadline_s`` is a relative budget from
+        submit time (falls back to the server default); a request past its
+        deadline completes with :class:`DeadlineExceeded`, never hangs."""
+        budget = deadline_s if deadline_s is not None else self.deadline_s
+        return self.batcher.submit(payload, deadline_s=budget)
+
+    def _retry_after_s(self) -> float:
+        """Jittered exponential backoff hint over consecutive sheds.
+        Seeded rng => deterministic sequences in tests."""
+        base = min(self.backoff_max_s,
+                   self.backoff_base_s * (2.0 ** self._consec_sheds))
+        return base * (1.0 + 0.25 * self._backoff_rng.random())
 
     def _admit(self, req: Request) -> None:
+        now = time.perf_counter()
+        if req.deadline_s is not None:
+            if now >= req.deadline_s:
+                # dead on arrival (sat in the batcher past its budget)
+                self._finish(req, None, DeadlineExceeded(
+                    req.rid, now - req.deadline_s, "admission"))
+                return
+            if (self.shed_policy == "deadline"
+                    and self._pace_ewma is not None):
+                est = self.executor.in_flight * self._pace_ewma
+                if now + est > req.deadline_s:
+                    retry_after = self._retry_after_s()
+                    self._consec_sheds += 1
+                    self._finish(req, None, Overloaded(
+                        req.rid, retry_after, est))
+                    return
         try:
             fut = self.executor.submit(req.payload)
         except RuntimeError as e:       # executor stopping under our feet
             self._finish(req, None, PipelineStopped(str(e)))
             return
+        self._consec_sheds = 0          # admitted: reset backoff ladder
         fut.add_done_callback(
             lambda f, r=req: self._on_done(r, f))
 
@@ -290,6 +399,13 @@ class PipelinedModelServer:
                 return
             self._finish(req, None, e)
             return
+        if (req.deadline_s is not None
+                and time.perf_counter() > req.deadline_s):
+            # result arrived, but past due: complete with the deadline
+            # error so the caller's wait is bounded and honest
+            self._finish(req, None, DeadlineExceeded(
+                req.rid, time.perf_counter() - req.deadline_s, "merge"))
+            return
         self._finish(req, result, None)
 
     def _finish(self, req: Request, result: Any,
@@ -302,10 +418,28 @@ class PipelinedModelServer:
             self.stats["requests"] += 1
             if error is None:
                 self.stats["completed"] += 1
+                # pace signal: while the pipeline still holds work the gap
+                # between completions is the service pace (saturated); an
+                # idle-gap sample would poison the queue-delay estimate
+                if (self._last_done_t is not None
+                        and self.executor.in_flight > 0):
+                    gap = req.t_done - self._last_done_t
+                    if gap > 0:
+                        self._pace_ewma = (
+                            gap if self._pace_ewma is None else
+                            self._pace_alpha * gap
+                            + (1 - self._pace_alpha) * self._pace_ewma)
+                self._last_done_t = req.t_done
             else:
                 self.stats["failed"] += 1
-            self._recent_lat.append(lat)
-            self._window_lat.append(lat)
+                if isinstance(error, Overloaded):
+                    self.stats["shed"] += 1
+                elif isinstance(error, DeadlineExceeded):
+                    self.stats["deadline_exceeded"] += 1
+            if not isinstance(error, (Overloaded, DeadlineExceeded)):
+                # shed/expired latencies are not service latencies
+                self._recent_lat.append(lat)
+                self._window_lat.append(lat)
         req.event.set()
 
     # -- accounting ----------------------------------------------------------
@@ -324,26 +458,52 @@ class PipelinedModelServer:
     def _snapshot_locked(self) -> Dict[str, Any]:
         now = time.perf_counter()
         busy = self.executor.busy_snapshot()
+        items = self.executor.items_snapshot()
         with self._stats_lock:
             window = self._window_lat
             self._window_lat = []
             requests = self.stats["requests"]
+            completed = self.stats["completed"]
             failed = self.stats["failed"]
             retried = self.stats["retried"]
+            shed = self.stats["shed"]
+            deadline_exceeded = self.stats["deadline_exceeded"]
         prev = self._snap_state
         dt = now - prev["t"]
         done = requests - prev["requests"]
+        busy_d = [b - a for a, b in zip(prev["busy"], busy)]
+        items_d = [b - a for a, b in
+                   zip(prev.get("items", items), items)]
+        # every field below is neutral (0 / 0.0 / empty-sample record) on
+        # an empty delta window — a zero-completion interval must never
+        # crash or emit NaN (latency_percentiles handles the empty sample)
         snap = {
             "dt_s": dt,
             "requests": done,
+            "completed": completed - prev.get("completed", 0),
             "failed": failed - prev["failed"],
             "retried": retried - prev.get("retried", 0),
+            "shed": shed - prev.get("shed", 0),
+            "deadline_exceeded": (deadline_exceeded
+                                  - prev.get("deadline_exceeded", 0)),
             "throughput_rps": (done / dt) if dt > 0 else 0.0,
-            "stage_busy_s": [b - a for a, b in zip(prev["busy"], busy)],
+            "stage_busy_s": busy_d,
+            "stage_items": items_d,
+            # per-item observed stage time — the live-telemetry signal the
+            # self-healing loop (runtime.selfheal) refits the cost model
+            # from; 0.0 (not NaN) for stages that applied nothing
+            "stage_time_per_req_s": [
+                (b / n) if n > 0 else 0.0
+                for b, n in zip(busy_d, items_d)],
+            "queue_depth": self.batcher.q.qsize(),
+            "in_flight": self.executor.in_flight,
             "latency": latency_percentiles(window),
         }
-        self._snap_state = {"t": now, "busy": busy, "requests": requests,
-                            "failed": failed, "retried": retried}
+        self._snap_state = {"t": now, "busy": busy, "items": items,
+                            "requests": requests, "completed": completed,
+                            "failed": failed, "retried": retried,
+                            "shed": shed,
+                            "deadline_exceeded": deadline_exceeded}
         return snap
 
     # -- elastic hook --------------------------------------------------------
@@ -365,8 +525,12 @@ class PipelinedModelServer:
             self.stage_fns = list(stage_fns)
             self.executor = self._make_executor(plan, self.stage_fns)
             self.executor.start()
-            # rebase busy deltas onto the new executor's counters
+            # rebase busy/items deltas onto the new executor's counters
             self._snap_state["busy"] = self.executor.busy_snapshot()
+            self._snap_state["items"] = self.executor.items_snapshot()
+            # the new plan invalidates the old service-pace signal
+            self._pace_ewma = None
+            self._last_done_t = None
 
     @property
     def stopped(self) -> bool:

@@ -1,0 +1,437 @@
+"""Self-healing serving: drift detection, guarded replans, overload
+protection (ISSUE 8).  Controller tests drive ``tick()`` synchronously
+against a scripted fake server, so every decision is deterministic."""
+import random
+import time
+
+import pytest
+
+from conftest import api_plan as plan
+# the package re-exports deploy() under the submodule's name — go through
+# importlib so monkeypatch targets the module, not the function
+import importlib
+deploy_mod = importlib.import_module("repro.api.deploy")
+from repro.core.pipeline import PipelineExecutor, simulated_stage
+from repro.core.placement import PlacementPlan
+from repro.models.cnn import synthetic_cnn
+from repro.profiling import LiveTraceBuilder, ProfileTrace
+from repro.runtime import DriftDetector, DriftPolicy, SelfHealingController
+from repro.serving import (DeadlineExceeded, Overloaded,
+                           PipelinedModelServer)
+from repro.api import DeploymentSpec
+
+
+# ---------------------------------------------------------------------------
+# drift detector
+# ---------------------------------------------------------------------------
+def _noisy_stream(seed, n, base, skew_stage=None, skew=1.0):
+    rnd = random.Random(seed)
+    out = []
+    for _ in range(n):
+        obs = [b * (1 + 0.05 * rnd.random()) for b in base]
+        if skew_stage is not None:
+            obs[skew_stage] *= skew
+        out.append(obs)
+    return out
+
+
+def test_drift_detector_is_deterministic():
+    """Identical seeded streams -> identical drift values and triggers."""
+    pol = DriftPolicy(drift_threshold=0.4, hysteresis=3)
+    modeled = [0.01, 0.01, 0.01]
+    stream = _noisy_stream(7, 12, modeled, skew_stage=0, skew=4.0)
+
+    def run():
+        det = DriftDetector(pol)
+        return [(round(det.observe(modeled, obs), 9), det.triggered)
+                for obs in stream]
+
+    a, b = run(), run()
+    assert a == b
+    assert a[-1][1]                        # sustained skew does trigger
+
+
+def test_drift_is_shape_based_not_scale_based():
+    """A uniformly slower device (same *shape*) must not trigger: the
+    same cuts stay optimal, replanning would thrash for nothing."""
+    pol = DriftPolicy(drift_threshold=0.2, hysteresis=2)
+    det = DriftDetector(pol)
+    modeled = [0.01, 0.02, 0.03]
+    for _ in range(10):
+        det.observe(modeled, [5 * t for t in modeled])   # 5x everywhere
+        assert not det.triggered
+    assert det.last_drift == pytest.approx(0.0, abs=1e-9)
+
+
+def test_hysteresis_oscillating_load_does_not_thrash():
+    """Alternating drifty/calm windows never reach ``hysteresis``
+    consecutive exceedances -> no trigger."""
+    pol = DriftPolicy(drift_threshold=0.3, hysteresis=3, ewma_alpha=1.0)
+    det = DriftDetector(pol)
+    modeled = [0.01, 0.01]
+    for i in range(20):
+        obs = [0.01, 0.05] if i % 2 == 0 else [0.01, 0.01]
+        det.observe(modeled, obs)
+        assert not det.triggered
+
+
+def test_detector_rebase_on_shape_change():
+    pol = DriftPolicy(drift_threshold=0.1, hysteresis=1)
+    det = DriftDetector(pol)
+    det.observe([0.01, 0.01], [0.01, 0.05])
+    assert det.triggered
+    # stage count changed (a replan landed): streak must not carry over
+    det.observe([0.01, 0.01, 0.01], [0.01, 0.01])
+    assert not det.triggered
+
+
+# ---------------------------------------------------------------------------
+# live trace builder
+# ---------------------------------------------------------------------------
+def test_live_trace_builder_apportions_and_round_trips():
+    g = synthetic_cnn(600).to_layer_graph()
+    ltb = LiveTraceBuilder(g)
+    mid = g.depth // 2
+    ranges = [(0, mid - 1), (mid, g.depth - 1)]
+    n = ltb.observe(ranges, [0.010, 0.030], [5, 5])
+    assert n == g.depth and ltb.coverage() == 1.0
+    tr = ltb.trace()
+    # apportioning preserves each stage's observed total exactly
+    st = tr.stage_times(ranges)
+    assert st is not None
+    assert st[0] == pytest.approx(0.010, rel=1e-9)
+    assert st[1] == pytest.approx(0.030, rel=1e-9)
+    # the emitted artifact is a standard versioned trace
+    again = ProfileTrace.from_json(tr.to_json())
+    assert again.depth_time_map() == tr.depth_time_map()
+    # both cost-source kinds wrap it
+    assert ltb.cost_source("trace").trace is not None
+    assert ltb.cost_source("calibrated").trace is not None
+    with pytest.raises(ValueError):
+        ltb.cost_source("bogus")
+
+
+def test_live_trace_builder_skips_empty_stages_and_ewma_smooths():
+    g = synthetic_cnn(600).to_layer_graph()
+    ltb = LiveTraceBuilder(g, alpha=0.5)
+    mid = g.depth // 2
+    ranges = [(0, mid - 1), (mid, g.depth - 1)]
+    # second stage saw no items: only the first stage's depths update
+    n = ltb.observe(ranges, [0.010, 0.0], [5, 0])
+    assert 0 < n < g.depth
+    assert ltb.coverage() == pytest.approx(mid / g.depth)
+    t1 = ltb.depth_time(0)
+    ltb.observe(ranges, [0.020, 0.0], [5, 0])     # 2x slower window
+    t2 = ltb.depth_time(0)
+    assert t1 < t2 < 2 * t1                       # smoothed, not jumped
+
+
+# ---------------------------------------------------------------------------
+# controller: guarded replan state machine (scripted fake server)
+# ---------------------------------------------------------------------------
+class _FakeServer:
+    """Interface double for PipelinedModelServer: scripted snapshots,
+    recorded reconfigures."""
+
+    def __init__(self, pl, snaps):
+        self.plan = pl
+        self.stage_fns = [lambda x: x] * pl.n_stages
+        self._snaps = list(snaps)
+        self.reconfigures = []
+
+    def push(self, snap):
+        self._snaps.append(snap)
+
+    def snapshot(self):
+        return self._snaps.pop(0)
+
+    def reconfigure(self, pl, fns, drain_timeout=30.0):
+        self.reconfigures.append(pl)
+        self.plan = pl
+        self.stage_fns = list(fns)
+
+
+def _snap_for(pl, skew_stage=None, skew=1.0):
+    base = [float(t) for t in pl.stage_times_s]
+    if skew_stage is not None:
+        base[skew_stage] *= skew
+    return {"stage_time_per_req_s": base,
+            "stage_items": [10] * pl.n_stages}
+
+
+def _controller(srv, g, policy, builder=None, spec=None):
+    return SelfHealingController(
+        srv, spec or DeploymentSpec(stages=srv.plan.n_stages), g,
+        builder or (lambda pl: [lambda x: x] * pl.n_stages),
+        policy=policy, canary_payloads=[1, 2])
+
+
+def test_controller_commit_via_canary(monkeypatch):
+    g = synthetic_cnn(600).to_layer_graph()
+    incumbent = plan(g, 3)
+    candidate = PlacementPlan.from_cuts(g, [1, 3])
+    assert candidate.cuts != incumbent.cuts   # distinct target plan
+    monkeypatch.setattr(deploy_mod, "plan", lambda *a, **k: candidate)
+    pol = DriftPolicy(drift_threshold=0.3, hysteresis=2,
+                      cooldown_windows=2, ewma_alpha=1.0)
+    srv = _FakeServer(incumbent,
+                      [_snap_for(incumbent, 0, 8.0) for _ in range(3)])
+    ctl = _controller(srv, g, pol)
+    ctl.tick()
+    assert srv.reconfigures == []           # hysteresis: one window is
+    ctl.tick()                              # not drift; two is
+    assert srv.reconfigures == [candidate]
+    assert ctl.commits == 1 and ctl.state == "cooldown"
+    assert ctl.prior is not None and ctl.prior[0] is incumbent
+    # cooldown suppresses immediate re-trigger even under drift
+    srv.push(_snap_for(candidate, 0, 8.0))
+    ctl.tick()
+    assert ctl.commits == 1
+    ev = [e for e in ctl.events if e["kind"] == "commit"]
+    assert len(ev) == 1 and ev[0]["cuts"] == list(candidate.cuts)
+
+
+def test_controller_rollback_backoff_degrade_and_rearm(monkeypatch):
+    """A candidate that fails mid-validation never replaces the
+    incumbent: rollback -> seeded backoff -> bounded retries -> degraded
+    -> re-arm once drift subsides."""
+    g = synthetic_cnn(600).to_layer_graph()
+    incumbent = plan(g, 3)
+    candidate = PlacementPlan.from_cuts(g, [1, 3])
+    monkeypatch.setattr(deploy_mod, "plan", lambda *a, **k: candidate)
+
+    def exploding_builder(pl):
+        if pl.cuts == candidate.cuts:        # only the canary build dies
+            def boom(x):
+                raise RuntimeError("candidate replica crashed")
+            return [boom] * pl.n_stages
+        return [lambda x: x] * pl.n_stages
+
+    pol = DriftPolicy(drift_threshold=0.3, hysteresis=1,
+                      cooldown_windows=0, ewma_alpha=1.0,
+                      max_canary_retries=1, backoff_base_windows=1,
+                      backoff_max_windows=4, backoff_seed=0)
+    srv = _FakeServer(incumbent, [])
+    ctl = _controller(srv, g, pol, builder=exploding_builder)
+    for _ in range(12):
+        srv.push(_snap_for(incumbent, 0, 8.0))
+        ctl.tick()
+        if ctl.state == "degraded":
+            break
+    assert ctl.state == "degraded"
+    assert srv.reconfigures == []           # incumbent never displaced
+    assert ctl.rollbacks >= 2               # first failure + the retry
+    kinds = [e["kind"] for e in ctl.events]
+    assert "rollback" in kinds and "degraded" in kinds
+    # drift subsides -> the loop re-arms
+    srv.push(_snap_for(incumbent))
+    ctl.tick()
+    assert ctl.state == "steady"
+    assert any(e["kind"] == "rearmed" for e in ctl.events)
+
+
+def test_controller_backoff_is_seed_deterministic(monkeypatch):
+    g = synthetic_cnn(600).to_layer_graph()
+    incumbent = plan(g, 3)
+    candidate = PlacementPlan.from_cuts(g, [1, 3])
+    monkeypatch.setattr(deploy_mod, "plan", lambda *a, **k: candidate)
+
+    def run():
+        pol = DriftPolicy(drift_threshold=0.3, hysteresis=1,
+                          cooldown_windows=0, ewma_alpha=1.0,
+                          max_canary_retries=5, backoff_base_windows=1,
+                          backoff_seed=3)
+        srv = _FakeServer(incumbent, [])
+        ctl = _controller(
+            srv, g, pol,
+            builder=lambda pl: [lambda x: (_ for _ in ()).throw(
+                RuntimeError("no"))] * pl.n_stages)
+        states = []
+        for _ in range(10):
+            srv.push(_snap_for(incumbent, 0, 8.0))
+            ctl.tick()
+            states.append((ctl.state, ctl._backoff, ctl._retries))
+        return states
+
+    assert run() == run()
+
+
+def test_controller_noop_when_live_plan_endorses_incumbent(monkeypatch):
+    g = synthetic_cnn(600).to_layer_graph()
+    incumbent = plan(g, 3)
+    monkeypatch.setattr(deploy_mod, "plan", lambda *a, **k: incumbent)
+    pol = DriftPolicy(drift_threshold=0.3, hysteresis=1,
+                      cooldown_windows=2, ewma_alpha=1.0)
+    srv = _FakeServer(incumbent, [_snap_for(incumbent, 0, 8.0)])
+    ctl = _controller(srv, g, pol)
+    ctl.tick()
+    assert srv.reconfigures == [] and ctl.commits == 0
+    assert ctl.state == "cooldown"
+    assert any(e["kind"] == "noop" for e in ctl.events)
+
+
+def test_controller_real_replan_path_runs():
+    """Unmocked end-to-end tick: real plan() against the live calibrated
+    source.  Whatever the planner decides (commit or noop), the loop must
+    land in cooldown without touching executor threads."""
+    g = synthetic_cnn(600).to_layer_graph()
+    incumbent = plan(g, 3)
+    pol = DriftPolicy(drift_threshold=0.3, hysteresis=1,
+                      cooldown_windows=1, ewma_alpha=1.0)
+    srv = _FakeServer(incumbent, [_snap_for(incumbent, 0, 6.0)])
+    ctl = _controller(srv, g, pol)
+    drift = ctl.tick()
+    assert drift is not None and drift > pol.drift_threshold
+    assert ctl.state == "cooldown"
+    assert ctl.replans == 1
+
+
+# ---------------------------------------------------------------------------
+# server overload protection
+# ---------------------------------------------------------------------------
+def _two_stage_server(stage_s=0.0, **kw):
+    g = synthetic_cnn(600).to_layer_graph()
+    pl = plan(g, 2)
+    fns = [simulated_stage(stage_s) if stage_s else (lambda x: x),
+           lambda x: x]
+    return PipelinedModelServer(pl, fns, max_batch=4, max_wait_s=0.005,
+                                **kw)
+
+
+def test_deadline_exceeded_at_admission():
+    srv = _two_stage_server()
+    with srv:
+        req = srv.submit(1, deadline_s=0.005)
+        time.sleep(0.05)                   # expires while unadmitted
+        srv.start()
+        assert req.event.wait(5)
+        assert isinstance(req.error, DeadlineExceeded)
+        assert req.error.where == "admission"
+    assert srv.stats["deadline_exceeded"] == 1
+
+
+def test_deadline_exceeded_at_merge_exit():
+    srv = _two_stage_server(stage_s=0.06, deadline_s=0.01)
+    with srv:
+        srv.start()
+        req = srv.submit(1)                # server default budget applies
+        assert req.event.wait(5)           # bounded: never silently stuck
+        assert isinstance(req.error, DeadlineExceeded)
+        assert req.error.where == "merge"
+        assert req.result is None
+
+
+def test_deadline_none_is_unbounded_compat():
+    srv = _two_stage_server(stage_s=0.01)
+    with srv:
+        srv.start()
+        req = srv.submit(7)
+        assert req.event.wait(5)
+        assert req.error is None and req.result == 7
+
+
+def test_overload_shedding_and_backoff_hint():
+    srv = _two_stage_server(stage_s=0.05, deadline_s=0.04,
+                            shed_policy="deadline")
+    with srv:
+        srv.start()
+        # prime the pace estimate way past any budget: next admission
+        # with work in flight must shed
+        srv._pace_ewma = 10.0
+        first = srv.submit(1, deadline_s=10.0)   # occupies the pipeline
+        time.sleep(0.01)                         # let it admit
+        shed = srv.submit(2)
+        assert shed.event.wait(5)
+        assert isinstance(shed.error, Overloaded)
+        assert shed.error.retry_after_s > 0
+        assert first.event.wait(5) and first.error is None
+    assert srv.stats["shed"] == 1
+    snap_keys = {"shed", "deadline_exceeded", "queue_depth"}
+    assert snap_keys <= set(srv._snapshot_locked().keys())
+
+
+def test_backoff_sequence_is_seeded_and_grows():
+    a = _two_stage_server(backoff_seed=11)
+    b = _two_stage_server(backoff_seed=11)
+    seq_a, seq_b = [], []
+    for srv, seq in ((a, seq_a), (b, seq_b)):
+        for i in range(6):
+            srv._consec_sheds = i
+            seq.append(srv._retry_after_s())
+    assert seq_a == seq_b                  # same seed, same hints
+    # exponential growth dominates the 25% jitter band
+    assert seq_a[3] > seq_a[0] and seq_a[5] > seq_a[2]
+    assert max(seq_a) <= a.backoff_max_s * 1.25 + 1e-9
+    c = _two_stage_server(backoff_seed=12)
+    assert [c._retry_after_s() for _ in range(3)] != seq_a[:3]
+
+
+def test_snapshot_empty_window_is_neutral():
+    """Regression (ISSUE 8 satellite): a zero-completion delta window
+    yields a neutral record — no crash, no NaN, no division blowup."""
+    srv = _two_stage_server()
+    srv.snapshot()                          # reset
+    snap = srv.snapshot()                   # empty window
+    assert snap["requests"] == 0 and snap["completed"] == 0
+    assert snap["throughput_rps"] == 0.0
+    assert snap["latency"]["n"] == 0 and snap["latency"]["p99_s"] == 0.0
+    assert snap["stage_items"] == [0, 0]
+    assert snap["stage_time_per_req_s"] == [0.0, 0.0]
+    assert all(x == x for x in snap["stage_time_per_req_s"])   # no NaN
+    srv.stop()
+
+
+def test_snapshot_carries_per_item_stage_times():
+    srv = _two_stage_server()
+    with srv:
+        srv.snapshot()
+        outs = srv.serve_batch([1, 2, 3, 4])
+        assert outs == [1, 2, 3, 4]
+        snap = srv.snapshot()
+    assert snap["stage_items"] == [4, 4]
+    assert all(t >= 0.0 for t in snap["stage_time_per_req_s"])
+    assert snap["stage_busy_s"][0] == pytest.approx(
+        snap["stage_time_per_req_s"][0] * 4)
+
+
+def test_items_snapshot_monotonic_and_reconfigure_rebases():
+    g = synthetic_cnn(600).to_layer_graph()
+    pl = plan(g, 2)
+    srv = PipelinedModelServer(pl, [lambda x: x, lambda x: x])
+    with srv:
+        srv.serve_batch([1, 2, 3])
+        assert srv.executor.items_snapshot() == [3, 3]
+        srv.snapshot()
+        srv.reconfigure(plan(g, 3), [lambda x: x] * 3)
+        snap = srv.snapshot()               # rebased: no negative deltas
+        assert snap["stage_items"] == [0, 0, 0]
+        srv.serve_batch([5])
+        assert srv.executor.items_snapshot() == [1, 1, 1]
+
+
+# ---------------------------------------------------------------------------
+# spec knobs
+# ---------------------------------------------------------------------------
+def test_spec_selfheal_knobs_validate_and_round_trip():
+    s = DeploymentSpec(stages=2, deadline_ms=40.0, shed_policy="deadline",
+                       drift_threshold=0.4, canary_requests=3)
+    assert DeploymentSpec.from_json(s.to_json()) == s
+    with pytest.raises(ValueError, match="deadline_ms"):
+        DeploymentSpec(stages=2, deadline_ms=-1.0)
+    with pytest.raises(ValueError, match="shed_policy"):
+        DeploymentSpec(stages=2, shed_policy="lifo")
+    with pytest.raises(ValueError, match="needs deadline_ms"):
+        DeploymentSpec(stages=2, shed_policy="deadline")
+    with pytest.raises(ValueError, match="drift_threshold"):
+        DeploymentSpec(stages=2, drift_threshold=-0.1)
+    with pytest.raises(ValueError, match="canary_requests"):
+        DeploymentSpec(stages=2, canary_requests=0)
+
+
+def test_drift_policy_validates():
+    with pytest.raises(ValueError):
+        DriftPolicy(hysteresis=0)
+    with pytest.raises(ValueError):
+        DriftPolicy(ewma_alpha=0.0)
+    with pytest.raises(ValueError):
+        DriftPolicy(backoff_base_windows=4, backoff_max_windows=2)
