@@ -31,8 +31,6 @@ baseline p99, recorded in ``BENCH_chaos.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import threading
 import time
 from typing import Dict, List, Optional
@@ -43,9 +41,8 @@ from repro.runtime import (ElasticPlanner, FaultPolicy, HealthMonitor,
                            replica_kill_schedule, run_chaos_executor)
 from repro.serving import PipelinedModelServer
 
-from .common import emit
+from .common import emit, write_bench
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODEL = "ResNet50"
 STAGES = 4
@@ -231,10 +228,7 @@ def run(n_requests: int, interval_s: float, n_kills: int, seed: int,
         },
     }
     if write:
-        out = os.path.join(REPO_ROOT, "BENCH_chaos.json")
-        with open(out, "w") as f:
-            json.dump(summary, f, indent=1)
-        print(f"wrote {out}")
+        write_bench("chaos", summary)
 
     emit("chaos_bench", [
         {"name": "chaos_baseline_p99",

@@ -1,4 +1,15 @@
-"""Shared benchmark utilities: CSV emission + artifact directory."""
+"""Shared benchmark utilities: CSV emission + the canonical artifact
+writers.
+
+Artifact layout (see EXPERIMENTS.md §Benchmark artifacts):
+
+* ``BENCH_<name>.json`` at the repo root — the acceptance artifact a
+  benchmark's full mode records, written only through :func:`write_bench`
+  so every bench lands the same way (and a copy rides along under
+  ``benchmarks/artifacts/`` for archival tooling that syncs one dir).
+* ``benchmarks/artifacts/<table>.json`` — per-table row dumps from
+  :func:`emit`, the CSV companion.
+"""
 from __future__ import annotations
 
 import json
@@ -6,6 +17,7 @@ import os
 import time
 from typing import Any, Dict, Iterable, List
 
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 ARTIFACTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                          "artifacts")
 
@@ -20,6 +32,21 @@ def emit(table: str, rows: List[Dict[str, Any]], keys: Iterable[str]) -> None:
     os.makedirs(ARTIFACTS, exist_ok=True)
     with open(os.path.join(ARTIFACTS, f"{table}.json"), "w") as f:
         json.dump(rows, f, indent=1)
+
+
+def write_bench(name: str, summary: Dict[str, Any]) -> str:
+    """Write a benchmark's acceptance artifact the canonical way:
+    ``BENCH_<name>.json`` at the repo root plus a copy in the artifacts
+    dir.  Returns the repo-root path (also printed, the grep target CI
+    logs rely on)."""
+    out = os.path.join(REPO_ROOT, f"BENCH_{name}.json")
+    with open(out, "w") as f:
+        json.dump(summary, f, indent=1)
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    with open(os.path.join(ARTIFACTS, f"BENCH_{name}.json"), "w") as f:
+        json.dump(summary, f, indent=1)
+    print(f"wrote {out}")
+    return out
 
 
 class Timer:

@@ -1,0 +1,202 @@
+"""Multi-tenant fleet benchmark (ISSUE 9 acceptance).
+
+One shared homogeneous pool, three models with skewed SLOs and demand:
+``vision`` (a heavier synthetic CNN with a high throughput SLO) next to
+``detect`` / ``embed`` (lighter models with tight p95 targets).  The
+same traffic is played through two arms built from the *same*
+:class:`~repro.fleet.scenario.FleetScenario` machinery:
+
+* **fleet** — the solved pool split (:func:`~repro.fleet.plan_fleet`
+  minimax DP over the joint cuts+replicas oracle) with the
+  :class:`~repro.fleet.autoscale.FleetAutoscaler` ticking once per
+  traffic window;
+* **static** — the naive baseline: an equal split pinned via
+  ``fixed_counts``, no autoscaler.
+
+Phase 1 is the skew the solver was told about (vision-heavy); phase 2 is
+a mid-run traffic shift (detect surges, vision recedes) the *solver
+never saw* — only the autoscaler can chase it, by moving a device from
+vision to detect through ``Deployment.reconfigure`` hot-swaps.
+
+Acceptance (recorded in ``BENCH_fleet.json`` at the repo root):
+
+* worst-model SLO attainment under the fleet arm strictly better than
+  the static equal split (packing + autoscaling must pay);
+* the phase-2 shift triggers >= 1 *committed* device reallocation;
+* 0 lost and 0 misordered requests per member across every hot-swap
+  (the drain contract, audited at merge exit via the router's
+  completion tap).
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench            # full, writes JSON
+    PYTHONPATH=src python -m benchmarks.fleet_bench --smoke    # CI: small, no write
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Any, Dict
+
+from repro.api import DeploymentSpec
+from repro.fleet import FleetMemberSpec, FleetSpec
+from repro.fleet.scenario import FleetScenario, TrafficPhase, summarize_member
+
+from .common import emit, write_bench
+
+POOL_DEVICES = 9
+
+# per-member service-time truth (whole-model sleep budget, seconds)
+SERVICE_SUM_S = {"vision": 10e-3, "detect": 5e-3, "embed": 5e-3}
+
+# traffic (requests per window): phase 1 is the solver's skew, phase 2
+# shifts demand onto detect — the move the autoscaler must make
+RATES_BASE = {"vision": 12, "detect": 3, "embed": 3}
+RATES_SHIFT = {"vision": 4, "detect": 8, "embed": 3}
+
+
+def fleet_spec() -> FleetSpec:
+    """The 3-model skewed mix.  SLO scales are chosen against the
+    analytic cost model (which prices the pool split) so the solved
+    split is genuinely skewed: vision's throughput SLO needs most of
+    the pool, detect/embed fit on one device each with donor headroom
+    left for the autoscaler."""
+    members = (
+        FleetMemberSpec(
+            name="vision",
+            spec=DeploymentSpec(model="synthetic-cnn:16",
+                                slo_p95_ms=38.0,
+                                slo_throughput_rps=12000.0,
+                                deadline_ms=500.0,
+                                max_wait_s=2e-3),
+            share=3.0),
+        FleetMemberSpec(
+            name="detect",
+            spec=DeploymentSpec(model="synthetic-cnn:12",
+                                slo_p95_ms=25.0,
+                                slo_throughput_rps=2000.0,
+                                deadline_ms=500.0,
+                                max_wait_s=2e-3),
+            share=1.0),
+        FleetMemberSpec(
+            name="embed",
+            spec=DeploymentSpec(model="synthetic-cnn:12",
+                                slo_p95_ms=25.0,
+                                slo_throughput_rps=2000.0,
+                                deadline_ms=500.0,
+                                max_wait_s=2e-3),
+            share=1.0),
+    )
+    return FleetSpec(members=members, device_budget=POOL_DEVICES)
+
+
+def equal_counts(spec: FleetSpec) -> Dict[str, int]:
+    n = len(spec.members)
+    base, rem = divmod(POOL_DEVICES, n)
+    return {m.name: base + (1 if i < rem else 0)
+            for i, m in enumerate(spec.members)}
+
+
+def run_arm(arm: str, windows_base: int, windows_shift: int
+            ) -> Dict[str, Any]:
+    """One full scenario pass; ``arm`` is 'fleet' (solved split +
+    autoscaler) or 'static' (equal fixed split, no autoscaler)."""
+    spec = fleet_spec()
+    sc = FleetScenario(spec, SERVICE_SUM_S)
+    if arm == "fleet":
+        fleet = sc.deploy()
+    else:
+        fleet = sc.deploy(fixed_counts=equal_counts(spec),
+                          autoscale=False)
+    counts_before = fleet.device_counts()
+    with fleet:
+        metrics = sc.drive(
+            fleet,
+            [TrafficPhase(windows=windows_base, rates=RATES_BASE),
+             TrafficPhase(windows=windows_shift, rates=RATES_SHIFT)])
+        counts_after = fleet.device_counts()
+        committed = (fleet.autoscaler.committed_moves
+                     if fleet.autoscaler is not None else 0)
+        events = [e for e in (fleet.autoscaler.events
+                              if fleet.autoscaler is not None else [])
+                  if e["event"] in ("move", "commit", "rollback")]
+    att = sc.attainment(metrics)
+    return {
+        "arm": arm,
+        "device_counts_before": counts_before,
+        "device_counts_after": counts_after,
+        "committed_moves": committed,
+        "autoscaler_events": events,
+        "members": {n: summarize_member(m) for n, m in metrics.items()},
+        "attainment": {n: round(a, 4) for n, a in att.items()},
+        "worst_attainment": round(FleetScenario.worst(att), 4),
+        "audit": sc.audit(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--windows", type=int, default=10,
+                    help="windows per traffic phase (full mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small run, functional asserts only, no JSON")
+    args = ap.parse_args()
+    wb, ws = (3, 5) if args.smoke else (args.windows, args.windows + 2)
+
+    arms = {}
+    for arm in ("fleet", "static"):
+        print(f"\n=== {arm} arm ({wb}+{ws} windows) ===")
+        r = run_arm(arm, wb, ws)
+        arms[arm] = r
+        print(f"  split {r['device_counts_before']} -> "
+              f"{r['device_counts_after']}  "
+              f"committed_moves={r['committed_moves']}")
+        print(f"  attainment {r['attainment']}  "
+              f"worst={r['worst_attainment']}")
+
+    rows = []
+    for arm, r in arms.items():
+        for name, m in r["members"].items():
+            rows.append({"arm": arm, "member": name,
+                         "devices": r["device_counts_after"][name],
+                         "attainment": r["attainment"][name],
+                         "p95_ms": m["p95_ms"],
+                         "submitted": m["submitted"],
+                         "shed": m["shed"],
+                         "deadline_exceeded": m["deadline_exceeded"]})
+    emit("fleet_attainment", rows,
+         ["arm", "member", "devices", "attainment", "p95_ms",
+          "submitted", "shed", "deadline_exceeded"])
+
+    # drain contract holds in every arm, across every hot-swap
+    for arm, r in arms.items():
+        for name, a in r["audit"].items():
+            assert a["lost"] == 0, (arm, name, a)
+            assert a["misordered"] == 0, (arm, name, a)
+    # the solver's split is genuinely skewed (not the equal baseline)
+    fc = arms["fleet"]["device_counts_before"]
+    assert fc != arms["static"]["device_counts_before"], fc
+    assert fc["vision"] > fc["detect"], fc
+
+    summary = {
+        "pool_devices": POOL_DEVICES,
+        "service_sum_ms": {n: s * 1e3 for n, s in SERVICE_SUM_S.items()},
+        "rates_base": RATES_BASE,
+        "rates_shift": RATES_SHIFT,
+        "windows": {"base": wb, "shift": ws},
+        "arms": arms,
+        "worst_attainment": {a: r["worst_attainment"]
+                             for a, r in arms.items()},
+    }
+
+    if args.smoke:
+        print("\nsmoke OK (no JSON written)")
+        return
+
+    # full-mode acceptance: packing + autoscaling must actually pay
+    assert (arms["fleet"]["worst_attainment"]
+            > arms["static"]["worst_attainment"]), summary["worst_attainment"]
+    assert arms["fleet"]["committed_moves"] >= 1, \
+        arms["fleet"]["autoscaler_events"]
+    write_bench("fleet", summary)
+
+
+if __name__ == "__main__":
+    main()

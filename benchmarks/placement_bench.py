@@ -24,8 +24,6 @@ along.  Summary lands in ``BENCH_placement.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 from typing import Dict, List, Optional
 
@@ -34,9 +32,8 @@ from repro.core import EdgeTPUModel, PipelineExecutor, simulated_stage
 from repro.core.segmentation import minimax_time_split
 from repro.models.cnn import REAL_CNNS
 
-from .common import emit
+from .common import emit, write_bench
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # Exact joint DP is O(d^2 * budget^2): the default set keeps depth and
 # pinned stage counts where a model benches in seconds (ResNet101/152 and
@@ -159,10 +156,7 @@ def run(models: Optional[List[str]] = None, rounds: int = 5,
         },
     }
     if write:
-        out = os.path.join(REPO_ROOT, "BENCH_placement.json")
-        with open(out, "w") as f:
-            json.dump(summary, f, indent=1)
-        print(f"wrote {out}")
+        write_bench("placement", summary)
     print(f"\n{wins} models with a strict replication win; "
           f"replicated executor {exec_summary['speedup']}x on the "
           f"bottleneck pipeline")

@@ -24,9 +24,7 @@ non-replicated plan) lives in ``benchmarks/placement_bench.py``.
 from __future__ import annotations
 
 import argparse
-import json
 import math
-import os
 import time
 from typing import Dict, List
 
@@ -36,10 +34,9 @@ from repro.core.placement import min_stages_no_spill
 from repro.core.segmentation import minimax_time_split
 from repro.models.cnn import REAL_CNNS
 
-from .common import emit
+from .common import emit, write_bench
 from .pipeline_serving import run_executor_bench
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 EXACT_ORACLE_MAX_DEPTH = 600          # O(d^2 s) — skip only absurd depths
 
 
@@ -150,10 +147,7 @@ def run(models: List[str] | None = None, repeats: int = 3) -> Dict:
                 exec_summary["threads_created_steady_state"],
         },
     }
-    out = os.path.join(REPO_ROOT, "BENCH_planner.json")
-    with open(out, "w") as f:
-        json.dump(summary, f, indent=1)
-    print(f"\nwrote {out}")
+    write_bench("planner", summary)
     print(f"executor: {exec_summary['speedup']}x, "
           f"{exec_summary['threads_created_steady_state']} threads created "
           f"in steady state")

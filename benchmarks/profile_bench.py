@@ -26,7 +26,6 @@ models.  Summary lands in ``BENCH_profile.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 from typing import Dict, List, Optional
 
@@ -35,9 +34,8 @@ from repro.core import EdgeTPUModel, PlacementPlan
 from repro.models.cnn import REAL_CNNS, synthetic_cnn
 from repro.profiling import CalibratedCostSource, profile_model
 
-from .common import ARTIFACTS, emit
+from .common import ARTIFACTS, REPO_ROOT, emit, write_bench
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # small, fast-forward members of the zoo + one synthetic §3.1 model: the
 # profiler runs every depth level (warmup+repeats) eagerly on CPU, so the
@@ -152,10 +150,7 @@ def run(models: Optional[List[str]] = None, warmup: int = 1,
         },
     }
     if write:
-        out = os.path.join(REPO_ROOT, "BENCH_profile.json")
-        with open(out, "w") as f:
-            json.dump(summary, f, indent=1)
-        print(f"wrote {out}")
+        write_bench("profile", summary)
     print(f"\ncalibration improves modeling error on {improved}/"
           f"{len(results)} models; trace-backed cuts not worse on "
           f"{not_worse}/{len(results)}")

@@ -37,8 +37,6 @@ writes ``BENCH_selfheal.json`` at the repo root.
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import threading
 import time
 from typing import Dict, List, Optional
@@ -49,9 +47,8 @@ from repro.profiling.live import LOW_INTENSITY_MACS_PER_BYTE
 from repro.runtime import ChaosEvent, ChaosMonkey, DriftPolicy
 from repro.serving import DeadlineExceeded, Overloaded
 
-from .common import emit
+from .common import emit, write_bench
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODEL = "MobileNet"          # Table-1; depthwise convs = low-MAC cliffs
 STAGES = 4
@@ -343,10 +340,7 @@ def main() -> None:
     }
     if not smoke:
         summary["overload"] = run_overload()
-        out = os.path.join(REPO_ROOT, "BENCH_selfheal.json")
-        with open(out, "w") as f:
-            json.dump(summary, f, indent=1)
-        print(f"wrote {out}")
+        write_bench("selfheal", summary)
 
     p1, p2 = heal["phase1"], heal["phase2"]
     rows = [

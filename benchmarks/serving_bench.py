@@ -33,8 +33,6 @@ bit-identical (asserted in tests/test_streaming_executor.py).
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import queue as queue_mod
 import threading
 import time
@@ -48,9 +46,8 @@ from repro.core import PipelineExecutor, simulated_stage
 from repro.models.cnn import REAL_CNNS
 from repro.serving import latency_percentiles
 
-from .common import emit
+from .common import emit, write_bench
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 DEFAULT_MODELS = ("ResNet50", "InceptionV3", "MobileNet", "Xception")
 STAGES = 6
@@ -336,10 +333,7 @@ def run(models: Optional[List[str]] = None, stages: int = STAGES,
         },
     }
     if write:
-        out = os.path.join(REPO_ROOT, "BENCH_serving.json")
-        with open(out, "w") as f:
-            json.dump(summary, f, indent=1)
-        print(f"wrote {out}")
+        write_bench("serving", summary)
     print(f"min streaming/barrier speedup: {min_speedup:.2f}x "
           f"(floor 1.3x: {'met' if min_speedup >= 1.3 else 'MISSED'})")
     return summary

@@ -40,12 +40,12 @@ imports therefore live inside functions.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import statistics
 import time
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+from .common import write_bench
+
 N_DEVICES = 4
 STAGES = 4
 
@@ -287,10 +287,7 @@ def main() -> None:
           f"{fill['overlap_blocked_median_s'] * 1e3:7.0f} ms")
     if not smoke:
         assert summary["acceptance"]["overlap_unblocks_host"], fill
-        out = os.path.join(REPO_ROOT, "BENCH_spmd.json")
-        with open(out, "w") as f:
-            json.dump(summary, f, indent=1)
-        print(f"wrote {out}")
+        write_bench("spmd", summary)
 
 
 if __name__ == "__main__":

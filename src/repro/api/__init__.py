@@ -20,10 +20,23 @@ from .strategies import (PlanContext, PlanStrategy, available_strategies,
                          get_strategy, register_strategy)
 from .deploy import Deployment, deploy, plan
 
+# fleet-tier names re-exported lazily (PEP 562): repro.fleet imports
+# from this package's submodules, so an eager import here would cycle
+_FLEET_EXPORTS = ("Fleet", "FleetSpec", "FleetMemberSpec", "deploy_fleet",
+                  "plan_fleet")
+
 __all__ = [
     "DeploymentSpec", "resolve_model_graph",
     "PlanReport",
     "PlanContext", "PlanStrategy", "register_strategy", "get_strategy",
     "available_strategies",
     "plan", "deploy", "Deployment",
+    *_FLEET_EXPORTS,
 ]
+
+
+def __getattr__(name):
+    if name in _FLEET_EXPORTS:
+        from .. import fleet
+        return getattr(fleet, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -132,6 +132,7 @@ class Deployment:
         self._builder = stage_fn_builder
         self._fns = list(stage_fns) if stage_fns is not None else None
         self._server = None
+        self._closed = False
         # runtime pricing overrides deploy() planned with — re-passed on
         # every reconfigure() replan so resizes price against the same
         # device model as the original plan
@@ -188,6 +189,22 @@ class Deployment:
         counts — the handle checks, it does not need to be told)."""
         return self._live_server()
 
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` ran.  ``close()`` is terminal: a
+        closed deployment refuses to build runtime (:meth:`serve`,
+        :meth:`executor`, :meth:`reconfigure`) — lifecycle owners that
+        cycle servers (the fleet does, repeatedly) stop the *server*
+        and call :meth:`serve` again instead."""
+        return self._closed
+
+    def _check_open(self, what: str) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"deployment is closed; {what} needs a live deployment "
+                f"(close() is terminal — build a new handle via "
+                f"deploy() / Deployment.from_plan)")
+
     def _live_server(self):
         if self._server is not None and self._server.stopped:
             self._server = None            # stopped behind our back
@@ -232,6 +249,7 @@ class Deployment:
           to the host executor with a logged one-line notice (the
           low-level SPMD entry points keep the hard error).
         """
+        self._check_open("executor()")
         backend = backend if backend is not None else self.spec.backend
         if backend not in ("host", "spmd"):
             raise ValueError(f"unknown backend {backend!r}; pick 'host' "
@@ -271,9 +289,10 @@ class Deployment:
         """The streaming server over this deployment's plan.  At most one
         live server per deployment (reconfigure targets it); a server the
         caller already stopped no longer counts."""
+        self._check_open("serve()")
         if self._live_server() is not None:
             raise RuntimeError("deployment already has a live server; "
-                               "close() it before serving again")
+                               "stop it before serving again")
         from ..serving.server import PipelinedModelServer
         srv = PipelinedModelServer(
             self.plan, self.stage_functions(),
@@ -302,6 +321,7 @@ class Deployment:
         spec's ``drift_threshold``/``canary_requests`` seed the policy
         unless an explicit ``policy`` is given.  Caller owns the
         controller's lifecycle (use as a context manager)."""
+        self._check_open("self_heal()")
         srv = self._live_server()
         if srv is None:
             raise RuntimeError("self_heal needs a live server; call "
@@ -327,6 +347,7 @@ class Deployment:
         count via ``stages=``) and hot-swap the live server through the
         existing drain-and-swap path.  Without a live server this just
         re-plans and updates the handle."""
+        self._check_open("reconfigure()")
         if (spec is None) == (stages is None):
             raise ValueError("pass exactly one of spec or stages")
         if spec is not None:
@@ -345,11 +366,18 @@ class Deployment:
         return new_plan
 
     def close(self) -> None:
+        """Stop any live server and retire the handle.  Terminal and
+        idempotent: a second ``close()`` is a no-op, but ``serve()`` /
+        ``executor()`` / ``reconfigure()`` after it raise — a consumer
+        holding a closed handle is a lifecycle bug, not a state to limp
+        through."""
+        self._closed = True
         if self._server is not None:
             self._server.stop()
             self._server = None
 
     def __enter__(self) -> "Deployment":
+        self._check_open("entering the context")
         return self
 
     def __exit__(self, *exc) -> None:

@@ -109,6 +109,15 @@ class DeploymentSpec:
     .SelfHealingController`) replans from live telemetry (0 disables the
     loop).  ``canary_requests`` — held-aside requests used to validate a
     candidate executor before a guarded reconfigure commits.
+
+    Service-level objective (consumed by the fleet tier — see
+    repro.fleet): ``slo_p95_ms`` — target p95 request latency; the fleet
+    pool-split solver sizes this deployment's device allocation against
+    it and the autoscaler treats an observed p95 past it as a violation.
+    ``slo_throughput_rps`` — minimum sustained throughput the deployment
+    must support (its modeled bottleneck pacing must stay under
+    ``1/slo_throughput_rps``).  Both optional; a standalone deployment
+    ignores them.
     """
 
     model: Optional[str] = None
@@ -138,6 +147,9 @@ class DeploymentSpec:
     shed_policy: str = "none"
     drift_threshold: float = 0.0
     canary_requests: int = 4
+    # service-level objective (consumed by the fleet tier)
+    slo_p95_ms: Optional[float] = None
+    slo_throughput_rps: Optional[float] = None
 
     def __post_init__(self):
         if not self.strategy:
@@ -178,6 +190,13 @@ class DeploymentSpec:
         if self.canary_requests < 1:
             raise ValueError(f"canary_requests must be >= 1, "
                              f"got {self.canary_requests}")
+        if self.slo_p95_ms is not None and self.slo_p95_ms <= 0:
+            raise ValueError(f"slo_p95_ms must be > 0 (or None), "
+                             f"got {self.slo_p95_ms}")
+        if (self.slo_throughput_rps is not None
+                and self.slo_throughput_rps <= 0):
+            raise ValueError(f"slo_throughput_rps must be > 0 (or None), "
+                             f"got {self.slo_throughput_rps}")
         from ..profiling.sources import parse_cost_source
         parse_cost_source(self.cost_source)   # raises on malformed refs
 

@@ -111,6 +111,57 @@ def spec_from_args(args) -> DeploymentSpec:
                           **common)
 
 
+def run_fleet(args) -> None:
+    """``--fleet fleet.json``: bring up a multi-tenant fleet from a spec
+    document and drive the synthetic traffic scenario against it —
+    weighted-fair routing, per-member SLOs, and a mid-run traffic shift
+    the autoscaler chases (see EXPERIMENTS.md §Multi-tenant fleet)."""
+    from repro.fleet import FleetSpec
+    from repro.fleet.scenario import (FleetScenario, TrafficPhase,
+                                      summarize_member)
+
+    with open(args.fleet) as f:
+        fspec = FleetSpec.from_json(f.read())
+    names = list(fspec.member_names)
+    print(f"fleet: {len(names)} members over "
+          f"{fspec.pool().n_devices} devices: {names}")
+
+    svc = args.fleet_service_ms / 1e3
+    sc = FleetScenario(fspec, {n: svc for n in names})
+    fleet = sc.deploy()
+    counts0 = fleet.device_counts()
+    print(f"pool split: {counts0} (mode={fleet.placement.mode}, "
+          f"worst modeled norm "
+          f"{fleet.placement.worst_norm:.2f})")
+
+    # phase 1: share-proportional traffic; phase 2: the first member's
+    # load triples (the shift the autoscaler must chase)
+    base = {m.name: max(1, round(2 * m.share)) for m in fspec.members}
+    shifted = dict(base)
+    shifted[names[0]] = 3 * base[names[0]]
+    with fleet:
+        metrics = sc.drive(fleet, [
+            TrafficPhase(windows=args.fleet_windows, rates=base),
+            TrafficPhase(windows=args.fleet_windows, rates=shifted),
+        ])
+        counts1 = fleet.device_counts()
+        events = ([] if fleet.autoscaler is None
+                  else list(fleet.autoscaler.events))
+    att = sc.attainment(metrics)
+    for n in names:
+        print(f"  {n}: {summarize_member(metrics[n])} "
+              f"attainment={att[n]:.2f}")
+    audit = sc.audit()
+    moves = [e for e in events if e["event"] in ("commit", "rollback")]
+    print(f"audit: {audit}")
+    print(f"device split {counts0} -> {counts1}; "
+          f"{sum(1 for e in moves if e['event'] == 'commit')} committed "
+          f"moves, {sum(1 for e in moves if e['event'] == 'rollback')} "
+          f"rollbacks")
+    assert all(a["lost"] == 0 and a["misordered"] == 0
+               for a in audit.values()), audit
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b")
@@ -172,7 +223,23 @@ def main() -> None:
                          "artifact), or 'calibrated:<path>' (analytic "
                          "model least-squares-fit to that trace); see "
                          "EXPERIMENTS.md §Profiling & calibration")
+    ap.add_argument("--fleet", default="",
+                    help="path to a FleetSpec JSON document: serve N "
+                         "models on one shared device pool (SLO-driven "
+                         "pool split, weighted-fair admission, "
+                         "autoscaling) and drive the synthetic traffic "
+                         "scenario against it; ignores the single-model "
+                         "flags above")
+    ap.add_argument("--fleet-windows", type=int, default=10,
+                    help="traffic windows per fleet scenario phase")
+    ap.add_argument("--fleet-service-ms", type=float, default=6.0,
+                    help="synthetic whole-model service time per fleet "
+                         "member (sleep-based stage fns)")
     args = ap.parse_args()
+
+    if args.fleet:
+        run_fleet(args)
+        return
 
     mod = configs.get(args.arch)
     cfg = mod.smoke_config()

@@ -121,6 +121,10 @@ class Request:
     deadline_s: Optional[float] = None    # absolute (perf_counter) deadline
     event: threading.Event = dataclasses.field(
         default_factory=threading.Event)
+    # completion observer, invoked after the event is set (the fleet
+    # router chains member-server completions back to its own requests
+    # this way); must not block — it runs on the executor's collector
+    on_done: Optional[Callable[["Request"], None]] = None
 
     @property
     def latency(self) -> float:
@@ -243,10 +247,16 @@ class PipelinedModelServer:
         self._stopped = False
         # monotonic counters; read intervals via snapshot() deltas
         self.stats: Dict[str, Any] = {"batches": 0, "requests": 0,
+                                      "admitted": 0,
                                       "completed": 0, "failed": 0,
                                       "retried": 0, "shed": 0,
                                       "deadline_exceeded": 0}
         self._stats_lock = threading.Lock()
+        self._t_start = time.perf_counter()
+        # executor item counters reset on reconfigure(); the lifetime
+        # total rebases over the retired epochs so snapshot()'s ``totals``
+        # block stays monotonic across hot-swaps
+        self._items_epoch_base = 0
         self._recent_lat: deque = deque(maxlen=latency_window)
         self._window_lat: List[float] = []
         self._snap_state = {"t": time.perf_counter(),
@@ -300,6 +310,8 @@ class PipelinedModelServer:
         wait happens outside it so the admission loop keeps flowing."""
         with self._admission:
             futures = [self.executor.submit(p) for p in payloads]
+        with self._stats_lock:
+            self.stats["admitted"] += len(futures)
         outputs: List[Any] = []
         errors: List[BaseException] = []
         done = 0
@@ -377,6 +389,8 @@ class PipelinedModelServer:
         except RuntimeError as e:       # executor stopping under our feet
             self._finish(req, None, PipelineStopped(str(e)))
             return
+        with self._stats_lock:
+            self.stats["admitted"] += 1
         self._consec_sheds = 0          # admitted: reset backoff ladder
         fut.add_done_callback(
             lambda f, r=req: self._on_done(r, f))
@@ -441,6 +455,11 @@ class PipelinedModelServer:
                 self._recent_lat.append(lat)
                 self._window_lat.append(lat)
         req.event.set()
+        if req.on_done is not None:
+            try:
+                req.on_done(req)
+            except Exception:
+                pass            # an observer must never break completion
 
     # -- accounting ----------------------------------------------------------
     def snapshot(self) -> Dict[str, Any]:
@@ -463,6 +482,7 @@ class PipelinedModelServer:
             window = self._window_lat
             self._window_lat = []
             requests = self.stats["requests"]
+            admitted = self.stats["admitted"]
             completed = self.stats["completed"]
             failed = self.stats["failed"]
             retried = self.stats["retried"]
@@ -498,6 +518,22 @@ class PipelinedModelServer:
             "queue_depth": self.batcher.q.qsize(),
             "in_flight": self.executor.in_flight,
             "latency": latency_percentiles(window),
+            # lifetime view alongside the delta view: cumulative counters
+            # since construction (server-level counters survive
+            # reconfigure() by construction; the executor item total is
+            # rebased across epochs).  The fleet autoscaler folds these
+            # into SLO headroom; ops dashboards read them directly.
+            "totals": {
+                "admitted": admitted,
+                "requests": requests,
+                "completed": completed,
+                "failed": failed,
+                "retried": retried,
+                "shed": shed,
+                "deadline_exceeded": deadline_exceeded,
+                "stage_items": self._items_epoch_base + sum(items),
+                "uptime_s": now - self._t_start,
+            },
         }
         self._snap_state = {"t": now, "busy": busy, "items": items,
                             "requests": requests, "completed": completed,
@@ -519,6 +555,9 @@ class PipelinedModelServer:
             while (self.executor.in_flight
                    and time.monotonic() < deadline):
                 time.sleep(0.001)
+            # fold the retiring epoch's item counters into the lifetime
+            # total before its counters are lost with the executor
+            self._items_epoch_base += sum(self.executor.items_snapshot())
             self.executor.stop(
                 timeout=max(0.1, deadline - time.monotonic()))
             self.plan = plan

@@ -24,6 +24,7 @@ from repro.api import (DeploymentSpec, Deployment, PlanReport, PlanStrategy,
 from repro.core import (DeviceSpec, EdgeTPUModel, PlacementPlan, Topology,
                         chain_graph)
 from repro.core import planner as legacy
+from repro.fleet import FleetMemberSpec, FleetSpec
 from repro.models.cnn import REAL_CNNS
 from repro.serving import latency_percentiles
 
@@ -289,7 +290,9 @@ if HAVE_HYPOTHESIS:
         microbatch=st.one_of(st.none(),
                              st.integers(min_value=1, max_value=32)),
         microbatch_wait_s=st.floats(min_value=0, max_value=1,
-                                    allow_nan=False))
+                                    allow_nan=False),
+        slo_p95_ms=st.one_of(st.none(), _pos_float),
+        slo_throughput_rps=st.one_of(st.none(), _pos_float))
 
     @settings(max_examples=60, deadline=None)
     @given(spec=_spec)
@@ -325,6 +328,51 @@ if HAVE_HYPOTHESIS:
     @given(report=_report)
     def test_report_json_roundtrip_property(report):
         assert PlanReport.from_json(report.to_json()) == report
+
+    # a member spec must leave its device shape to the pool-split solver
+    _member_deploy_spec = st.builds(
+        DeploymentSpec,
+        model=st.sampled_from(("cnn:ResNet50", "synthetic-cnn:8")),
+        strategy=st.sampled_from(("balanced", "placement")),
+        deadline_ms=st.one_of(st.none(), _pos_float),
+        max_batch=st.integers(min_value=1, max_value=256),
+        slo_p95_ms=st.one_of(st.none(), _pos_float),
+        slo_throughput_rps=st.one_of(st.none(), _pos_float))
+
+    @st.composite
+    def _fleet_specs(draw):
+        n = draw(st.integers(min_value=1, max_value=4))
+        members = tuple(
+            FleetMemberSpec(
+                name=f"m{i}",
+                spec=draw(_member_deploy_spec),
+                share=draw(st.floats(min_value=0.1, max_value=16,
+                                     allow_nan=False)),
+                min_devices=draw(st.integers(min_value=1, max_value=2)),
+                max_devices=draw(st.one_of(
+                    st.none(), st.integers(min_value=2, max_value=8))))
+            for i in range(n))
+        floor = sum(m.min_devices for m in members)
+        # either a partitioned pool that fits every floor, or a pool
+        # smaller than the member count (the time-sliced fallback,
+        # where per-member floors do not apply)
+        pools = [st.integers(min_value=floor, max_value=floor + 8)]
+        if n > 1:
+            pools.append(st.integers(min_value=1, max_value=n - 1))
+        budget = draw(st.one_of(*pools))
+        return FleetSpec(
+            members=members, device_budget=budget,
+            rebalance_cooldown_windows=draw(
+                st.integers(min_value=0, max_value=8)),
+            rebalance_headroom=draw(
+                st.floats(min_value=0.5, max_value=4, allow_nan=False)))
+
+    @settings(max_examples=60, deadline=None)
+    @given(fleet=_fleet_specs())
+    def test_fleet_spec_json_roundtrip_property(fleet):
+        doc = fleet.to_json()
+        assert FleetSpec.from_json(doc) == fleet
+        json.loads(doc)
 else:
     @pytest.mark.skip(reason="property tests need hypothesis "
                              "(pip install -r requirements-dev.txt)")
@@ -549,12 +597,36 @@ def test_deployment_requires_stage_functions():
         dep.executor()
 
 
-def test_serve_twice_requires_close():
+def test_serve_twice_requires_server_stop():
     dep = deploy(DeploymentSpec(stages=2, strategy="comp"),
                  graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
     with dep:
-        dep.serve()
+        srv = dep.serve()
         with pytest.raises(RuntimeError, match="live server"):
             dep.serve()
-    dep.serve()                   # after close() a new server is allowed
+        srv.stop()
+        dep.serve()               # stopping the server frees the slot
+
+
+def test_close_is_terminal_and_idempotent():
+    dep = deploy(DeploymentSpec(stages=2, strategy="comp"),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    dep.serve()
     dep.close()
+    assert dep.closed
+    dep.close()                   # idempotent: a second close is a no-op
+    assert dep.closed
+    for call in (dep.serve, dep.executor,
+                 lambda: dep.reconfigure(stages=3)):
+        with pytest.raises(RuntimeError, match="closed"):
+            call()
+
+
+def test_closed_deployment_rejects_with_reentry():
+    dep = deploy(DeploymentSpec(stages=2, strategy="comp"),
+                 graph=toy_graph(), stage_fn_builder=_stage_fn_builder)
+    with dep:
+        pass
+    with pytest.raises(RuntimeError, match="closed"):
+        with dep:
+            pass

@@ -1,0 +1,480 @@
+"""Multi-tenant fleet tests (ISSUE 9): FleetSpec validation + JSON
+round-trips, the pool-split solver (minimax DP vs a public brute force,
+bounds, fixed splits, time-sliced fallback), the weighted-fair admission
+router (deterministic DRR order, router-side deadlines, stop-drain), the
+guarded autoscaler state machine (move -> guard -> commit / rollback,
+donor floors), and the ``deploy_fleet`` lifecycle over live member
+deployments.
+"""
+import json
+import os
+import time
+
+import pytest
+
+from repro.api import DeploymentSpec
+from repro.core.pipeline import PipelineStopped
+from repro.core.topology import DeviceSpec, Topology
+from repro.fleet import (Fleet, FleetMemberSpec, FleetSpec, deploy_fleet,
+                         plan_fleet)
+from repro.fleet.placement import slo_norm
+from repro.fleet.router import FleetRouter
+from repro.fleet.scenario import FleetScenario, TrafficPhase
+from repro.serving.server import DeadlineExceeded, Request, _RID
+
+MODEL = "synthetic-cnn:8"
+
+
+def member(name, *, model=MODEL, share=1.0, min_devices=1,
+           max_devices=None, **spec_kw):
+    return FleetMemberSpec(
+        name=name, spec=DeploymentSpec(model=model, **spec_kw),
+        share=share, min_devices=min_devices, max_devices=max_devices)
+
+
+def identity_builders(spec):
+    """Stage-function builders that pass payloads through unchanged."""
+    def builder(pl):
+        return [(lambda x: x) for _ in pl.stage_depth_ranges]
+    return {n: builder for n in spec.member_names}
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec validation + JSON round-trip
+# ---------------------------------------------------------------------------
+def test_member_spec_validation():
+    with pytest.raises(ValueError, match="name"):
+        FleetMemberSpec(name="", spec=DeploymentSpec(model=MODEL))
+    with pytest.raises(ValueError, match="model ref"):
+        FleetMemberSpec(name="a", spec=DeploymentSpec(stages=2))
+    with pytest.raises(ValueError, match="share"):
+        member("a", share=0.0)
+    with pytest.raises(ValueError, match="min_devices"):
+        member("a", min_devices=0)
+    with pytest.raises(ValueError, match="max_devices"):
+        member("a", min_devices=3, max_devices=2)
+    # the pool-split solver owns the device shape
+    for pin in ({"stages": 2}, {"device_budget": 2},
+                {"topology": Topology.homogeneous(2)}):
+        with pytest.raises(ValueError, match="pool-split"):
+            FleetMemberSpec(name="a",
+                            spec=DeploymentSpec(model=MODEL, **pin))
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="at least one member"):
+        FleetSpec(members=(), device_budget=2)
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetSpec(members=(member("a"), member("a")), device_budget=2)
+    with pytest.raises(ValueError, match="exactly one"):
+        FleetSpec(members=(member("a"),))
+    with pytest.raises(ValueError, match="exactly one"):
+        FleetSpec(members=(member("a"),), device_budget=2,
+                  topology=Topology.homogeneous(2))
+    with pytest.raises(ValueError, match="min_devices"):
+        FleetSpec(members=(member("a", min_devices=3),
+                           member("b", min_devices=2)), device_budget=4)
+    # ...but a pool smaller than the member count is legal (time-sliced)
+    FleetSpec(members=(member("a", min_devices=3), member("b")),
+              device_budget=1)
+
+
+def test_fleet_spec_json_roundtrip():
+    fs = FleetSpec(
+        members=(member("a", share=2.5, min_devices=1, max_devices=3,
+                        slo_p95_ms=40.0, slo_throughput_rps=100.0),
+                 member("b", model="synthetic-cnn:12")),
+        device_budget=4, rebalance_cooldown_windows=3,
+        rebalance_headroom=1.5)
+    doc = fs.to_json()
+    assert FleetSpec.from_json(doc) == fs
+    json.loads(doc)                      # plain JSON, no repr smuggling
+
+    # heterogeneous pool round-trips device-by-device
+    topo = Topology(devices=(DeviceSpec(name="big", compute_scale=2.0),
+                             DeviceSpec(name="small")), name="duo")
+    fs2 = FleetSpec(members=(member("a"), member("b")), topology=topo)
+    assert FleetSpec.from_json(fs2.to_json()) == fs2
+
+    with pytest.raises(ValueError, match="fleet spec"):
+        FleetSpec.from_json(json.dumps({"format": "something/else"}))
+
+
+def test_example_fleet_json_parses():
+    path = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "examples", "fleet.json")
+    with open(path) as f:
+        fs = FleetSpec.from_json(f.read())
+    assert fs.pool().n_devices == 9
+    assert fs.member_names == ("vision", "detect", "embed")
+    assert FleetSpec.from_json(fs.to_json()) == fs
+
+
+# ---------------------------------------------------------------------------
+# SLO normalization
+# ---------------------------------------------------------------------------
+def test_slo_norm_terms():
+    b = 0.010
+    p95 = member("a", slo_p95_ms=20.0)
+    assert slo_norm(p95, b) == pytest.approx(0.5)
+    rps = member("a", slo_throughput_rps=300.0)
+    assert slo_norm(rps, b) == pytest.approx(3.0)
+    both = member("a", slo_p95_ms=20.0, slo_throughput_rps=300.0)
+    assert slo_norm(both, b) == pytest.approx(3.0)    # max of terms
+    none = member("a", share=4.0)                     # share fallback
+    assert slo_norm(none, b) == pytest.approx(0.04)
+
+
+# ---------------------------------------------------------------------------
+# pool-split solver
+# ---------------------------------------------------------------------------
+def _skewed_fleet(pool=6, **fleet_kw):
+    return FleetSpec(members=(
+        member("heavy", model="synthetic-cnn:12", share=2.0,
+               slo_p95_ms=40.0, slo_throughput_rps=9000.0),
+        member("mid", slo_p95_ms=25.0, slo_throughput_rps=2500.0),
+        member("light", slo_p95_ms=25.0, slo_throughput_rps=1200.0),
+    ), device_budget=pool, **fleet_kw)
+
+
+def test_plan_fleet_matches_public_brute_force():
+    fs = _skewed_fleet(pool=6)
+    solved = plan_fleet(fs)
+    assert solved.mode == "partitioned"
+    assert sum(solved.device_counts().values()) == 6
+    # every split reachable through the public fixed_counts path
+    best = None
+    for kh in range(1, 5):
+        for km in range(1, 5):
+            kl = 6 - kh - km
+            if kl < 1:
+                continue
+            priced = plan_fleet(fs, fixed_counts={"heavy": kh, "mid": km,
+                                                  "light": kl})
+            if best is None or priced.worst_norm < best:
+                best = priced.worst_norm
+    assert solved.worst_norm == pytest.approx(best)
+    # the skew is real: the heavy member holds the most devices
+    counts = solved.device_counts()
+    assert counts["heavy"] == max(counts.values())
+
+
+def test_plan_fleet_honors_device_bounds():
+    fs = FleetSpec(members=(
+        member("heavy", model="synthetic-cnn:12", share=2.0,
+               slo_p95_ms=40.0, slo_throughput_rps=9000.0,
+               max_devices=2),
+        member("mid", slo_p95_ms=25.0, slo_throughput_rps=2500.0,
+               min_devices=2),
+        member("light", slo_p95_ms=25.0, slo_throughput_rps=1200.0),
+    ), device_budget=6)
+    counts = plan_fleet(fs).device_counts()
+    assert counts["heavy"] <= 2
+    assert counts["mid"] >= 2
+    assert sum(counts.values()) == 6
+
+
+def test_plan_fleet_infeasible_max_devices():
+    fs = FleetSpec(members=(member("a", max_devices=2),
+                            member("b", max_devices=2)),
+                   device_budget=6)
+    with pytest.raises(ValueError, match="no feasible pool split"):
+        plan_fleet(fs)
+
+
+def test_fixed_counts_validation():
+    fs = _skewed_fleet(pool=6)
+    with pytest.raises(ValueError, match="cover exactly"):
+        plan_fleet(fs, fixed_counts={"heavy": 6})
+    with pytest.raises(ValueError, match="sum"):
+        plan_fleet(fs, fixed_counts={"heavy": 1, "mid": 1, "light": 1})
+    with pytest.raises(ValueError, match=">= 1"):
+        plan_fleet(fs, fixed_counts={"heavy": 5, "mid": 1, "light": 0})
+
+
+def test_time_sliced_fallback():
+    fs = FleetSpec(members=(member("a", share=3.0, slo_p95_ms=30.0),
+                            member("b", share=1.0, slo_p95_ms=30.0)),
+                   device_budget=1)
+    p = plan_fleet(fs)
+    assert p.mode == "time_sliced"
+    a, b = p.allocation("a"), p.allocation("b")
+    assert a.device_indices == b.device_indices == (0,)
+    assert a.time_share == pytest.approx(0.75)
+    assert b.time_share == pytest.approx(0.25)
+    # co-residency inflates the effective bottleneck by 1/time_share
+    assert a.bottleneck_s == pytest.approx(
+        a.plan.max_stage_time_s / a.time_share)
+    assert a.norm_cost == pytest.approx(
+        slo_norm(fs.member("a"), a.bottleneck_s))
+
+
+# ---------------------------------------------------------------------------
+# admission router (deterministic stubs: no live servers needed)
+# ---------------------------------------------------------------------------
+class _StubServer:
+    """Completes every dispatch synchronously, before the router can
+    install its completion hook — exercising the completed-early path."""
+
+    def __init__(self, log, name):
+        self.log = log
+        self.name = name
+        self.stopped = False
+
+    def submit(self, payload, deadline_s=None):
+        req = Request(rid=next(_RID), payload=payload)
+        req.result = payload
+        req.t_done = time.perf_counter()
+        req.event.set()
+        self.log.append((self.name, payload))
+        return req
+
+
+def _stub_router(shares, log):
+    servers = {n: (lambda s=_StubServer(log, n): s)() for n in shares}
+    # suppliers, as the real fleet wires them
+    return FleetRouter(servers={n: (lambda srv=s: srv)
+                                for n, s in servers.items()},
+                       shares=shares), servers
+
+
+def test_router_validation():
+    log = []
+    with pytest.raises(ValueError, match="same"):
+        FleetRouter(servers={"a": lambda: None}, shares={"b": 1.0})
+    with pytest.raises(ValueError, match="at least one"):
+        FleetRouter(servers={}, shares={})
+    with pytest.raises(ValueError, match="share"):
+        _stub_router({"a": 0.0}, log)
+
+
+def test_router_unknown_member():
+    router, _ = _stub_router({"a": 1.0}, [])
+    with pytest.raises(KeyError, match="no fleet member"):
+        router.submit("nope", 1)
+
+
+def test_router_drr_respects_shares():
+    """With a full backlog queued before dispatch starts, DRR order is
+    deterministic: shares 2:1 dispatch in a a b sweeps."""
+    log = []
+    router, _ = _stub_router({"a": 2.0, "b": 1.0}, log)
+    reqs = []
+    for i in range(12):
+        reqs.append(router.submit("a", ("a", i)))
+    for i in range(6):
+        reqs.append(router.submit("b", ("b", i)))
+    with router:                       # start dispatching
+        for r in reqs:
+            assert r.event.wait(5.0)
+    names = [n for n, _ in log]
+    # every prefix stays near the 2:1 share ratio while both backlogged
+    assert names[:6] == ["a", "a", "b", "a", "a", "b"]
+    assert names.count("a") == 12 and names.count("b") == 6
+    # per-member dispatch preserved submission order
+    assert [p for n, p in log if n == "a"] == [("a", i) for i in range(12)]
+    snap = router.snapshot()
+    assert snap["members"]["a"]["completed"] == 12
+    assert snap["members"]["b"]["completed"] == 6
+
+
+def test_router_deadline_expires_in_queue():
+    log = []
+    router, _ = _stub_router({"a": 1.0}, log)
+    done = []
+    req = router.submit("a", 1, deadline_s=1e-4,
+                        on_done=lambda r: done.append(r))
+    time.sleep(0.01)                   # expire while still queued
+    with router:
+        assert req.event.wait(5.0)
+    assert isinstance(req.error, DeadlineExceeded)
+    assert req.error.where == "router"
+    assert done == [req]
+    assert router.snapshot()["members"]["a"]["expired_in_router"] == 1
+    assert log == []                   # never reached the member server
+
+
+def test_router_default_member_deadline():
+    log = []
+    servers = {"a": lambda: _StubServer(log, "a")}
+    router = FleetRouter(servers=servers, shares={"a": 1.0},
+                         deadlines_s={"a": 1e-4})
+    req = router.submit("a", 1)
+    time.sleep(0.01)
+    with router:
+        assert req.event.wait(5.0)
+    assert isinstance(req.error, DeadlineExceeded)
+
+
+def test_router_stop_drains_queue():
+    log = []
+    router, _ = _stub_router({"a": 1.0}, log)
+    queued = [router.submit("a", i) for i in range(3)]
+    router.stop()                      # never started: all still queued
+    for r in queued:
+        assert r.event.is_set()
+        assert isinstance(r.error, PipelineStopped)
+    # post-stop submissions complete immediately with the same error
+    late = router.submit("a", 99)
+    assert late.event.is_set()
+    assert isinstance(late.error, PipelineStopped)
+
+
+def test_router_routes_to_dead_member():
+    router = FleetRouter(servers={"a": lambda: None}, shares={"a": 1.0})
+    req = router.submit("a", 1)
+    with router:
+        assert req.event.wait(5.0)
+    assert isinstance(req.error, PipelineStopped)
+
+
+# ---------------------------------------------------------------------------
+# autoscaler state machine (real deployments, injected observations)
+# ---------------------------------------------------------------------------
+def _two_member_fleet(**fleet_kw):
+    spec = FleetSpec(members=(member("a", slo_p95_ms=20.0),
+                              member("b", slo_p95_ms=20.0)),
+                     device_budget=4, **fleet_kw)
+    return spec, deploy_fleet(spec, stage_fn_builders=identity_builders(spec))
+
+
+def test_autoscaler_steady_without_signal():
+    _, fleet = _two_member_fleet()
+    with fleet:
+        auto = fleet.autoscaler
+        assert auto is not None
+        ev = auto.tick()
+        assert ev["event"] == "steady"
+        assert ev["norms"] == {}
+
+
+def test_autoscaler_move_guard_commit():
+    _, fleet = _two_member_fleet()
+    with fleet:
+        auto = fleet.autoscaler
+        before = dict(auto.device_counts)
+        auto._norm_ewma["a"] = 5.0          # "a" blows through its SLO
+        ev = auto.tick()
+        assert ev["event"] == "move"
+        assert ev["move"] == {"from": "b", "to": "a"}
+        after = auto.device_counts
+        assert after["a"] == before["a"] + 1
+        assert after["b"] == before["b"] - 1
+        # the member deployments really were resized (hot-swap replan)
+        assert fleet.deployments["a"].plan.n_devices == after["a"]
+        assert fleet.deployments["b"].plan.n_devices == after["b"]
+        assert auto.tick()["event"] == "guard"
+        verdict = auto.tick()               # EWMA reset: no pressure left
+        assert verdict["event"] == "commit"
+        assert auto.committed_moves == 1
+        assert auto.tick()["event"] == "cooldown"
+
+
+def test_autoscaler_rollback_restores_split():
+    _, fleet = _two_member_fleet()
+    with fleet:
+        auto = fleet.autoscaler
+        before = dict(auto.device_counts)
+        auto._norm_ewma["a"] = 5.0
+        assert auto.tick()["event"] == "move"
+        assert auto.tick()["event"] == "guard"
+        # receiver got *worse* post-move: the guard must roll back
+        auto._norm_ewma["a"] = 6.0
+        auto._norm_ewma["b"] = 0.5
+        verdict = auto.tick()
+        assert verdict["event"] == "rollback"
+        assert auto.device_counts == before
+        assert fleet.deployments["a"].plan.n_devices == before["a"]
+        assert auto.committed_moves == 0
+
+
+def test_autoscaler_honors_donor_floor():
+    spec = FleetSpec(members=(member("a", slo_p95_ms=20.0),
+                              member("b", slo_p95_ms=20.0,
+                                     min_devices=2)),
+                     device_budget=4)
+    fleet = deploy_fleet(spec, stage_fn_builders=identity_builders(spec))
+    with fleet:
+        auto = fleet.autoscaler
+        counts = dict(auto.device_counts)
+        auto._norm_ewma["a"] = 5.0
+        if counts["b"] <= 2:               # b cannot shed below its floor
+            assert auto.tick()["event"] == "steady"
+            assert auto.device_counts == counts
+
+
+# ---------------------------------------------------------------------------
+# deploy_fleet lifecycle
+# ---------------------------------------------------------------------------
+def test_deploy_fleet_requires_builders_for_every_member():
+    spec = FleetSpec(members=(member("a"), member("b")), device_budget=2)
+    with pytest.raises(ValueError, match="missing members"):
+        deploy_fleet(spec, stage_fn_builders={"a": lambda pl: []})
+
+
+def test_fleet_submit_end_to_end_and_close():
+    spec, fleet = _two_member_fleet()
+    reqs = [fleet.submit("a", i) for i in range(4)]
+    reqs += [fleet.submit("b", 10 + i) for i in range(4)]
+    for r in reqs:
+        assert r.event.wait(10.0)
+        assert r.error is None
+    assert [r.result for r in reqs] == [0, 1, 2, 3, 10, 11, 12, 13]
+    snap = fleet.snapshot()
+    assert set(snap["router"]["members"]) == {"a", "b"}
+    assert set(snap["members"]) == {"a", "b"}
+    assert sum(snap["device_counts"].values()) == 4
+    fleet.close()
+    fleet.close()                          # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        fleet.submit("a", 0)
+    for dep in fleet.deployments.values():
+        assert dep.closed
+
+
+def test_single_member_fleet_skips_autoscaler():
+    spec = FleetSpec(members=(member("solo"),), device_budget=2)
+    fleet = deploy_fleet(spec, stage_fn_builders=identity_builders(spec))
+    with fleet:
+        assert fleet.autoscaler is None
+        req = fleet.submit("solo", 7)
+        assert req.event.wait(10.0)
+        assert req.result == 7
+
+
+def test_time_sliced_fleet_serves():
+    spec = FleetSpec(members=(member("a", share=3.0), member("b")),
+                     device_budget=1)
+    fleet = deploy_fleet(spec, stage_fn_builders=identity_builders(spec))
+    with fleet:
+        assert fleet.placement.mode == "time_sliced"
+        assert fleet.autoscaler is None    # nothing to move
+        reqs = [fleet.submit(n, i) for i, n in
+                enumerate(["a", "b", "a", "b"])]
+        for r in reqs:
+            assert r.event.wait(10.0)
+            assert r.error is None
+
+
+# ---------------------------------------------------------------------------
+# scenario driver (the bench/launch harness itself)
+# ---------------------------------------------------------------------------
+def test_scenario_drive_audit_clean():
+    spec = FleetSpec(members=(member("a", share=2.0, slo_p95_ms=50.0),
+                              member("b", slo_p95_ms=50.0)),
+                     device_budget=4)
+    sc = FleetScenario(spec, {"a": 1e-4, "b": 1e-4})
+    fleet = sc.deploy()
+    with fleet:
+        metrics = sc.drive(fleet, [TrafficPhase(windows=2,
+                                                rates={"a": 4, "b": 2})])
+    audit = sc.audit()
+    for name in ("a", "b"):
+        assert audit[name]["lost"] == 0
+        assert audit[name]["misordered"] == 0
+        assert audit[name]["exited"] == audit[name]["submitted"]
+    assert metrics["a"]["submitted"] == 8
+    assert metrics["b"]["submitted"] == 4
+    att = sc.attainment(metrics)
+    assert set(att) == {"a", "b"}
+    assert FleetScenario.worst(att) <= 1.0
