@@ -1,0 +1,412 @@
+"""Decode serving-tier benchmark (ISSUE 10 acceptance).
+
+Two comparisons, one artifact (``BENCH_decode.json``):
+
+1. **Placement (modeled)** — steady-state decode tokens/s of the
+   KV-cache-aware ``decode_placement`` plan vs the weight-balanced
+   (Algorithm 1) cuts, both priced under the *same* decode step cost
+   (:func:`repro.decode.placement.step_cost_fn`), across 2-3 concurrency
+   levels per LM.  The strategy carries a hard never-worse guarantee, so
+   decode-aware >= weight-balanced on every row; the interesting column
+   is the gap where KV pressure bends the economy away from weights.
+
+2. **Runtime (measured)** — the continuous-batching
+   :class:`~repro.decode.scheduler.DecodeScheduler` (prefill-join at
+   token boundaries over the running batch) vs the sequential baseline
+   (one request decoded to completion at batch 1 before the next is
+   admitted) on the real jitted :class:`PipelineDecodeEngine`, same
+   prompts, same weights (float32 so greedy argmax ties cannot flake).
+   Records tokens/s, the speedup, and p95 inter-token latency, and
+   audits every stream: zero lost tokens, zero misordered indices, and
+   continuous-batch tokens bit-equal to the sequential reference.
+
+Acceptance floors (asserted in full mode): decode-aware >=
+weight-balanced tokens/s on every modeled row, continuous batching >=
+1.3x sequential at concurrency >= 4, zero lost/misordered tokens.
+
+    PYTHONPATH=src python -m benchmarks.decode_bench
+    PYTHONPATH=src python -m benchmarks.decode_bench --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.api import DeploymentSpec, plan, resolve_model_graph
+from repro.core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
+from repro.core.segmentation import balanced_split, segment_ranges
+from repro.decode.costing import DecodeCostSource, DecodeOperatingPoint
+from repro.decode.engine import PipelineDecodeEngine
+from repro.decode.placement import decode_config_for, step_cost_fn
+from repro.decode.scheduler import DecodeScheduler
+
+from .common import emit, write_bench
+
+MODELED_ARCHS = ("qwen3-1.7b", "qwen2.5-14b")
+MODELED_CONCURRENCY = (2, 4, 8)
+MODELED_CONTEXT = 512
+MODELED_STAGES = 4
+
+KV_PRESSURE = (("qwen3-1.7b", 8, 2048), ("qwen2.5-14b", 8, 2048))
+
+RUNTIME_ARCH = "qwen3-1.7b"
+RUNTIME_CONCURRENCY = (2, 4)
+RUNTIME_CONTEXT = 64
+RUNTIME_STAGES = 2
+
+
+# ---------------------------------------------------------------------------
+# 1. modeled placement: decode-aware vs weight-balanced cuts
+# ---------------------------------------------------------------------------
+def modeled_row(arch: str, stages: int, concurrency: int,
+                max_context: int) -> Dict:
+    g = resolve_model_graph(f"lm:{arch}")
+    pl = plan(DeploymentSpec(model=f"lm:{arch}", strategy="decode_placement",
+                             stages=stages, workload="decode",
+                             max_context=max_context,
+                             decode_concurrency=concurrency), graph=g)
+    rep = pl.report
+
+    # weight-balanced baseline: Algorithm 1 cuts priced under the *same*
+    # decode step cost the strategy's DP minimized
+    cfg = decode_config_for(f"lm:{arch}")
+    point = DecodeOperatingPoint(concurrency=concurrency,
+                                 max_context=max_context)
+    base = EdgeTPUSpec()
+    model = EdgeTPUModel(g, base,
+                         cost_source=DecodeCostSource(cfg, point))
+    cost = step_cost_fn(model.engine, base, point)
+    bal = balanced_split(g.params_per_depth(), stages)
+    bal_pace = max(cost(lo, hi)
+                   for lo, hi in segment_ranges(g.depth, bal))
+    bal_tps = concurrency / bal_pace if bal_pace not in (0.0, math.inf) \
+        else 0.0
+
+    return {
+        "arch": arch, "stages": stages, "concurrency": concurrency,
+        "max_context": max_context,
+        "decode_aware_tok_s": round(rep.decode_tokens_per_s, 1),
+        "weight_balanced_tok_s": round(bal_tps, 1),
+        "balanced_feasible": bal_pace != math.inf,
+        "gain": (round(rep.decode_tokens_per_s / bal_tps, 3)
+                 if bal_tps > 0 else float("inf")),
+        "kv_headroom_pct": round(rep.kv_headroom_pct, 1),
+        "p95_proxy_step_ms": (round(1e3 * concurrency
+                                    / rep.decode_tokens_per_s, 3)
+                              if rep.decode_tokens_per_s > 0 else None),
+    }
+
+
+def bench_modeled(archs: Sequence[str], stages: int,
+                  concurrencies: Sequence[int],
+                  max_context: int) -> List[Dict]:
+    rows = []
+    for arch in archs:
+        for c in concurrencies:
+            r = modeled_row(arch, stages, c, max_context)
+            rows.append(r)
+            print(f"{arch:16s} c={c:<2d} ctx={max_context}: decode-aware "
+                  f"{r['decode_aware_tok_s']:9.1f} tok/s vs balanced "
+                  f"{r['weight_balanced_tok_s']:9.1f} "
+                  f"({r['gain']}x, KV headroom "
+                  f"{r['kv_headroom_pct']:.0f}%)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# 1b. KV pressure: the operating point changes the *required* stage count
+# ---------------------------------------------------------------------------
+def weight_auto_stages(g, base: EdgeTPUSpec) -> int:
+    """The stage count a weight-only planner picks: the smallest count
+    whose balanced cuts hold every stage's weights on-chip (the paper's
+    §5.2.2 no-spill rule) — blind to decode KV."""
+    eng = EdgeTPUModel(g, base).engine
+    for s in range(1, g.depth + 1):
+        cuts = balanced_split(g.params_per_depth(), s)
+        if all(eng.segment_split(lo, hi)[1] == 0
+               for lo, hi in segment_ranges(g.depth, cuts)):
+            return s
+    return g.depth
+
+
+def kv_pressure_row(arch: str, concurrency: int, max_context: int) -> Dict:
+    """Weight-balanced at its own (weight-derived) stage count vs
+    decode-aware auto-staging, both priced under the decode step cost.
+    At a hot operating point the weight count's stages blow the KV cap
+    (0 tok/s — an OOM in practice) while the decode planner scales out."""
+    g = resolve_model_graph(f"lm:{arch}")
+    base = EdgeTPUSpec()
+    cfg = decode_config_for(f"lm:{arch}")
+    point = DecodeOperatingPoint(concurrency=concurrency,
+                                 max_context=max_context)
+    model = EdgeTPUModel(g, base,
+                         cost_source=DecodeCostSource(cfg, point))
+    cost = step_cost_fn(model.engine, base, point)
+
+    s_w = weight_auto_stages(g, base)
+    bal = balanced_split(g.params_per_depth(), s_w)
+    bal_pace = max(cost(lo, hi) for lo, hi in segment_ranges(g.depth, bal))
+    bal_tps = concurrency / bal_pace if bal_pace not in (0.0, math.inf) \
+        else 0.0
+
+    pl = plan(DeploymentSpec(model=f"lm:{arch}",
+                             strategy="decode_placement", workload="decode",
+                             max_context=max_context,
+                             decode_concurrency=concurrency), graph=g)
+    return {
+        "arch": arch, "concurrency": concurrency,
+        "max_context": max_context,
+        "weight_auto_stages": s_w,
+        "weight_balanced_tok_s": round(bal_tps, 1),
+        "balanced_feasible": bal_pace != math.inf,
+        "decode_auto_stages": pl.n_stages,
+        "decode_aware_tok_s": round(pl.report.decode_tokens_per_s, 1),
+        "kv_headroom_pct": round(pl.report.kv_headroom_pct, 1),
+    }
+
+
+def bench_kv_pressure(rows_in: Sequence[Tuple[str, int, int]]) -> List[Dict]:
+    rows = []
+    for arch, c, ctx in rows_in:
+        r = kv_pressure_row(arch, c, ctx)
+        rows.append(r)
+        bal = (f"{r['weight_balanced_tok_s']:.1f} tok/s"
+               if r["balanced_feasible"] else "KV-infeasible (OOM)")
+        print(f"{arch:16s} c={c:<2d} ctx={ctx}: weight planner picks "
+              f"{r['weight_auto_stages']} stage(s) -> {bal}; decode-aware "
+              f"scales to {r['decode_auto_stages']} -> "
+              f"{r['decode_aware_tok_s']:.1f} tok/s "
+              f"({r['kv_headroom_pct']:.0f}% headroom)")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# 2. runtime: continuous batching vs sequential decode
+# ---------------------------------------------------------------------------
+def audit_streams(reqs, expected_tokens: int) -> Dict[str, int]:
+    """Drain every request's stream; count lost and misordered tokens."""
+    lost = misordered = 0
+    for req in reqs:
+        got: List[Tuple[int, int]] = []
+        while True:
+            try:
+                got.append(req.stream.get_nowait())
+            except Exception:
+                break
+        lost += max(0, expected_tokens - len(got))
+        misordered += sum(1 for pos, (idx, _) in enumerate(got)
+                          if idx != pos)
+        # the stream must agree with the accumulated token list
+        misordered += sum(1 for (_, tok), acc in zip(got, req.tokens)
+                          if tok != acc)
+    return {"lost": lost, "misordered": misordered}
+
+
+def sequential_decode(engine: PipelineDecodeEngine,
+                      prompts: np.ndarray,
+                      max_new_tokens: int) -> Tuple[float, List[List[int]]]:
+    """The baseline: each request decoded to completion at batch 1 before
+    the next is admitted.  Returns (seconds, token lists)."""
+    outs: List[List[int]] = []
+    t0 = time.perf_counter()
+    for prompt in prompts:
+        tok = engine.prefill(0, prompt)
+        toks = [tok]
+        ctx = prompt.size + 1
+        while len(toks) < max_new_tokens:
+            tok = engine.step([0], [ctx], [tok])[0]
+            ctx += 1
+            toks.append(tok)
+        outs.append(toks)
+    return time.perf_counter() - t0, outs
+
+
+def runtime_row(cfg, params, concurrency: int, n_requests: int,
+                prompt_len: int, max_new_tokens: int, max_context: int,
+                stage_blocks: Optional[List[int]]) -> Dict:
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab, (n_requests, prompt_len),
+                           dtype=np.int32)
+
+    # continuous batching over the running batch
+    engine = PipelineDecodeEngine(cfg, params, n_slots=concurrency,
+                                  max_context=max_context,
+                                  stage_blocks=stage_blocks)
+    sched = DecodeScheduler(engine, max_context=max_context,
+                            queue_size=max(64, 2 * n_requests))
+    with engine, sched:
+        sched.submit(prompts[0], max_new_tokens=2).result(timeout=600)
+        sched.snapshot()                      # reset the delta window
+        t0 = time.perf_counter()
+        reqs = [sched.submit(p, max_new_tokens=max_new_tokens)
+                for p in prompts]
+        cont_tokens = [r.result(timeout=600) for r in reqs]
+        cont_s = time.perf_counter() - t0
+        snap = sched.snapshot()
+    audit = audit_streams(reqs, max_new_tokens)
+
+    # sequential baseline: batch-1 engine, same weights, same prompts
+    seq_engine = PipelineDecodeEngine(cfg, params, n_slots=1,
+                                      max_context=max_context,
+                                      stage_blocks=stage_blocks)
+    with seq_engine:
+        sequential_decode(seq_engine, prompts[:1], 2)      # warm the jit
+        seq_s, seq_tokens = sequential_decode(seq_engine, prompts,
+                                              max_new_tokens)
+
+    mismatch = sum(1 for a, b in zip(cont_tokens, seq_tokens) if a != b)
+    total = n_requests * max_new_tokens
+    return {
+        "concurrency": concurrency, "n_requests": n_requests,
+        "prompt_len": prompt_len, "max_new_tokens": max_new_tokens,
+        "continuous_tok_s": round(total / cont_s, 1),
+        "sequential_tok_s": round(total / seq_s, 1),
+        "speedup": round(seq_s / cont_s, 3),
+        "batched_steps": snap["steps"],
+        "inter_token_p50_ms": round(snap["inter_token_p50_s"] * 1e3, 3),
+        "inter_token_p95_ms": round(snap["inter_token_p95_s"] * 1e3, 3),
+        "lost_tokens": audit["lost"],
+        "misordered_tokens": audit["misordered"],
+        "mismatched_vs_sequential": mismatch,
+    }
+
+
+def bench_runtime(arch: str, concurrencies: Sequence[int],
+                  requests_per_slot: int, prompt_len: int,
+                  max_new_tokens: int, max_context: int,
+                  stages: int) -> List[Dict]:
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm
+
+    # float32 smoke weights: greedy argmax is tie-free, so the continuous
+    # batch must reproduce the sequential reference token for token
+    cfg = dataclasses.replace(decode_config_for(f"lm:{arch}"),
+                              dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    per = cfg.n_layers // stages
+    stage_blocks = [per] * (stages - 1) + [cfg.n_layers - per * (stages - 1)]
+
+    rows = []
+    for c in concurrencies:
+        r = runtime_row(cfg, params, c, requests_per_slot * c, prompt_len,
+                        max_new_tokens, max_context, stage_blocks)
+        rows.append(r)
+        print(f"{arch:16s} c={c:<2d}: continuous "
+              f"{r['continuous_tok_s']:7.1f} tok/s vs sequential "
+              f"{r['sequential_tok_s']:7.1f} ({r['speedup']:.2f}x), "
+              f"p95 inter-token {r['inter_token_p95_ms']:.2f} ms, "
+              f"lost={r['lost_tokens']} misordered={r['misordered_tokens']} "
+              f"mismatch={r['mismatched_vs_sequential']}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+def run(modeled_archs: Sequence[str] = MODELED_ARCHS,
+        modeled_concurrency: Sequence[int] = MODELED_CONCURRENCY,
+        modeled_context: int = MODELED_CONTEXT,
+        modeled_stages: int = MODELED_STAGES,
+        runtime_arch: str = RUNTIME_ARCH,
+        runtime_concurrency: Sequence[int] = RUNTIME_CONCURRENCY,
+        requests_per_slot: int = 3, prompt_len: int = 8,
+        max_new_tokens: int = 16, runtime_context: int = RUNTIME_CONTEXT,
+        runtime_stages: int = RUNTIME_STAGES,
+        kv_pressure_points: Sequence[Tuple[str, int, int]] = KV_PRESSURE,
+        write: bool = True) -> Dict:
+    modeled = bench_modeled(modeled_archs, modeled_stages,
+                            modeled_concurrency, modeled_context)
+    pressure = bench_kv_pressure(kv_pressure_points)
+    runtime = bench_runtime(runtime_arch, runtime_concurrency,
+                            requests_per_slot, prompt_len, max_new_tokens,
+                            runtime_context, runtime_stages)
+
+    emit("decode_bench",
+         [{"name": f"decode_plan_{r['arch']}_c{r['concurrency']}",
+           "us_per_call": (round(1e6 / r["decode_aware_tok_s"], 2)
+                           if r["decode_aware_tok_s"] else ""),
+           "derived": f"gain={r['gain']}x,"
+                      f"headroom={r['kv_headroom_pct']}%"}
+          for r in modeled]
+         + [{"name": f"decode_runtime_c{r['concurrency']}",
+             "us_per_call": round(1e6 / r["continuous_tok_s"], 2),
+             "derived": f"speedup={r['speedup']}x,"
+                        f"p95_ms={r['inter_token_p95_ms']}"}
+            for r in runtime],
+         ["name", "us_per_call", "derived"])
+
+    aware_ge_balanced = all(
+        r["decode_aware_tok_s"] >= r["weight_balanced_tok_s"]
+        for r in modeled + pressure)
+    pressure_win = any(not r["balanced_feasible"]
+                       and r["decode_aware_tok_s"] > 0 for r in pressure)
+    hi = [r for r in runtime if r["concurrency"] >= 4]
+    hi_speedup = min((r["speedup"] for r in hi), default=0.0)
+    lost = sum(r["lost_tokens"] for r in runtime)
+    misordered = sum(r["misordered_tokens"] for r in runtime)
+    mismatched = sum(r["mismatched_vs_sequential"] for r in runtime)
+    summary = {
+        "note": "decode serving tier: KV-aware placement vs weight-"
+                "balanced cuts (both priced under the decode step cost) "
+                "and continuous batching vs sequential decode on the "
+                "jitted pipeline engine; see EXPERIMENTS.md "
+                "§Decode serving",
+        "modeled_placement": modeled,
+        "kv_pressure": pressure,
+        "runtime_continuous_batching": runtime,
+        "acceptance": {
+            "decode_aware_ge_weight_balanced": aware_ge_balanced,
+            "kv_pressure_win": pressure_win,
+            "min_continuous_speedup_at_c4plus": hi_speedup,
+            "speedup_floor_met": bool(hi_speedup >= 1.3),
+            "lost_tokens": lost,
+            "misordered_tokens": misordered,
+            "mismatched_vs_sequential": mismatched,
+            "token_audit_clean": bool(lost == 0 and misordered == 0
+                                      and mismatched == 0),
+        },
+    }
+    if write:
+        write_bench("decode", summary)
+    print(f"decode-aware >= weight-balanced on all "
+          f"{len(modeled) + len(pressure)} modeled rows: "
+          f"{aware_ge_balanced} (KV-pressure win: {pressure_win}); "
+          f"min continuous/sequential speedup at c>=4: {hi_speedup:.2f}x "
+          f"(floor 1.3x: {'met' if hi_speedup >= 1.3 else 'MISSED'}); "
+          f"token audit: lost={lost} misordered={misordered} "
+          f"mismatch={mismatched}")
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI mode: one arch, small batch, no "
+                         "BENCH_decode.json write")
+    args = ap.parse_args()
+    if args.smoke:
+        summary = run(modeled_archs=("qwen3-1.7b",),
+                      modeled_concurrency=(2, 4), modeled_context=256,
+                      runtime_concurrency=(4,), requests_per_slot=1,
+                      prompt_len=4, max_new_tokens=4, runtime_context=32,
+                      kv_pressure_points=(("qwen3-1.7b", 8, 2048),),
+                      write=False)
+        acc = summary["acceptance"]
+        assert acc["decode_aware_ge_weight_balanced"], acc
+        assert acc["token_audit_clean"], acc
+        assert acc["min_continuous_speedup_at_c4plus"] > 1.0, acc
+        return
+    summary = run()
+    acc = summary["acceptance"]
+    assert acc["decode_aware_ge_weight_balanced"], acc
+    assert acc["kv_pressure_win"], acc
+    assert acc["speedup_floor_met"], acc
+    assert acc["token_audit_clean"], acc
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,13 @@ from .strategies import (PlanContext, PlanStrategy, available_strategies,
                          get_strategy, register_strategy)
 from .deploy import Deployment, deploy, plan
 
+# the decode tier's strategy lives in repro.decode.placement, which
+# imports this package's modules — registration is deferred into a
+# callable invoked once the registry exists
+from ..decode.placement import _register as _register_decode
+_register_decode()
+del _register_decode
+
 # fleet-tier names re-exported lazily (PEP 562): repro.fleet imports
 # from this package's submodules, so an eager import here would cycle
 _FLEET_EXPORTS = ("Fleet", "FleetSpec", "FleetMemberSpec", "deploy_fleet",

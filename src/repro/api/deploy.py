@@ -95,7 +95,9 @@ def plan(spec: DeploymentSpec, *,
                    else f"live:{getattr(cost_source, 'name', 'object')}")
         pl.report = PlanReport.from_plan(pl, base_model=ctx.model(),
                                          cost_source=src_tag,
-                                         trace=ctx.trace())
+                                         trace=ctx.trace(),
+                                         decode=getattr(pl, "decode_info",
+                                                        None))
     return pl
 
 
@@ -285,11 +287,24 @@ class Deployment:
             ex.start()
         return ex
 
-    def serve(self, start: bool = False):
+    def serve(self, start: bool = False, *, params: Any = None):
         """The streaming server over this deployment's plan.  At most one
         live server per deployment (reconfigure targets it); a server the
-        caller already stopped no longer counts."""
+        caller already stopped no longer counts.
+
+        ``workload="decode"`` specs get a continuous-batching
+        :class:`~repro.decode.engine.DecodeServer` (token streams, not
+        request/response futures); ``params`` optionally supplies the LM
+        weights (fresh smoke weights otherwise)."""
         self._check_open("serve()")
+        if self.spec.workload == "decode":
+            from ..decode.engine import build_decode_server
+            srv = build_decode_server(
+                self.spec, plan=self.plan, params=params,
+                queue_size=self.spec.queue_size)
+            if start:
+                srv.start()
+            return srv
         if self._live_server() is not None:
             raise RuntimeError("deployment already has a live server; "
                                "stop it before serving again")

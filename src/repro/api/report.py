@@ -57,6 +57,14 @@ class PlanReport:
     cost_source: str = "analytic"
     trace_stage_times_s: Tuple[float, ...] = ()
     stage_time_error_pct: float = -1.0    # -1: no trace to compare against
+    # decode operating point (workload="decode" plans only; see
+    # repro.decode.placement.decode_info)
+    decode_tokens_per_s: float = 0.0
+    decode_concurrency: int = 0           # 0: not a decode plan
+    decode_max_context: int = 0
+    stage_kv_bytes: Tuple[int, ...] = ()
+    stage_kv_cap_bytes: Tuple[int, ...] = ()
+    kv_headroom_pct: float = -1.0         # min over stages; -1: no KV view
 
     @property
     def spills(self) -> bool:
@@ -66,13 +74,17 @@ class PlanReport:
     def has_trace(self) -> bool:
         return self.stage_time_error_pct >= 0.0
 
+    @property
+    def is_decode(self) -> bool:
+        return self.decode_concurrency > 0
+
     @classmethod
     def from_plan(cls, plan: PlacementPlan,
                   graph: Optional[LayerGraph] = None,
                   base_spec: Optional[EdgeTPUSpec] = None,
                   base_model: Optional[EdgeTPUModel] = None,
                   cost_source: str = "analytic",
-                  trace=None) -> "PlanReport":
+                  trace=None, decode: Optional[Dict] = None) -> "PlanReport":
         """Price a plan.  ``base_model`` (preferred — the device model the
         planner itself priced with, so the report cannot contradict the
         plan) or ``graph`` [+ ``base_spec``] enables the per-stage memory
@@ -80,7 +92,9 @@ class PlanReport:
         view the plan itself knows.  ``trace`` (a
         :class:`~repro.profiling.trace.ProfileTrace` covering the plan's
         depths) enables the measured-stage-time column and the
-        modeled-vs-trace error."""
+        modeled-vs-trace error.  ``decode`` (the plan's ``decode_info``
+        dict, from the decode_placement strategy) fills the decode
+        operating-point columns."""
         stages = plan.stages
         times = tuple(0.0 if s.time_s is None else s.time_s for s in stages)
         eff = tuple(0.0 if t is None else t
@@ -138,7 +152,9 @@ class PlanReport:
             devices=tuple(s.device.name for s in stages),
             replicas=tuple(s.replicas for s in stages),
             cost_source=cost_source, trace_stage_times_s=trace_times,
-            stage_time_error_pct=err_pct)
+            stage_time_error_pct=err_pct,
+            **({k: (tuple(v) if isinstance(v, (list, tuple)) else v)
+                for k, v in decode.items()} if decode else {}))
 
     def describe(self) -> str:
         """One-line report summary for logs."""
@@ -157,6 +173,11 @@ class PlanReport:
             line += f" [{self.cost_source}]"
         if self.has_trace:
             line += f" (vs trace: {self.stage_time_error_pct:.1f}% err)"
+        if self.is_decode:
+            line += (f" | decode {self.decode_tokens_per_s:.1f} tok/s "
+                     f"@ c={self.decode_concurrency}"
+                     f"/ctx={self.decode_max_context}, KV headroom "
+                     f"{self.kv_headroom_pct:.0f}%")
         return line
 
     # -- (de)serialization ---------------------------------------------------

@@ -118,6 +118,15 @@ class DeploymentSpec:
     must support (its modeled bottleneck pacing must stay under
     ``1/slo_throughput_rps``).  Both optional; a standalone deployment
     ignores them.
+
+    Decode serving tier (see repro.decode / EXPERIMENTS.md §Decode
+    serving): ``workload`` — ``"batch"`` (default; everything above) or
+    ``"decode"``: steady-state autoregressive token generation.  Decode
+    requires an ``lm:`` model ref, is planned at the
+    ``(decode_concurrency, max_context)`` operating point (defaults in
+    ``repro.decode.placement``), and ``Deployment.serve()`` returns a
+    continuous-batching :class:`~repro.decode.engine.DecodeServer`
+    streaming tokens instead of a request/response pipeline server.
     """
 
     model: Optional[str] = None
@@ -150,6 +159,12 @@ class DeploymentSpec:
     # service-level objective (consumed by the fleet tier)
     slo_p95_ms: Optional[float] = None
     slo_throughput_rps: Optional[float] = None
+    # decode serving tier (see repro.decode): workload="decode" plans with
+    # the per-token cost regime at the (decode_concurrency, max_context)
+    # operating point and serves via continuous batching
+    workload: str = "batch"
+    max_context: Optional[int] = None
+    decode_concurrency: Optional[int] = None
 
     def __post_init__(self):
         if not self.strategy:
@@ -197,6 +212,22 @@ class DeploymentSpec:
                 and self.slo_throughput_rps <= 0):
             raise ValueError(f"slo_throughput_rps must be > 0 (or None), "
                              f"got {self.slo_throughput_rps}")
+        if self.workload not in ("batch", "decode"):
+            raise ValueError(f"workload must be 'batch' or 'decode', "
+                             f"got {self.workload!r}")
+        if self.workload == "decode" and (
+                self.model is None or not self.model.startswith("lm:")):
+            raise ValueError(
+                f"workload='decode' requires an 'lm:<arch>' model ref "
+                f"(the decode regime is derived from the LM config); "
+                f"got model={self.model!r}")
+        if self.max_context is not None and self.max_context < 2:
+            raise ValueError(f"max_context must be >= 2 (room for a prompt "
+                             f"token and a generated token), "
+                             f"got {self.max_context}")
+        if self.decode_concurrency is not None and self.decode_concurrency < 1:
+            raise ValueError(f"decode_concurrency must be >= 1, "
+                             f"got {self.decode_concurrency}")
         from ..profiling.sources import parse_cost_source
         parse_cost_source(self.cost_source)   # raises on malformed refs
 

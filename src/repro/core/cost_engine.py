@@ -104,12 +104,13 @@ class SegmentCostEngine:
             macs = graph.macs_per_depth()
             weight_bytes = graph.bytes_per_depth()
             cut_bytes = graph.out_bytes_per_depth()
-            time_s = wload_s = None
+            time_s = wload_s = state_bytes = None
         else:
             dc = src.materialize(self.graph, spec)
             params, macs = dc.params, dc.macs
             weight_bytes, cut_bytes = dc.weight_bytes, dc.cut_bytes
             time_s, wload_s = dc.time_s, dc.weight_load_s
+            state_bytes = getattr(dc, "state_bytes", None)
         self._params_prefix = _prefix(params)
         self._macs_prefix = _prefix(macs)
         self._bytes_prefix = _prefix(weight_bytes)
@@ -118,12 +119,21 @@ class SegmentCostEngine:
         self._time_prefix = None if time_s is None else _fprefix(time_s)
         self._wload_prefix = (None if wload_s is None
                               else _fprefix(wload_s))
+        # decode mode: per-depth per-sequence state (KV / recurrent) bytes
+        self._state_prefix = (None if state_bytes is None
+                              else _prefix(state_bytes))
 
     @property
     def is_measured(self) -> bool:
         """True when segment compute times come from a trace-backed source
         instead of the closed-form analytic expression."""
         return self._time_prefix is not None
+
+    @property
+    def has_state_costs(self) -> bool:
+        """True when the cost source supplies per-depth decode state bytes
+        (KV cache / recurrent state) — the decode-placement regime."""
+        return self._state_prefix is not None
 
     def with_spec(self, spec) -> "SegmentCostEngine":
         """An engine for the same graph under a different device spec.
@@ -178,6 +188,15 @@ class SegmentCostEngine:
 
     def segment_weight_bytes(self, depth_lo: int, depth_hi: int) -> int:
         return self._bytes_prefix[depth_hi + 1] - self._bytes_prefix[depth_lo]
+
+    def segment_state_bytes(self, depth_lo: int, depth_hi: int) -> int:
+        """Per-sequence decode state (KV cache / recurrent) bytes the
+        segment pins on-device — 0 unless the cost source supplies a
+        decode regime (:attr:`has_state_costs`)."""
+        if self._state_prefix is None:
+            return 0
+        return (self._state_prefix[depth_hi + 1]
+                - self._state_prefix[depth_lo])
 
     def depth_weight_bytes(self) -> List[int]:
         """Per-depth weight bytes as the cost source accounts them — the

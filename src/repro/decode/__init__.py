@@ -1,0 +1,43 @@
+"""Decode serving tier: KV-cache-aware placement + continuous batching.
+
+Autoregressive decode inverts the paper's memory economy (ROADMAP item 3):
+stage feasibility is dominated by the *growing KV cache* — a function of
+``(context_len, n_kv_heads, head_dim, window)`` times the number of
+concurrent sequences — not by static weight bytes.  This package layers a
+second cost regime on the same planner:
+
+* :mod:`repro.decode.costing` — :class:`DecodeCostSource`: per-token
+  decode compute + per-sequence state bytes per depth (KV for attention
+  blocks, O(1) recurrent state for rwkv6/rglru), materialized through the
+  existing :class:`~repro.core.cost_engine.SegmentCostEngine` seam.
+* :mod:`repro.decode.placement` — ``@register_strategy
+  ("decode_placement")``: maximize steady-state tokens/s subject to a
+  per-stage KV-memory cap at a target ``(concurrency, max_context)``
+  operating point, on the minimax DP skeleton.
+* :mod:`repro.decode.scheduler` — :class:`DecodeScheduler`: continuous
+  batching — prefill requests join the running decode batch at token
+  boundaries, finished sequences are evicted, per-slot KV occupancy is
+  tracked, and overload sheds with the PR-8 ``Overloaded`` semantics.
+* :mod:`repro.decode.engine` — :class:`PipelineDecodeEngine`: the decode
+  batch executed through the streaming :class:`~repro.core.pipeline
+  .PipelineExecutor`, one stage per plan segment, per-stage KV caches.
+
+Front door: ``DeploymentSpec(model="lm:...", workload="decode",
+max_context=..., decode_concurrency=...)`` -> ``plan(spec)`` ->
+``Deployment.serve()`` streaming tokens.  See EXPERIMENTS.md §Decode
+serving.
+"""
+from .costing import (DecodeCostSource, DecodeOperatingPoint,
+                      decode_depth_costs)
+from .engine import (DecodeServer, PipelineDecodeEngine,
+                     build_decode_server)
+from .placement import (DECODE_FAMILIES, decode_config_for,
+                        max_feasible_concurrency)
+from .scheduler import DecodeRequest, DecodeScheduler
+
+__all__ = [
+    "DecodeCostSource", "DecodeOperatingPoint", "decode_depth_costs",
+    "DecodeRequest", "DecodeScheduler", "DecodeServer",
+    "PipelineDecodeEngine", "build_decode_server",
+    "DECODE_FAMILIES", "decode_config_for", "max_feasible_concurrency",
+]

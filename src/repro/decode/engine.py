@@ -1,0 +1,298 @@
+"""Pipelined decode-batch execution for the scan-block LM families.
+
+:class:`PipelineDecodeEngine` runs the continuous decode batch through the
+paper's host-threaded :class:`~repro.core.pipeline.PipelineExecutor`, one
+stage per plan segment.  Each stage owns its blocks' K/V caches, laid out
+``(n_blocks_stage, n_slots, max_context, n_kv_heads, head_dim)`` — slot
+``i`` is sequence ``i`` of the running batch, so admission/eviction is
+just the scheduler re-using a slot index; no cache shuffling.
+
+Two payload ops travel the stream:
+
+* ``prefill`` — one prompt (B=1, full-sequence causal attention) writes
+  its post-RoPE K/V rows into slot ``i`` of every block cache and returns
+  the first greedy token from the last position;
+* ``step`` — one decode step of *all* slots at once with a per-slot
+  context vector: positions ``ctx-1``, a one-hot masked cache write at
+  each slot's own ring position (``ctx=0`` slots match nothing and stay
+  untouched), and per-slot attention masks via ``decode_attention``'s
+  broadcastable ``cache_len``.  Inactive slots compute garbage that is
+  never read — fixed shapes keep one jit trace for the whole serve.
+
+FIFO-per-stage ordering is what makes the scheduler's prefill-join sound:
+a prefill submitted before the next step reaches each stage's cache
+before that step reads it.
+
+The reference semantics are ``repro.models.lm.forward_decode`` fed one
+token at a time (tests pin exact greedy-token equality at B=1).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.pipeline import PipelineExecutor
+from ..models import attention as A
+from ..models import lm
+from .costing import _itemsize
+from .placement import DECODE_FAMILIES
+from .scheduler import DecodeScheduler
+
+
+class PipelineDecodeEngine:
+    """The running decode batch over a staged dense/MoE/VLM LM."""
+
+    def __init__(self, cfg: lm.LMConfig, params: Dict[str, Any], *,
+                 n_slots: int, max_context: int,
+                 stage_blocks: Optional[Sequence[int]] = None,
+                 queue_size: int = 8):
+        if cfg.family not in DECODE_FAMILIES:
+            raise ValueError(
+                f"PipelineDecodeEngine supports the scan-block attention "
+                f"families {DECODE_FAMILIES}; {cfg.name} is "
+                f"family={cfg.family!r}")
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        if max_context < 2:
+            raise ValueError(f"max_context must be >= 2, got {max_context}")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.max_context = int(max_context)
+        if stage_blocks is None:
+            stage_blocks = [cfg.n_layers]
+        if sum(stage_blocks) != cfg.n_layers:
+            raise ValueError(f"stage_blocks {list(stage_blocks)} must sum "
+                             f"to n_layers={cfg.n_layers}")
+        self.stage_blocks = [int(b) for b in stage_blocks]
+        self._lock = threading.Lock()   # serialize prefill/step submitters
+        fns = []
+        lo = 0
+        for si, nb in enumerate(self.stage_blocks):
+            fns.append(self._build_stage(si, lo, lo + nb))
+            lo += nb
+        self.pipe = PipelineExecutor(fns, queue_size=queue_size,
+                                     name=f"decode-{cfg.name}")
+
+    # bytes one generated token adds across every layer's K+V cache —
+    # the scheduler's per-slot KV-occupancy unit
+    @property
+    def kv_bytes_per_token(self) -> int:
+        c = self.cfg
+        return c.n_layers * 2 * c.n_kv_heads * c.hd * _itemsize(c.dtype)
+
+    # -- stage construction ---------------------------------------------------
+    def _build_stage(self, si: int, lo: int, hi: int):
+        cfg = self.cfg
+        first = si == 0
+        last = si == len(self.stage_blocks) - 1
+        bp = jax.tree.map(lambda x: x[lo:hi], self.params["blocks"])
+        extras: Dict[str, Any] = {}
+        if first or (last and cfg.tie_embeddings):
+            extras["embed"] = self.params["embed"]
+        if last:
+            extras["final_norm"] = self.params["final_norm"]
+            if not cfg.tie_embeddings:
+                extras["head"] = self.params["head"]
+        t = self.max_context
+        shape = (hi - lo, self.n_slots, t, cfg.n_kv_heads, cfg.hd)
+        cache = [jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype)]
+
+        def positions(pos):
+            if cfg.family == "vlm":
+                return jnp.broadcast_to(pos[None], (3,) + pos.shape)
+            return pos
+
+        def block(blk, h, q, k, v, attend):
+            out = attend(q, k, v)
+            b, s = h.shape[:2]
+            h = h + out.reshape(b, s, cfg.q_dim) @ blk["attn"]["wo"]
+            return h + lm.mlp_block(cfg, blk["mlp"],
+                                    lm._norm(cfg, blk["ln2"], h))
+
+        def prefill_impl(bp, extras, kc, vc, x, slot):
+            h = (lm.embed_tokens(cfg, extras, x) if first else x)
+            n = h.shape[1]
+            pos = positions(jnp.arange(n)[None, :])
+
+            def body(h, xs):
+                blk, kci, vci = xs
+                q, k, v = lm._qkv(cfg, blk["attn"],
+                                  lm._norm(cfg, blk["ln1"], h))
+                q, k = lm._rope_qk(cfg, q, k, pos)
+                h = block(blk, h, q, k, v,
+                          lambda q, k, v: A.full_attention(q, k, v,
+                                                           causal=True))
+                # the slot's prompt rows, post-RoPE (what decode reads)
+                kci = jax.lax.dynamic_update_slice(
+                    kci, k.astype(kci.dtype), (slot, 0, 0, 0))
+                vci = jax.lax.dynamic_update_slice(
+                    vci, v.astype(vci.dtype), (slot, 0, 0, 0))
+                return h, (kci, vci)
+
+            h, (kc, vc) = jax.lax.scan(body, h, (bp, kc, vc))
+            if last:
+                logits = lm.unembed(cfg, extras, h[:, -1:])
+                return jnp.argmax(logits[:, -1, :], axis=-1), kc, vc
+            return h, kc, vc
+
+        def step_impl(bp, extras, kc, vc, x, ctx):
+            h = (lm.embed_tokens(cfg, extras, x) if first else x)
+            pos = positions(jnp.clip(ctx - 1, 0)[:, None])
+            slotpos = ctx - 1                     # ctx=0 slots match nothing
+            hit = (jnp.arange(t)[None, :]
+                   == slotpos[:, None])[:, :, None, None]
+
+            def body(h, xs):
+                blk, kci, vci = xs
+                q, k, v = lm._qkv(cfg, blk["attn"],
+                                  lm._norm(cfg, blk["ln1"], h))
+                q, k = lm._rope_qk(cfg, q, k, pos)
+                kci = jnp.where(hit, k.astype(kci.dtype), kci)
+                vci = jnp.where(hit, v.astype(vci.dtype), vci)
+                h = block(blk, h, q, kci, vci,
+                          lambda q, kc_, vc_: A.decode_attention(
+                              q, kc_, vc_, ctx[:, None]))
+                return h, (kci, vci)
+
+            h, (kc, vc) = jax.lax.scan(body, h, (bp, kc, vc))
+            if last:
+                logits = lm.unembed(cfg, extras, h)
+                return jnp.argmax(logits[:, -1, :], axis=-1), kc, vc
+            return h, kc, vc
+
+        jit_prefill = jax.jit(prefill_impl)
+        jit_step = jax.jit(step_impl)
+
+        def stage(payload):
+            op = payload[0]
+            if op == "prefill":
+                _, slot, x = payload
+                out, cache[0], cache[1] = jit_prefill(
+                    bp, extras, cache[0], cache[1], x,
+                    jnp.asarray(slot, jnp.int32))
+                if last:
+                    return ("token", np.asarray(out))
+                return ("prefill", slot, out)
+            if op == "step":
+                _, x, ctx = payload
+                out, cache[0], cache[1] = jit_step(
+                    bp, extras, cache[0], cache[1], x,
+                    jnp.asarray(ctx, jnp.int32))
+                if last:
+                    return ("tokens", np.asarray(out))
+                return ("step", out, ctx)
+            raise ValueError(f"unknown decode payload op {op!r}")
+
+        return stage
+
+    # -- lifecycle ------------------------------------------------------------
+    def start(self) -> "PipelineDecodeEngine":
+        self.pipe.start()
+        return self
+
+    def stop(self) -> None:
+        self.pipe.stop()
+
+    def __enter__(self) -> "PipelineDecodeEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- scheduler protocol ---------------------------------------------------
+    def prefill(self, slot: int, prompt: np.ndarray) -> int:
+        """Write the prompt's KV into ``slot``; return the first greedy
+        token."""
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        if not (0 <= slot < self.n_slots):
+            raise ValueError(f"slot {slot} out of range 0..{self.n_slots-1}")
+        if prompt.shape[1] >= self.max_context:
+            raise ValueError(f"prompt of {prompt.shape[1]} tokens leaves no "
+                             f"room in max_context={self.max_context}")
+        with self._lock:
+            fut = self.pipe.submit(("prefill", int(slot), prompt))
+        op, tok = fut.result()
+        return int(tok[0])
+
+    def step(self, slots: Sequence[int], ctx_lens: Sequence[int],
+             last_tokens: Sequence[int]) -> List[int]:
+        """One decode step of the listed slots (the rest idle in-batch);
+        returns their next greedy tokens in the same order."""
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        ctx = np.zeros((self.n_slots,), np.int32)
+        for s, c, tk in zip(slots, ctx_lens, last_tokens):
+            if not (2 <= c <= self.max_context):
+                raise ValueError(f"slot {s}: context {c} outside "
+                                 f"2..{self.max_context}")
+            tokens[s, 0] = tk
+            ctx[s] = c
+        with self._lock:
+            fut = self.pipe.submit(("step", tokens, ctx))
+        op, out = fut.result()
+        return [int(out[s]) for s in slots]
+
+
+class DecodeServer:
+    """Engine + scheduler lifecycle bundle — what ``Deployment.serve``
+    returns for ``workload="decode"``.  ``submit`` streams tokens via the
+    returned :class:`~repro.decode.scheduler.DecodeRequest`."""
+
+    def __init__(self, engine: PipelineDecodeEngine,
+                 scheduler: DecodeScheduler):
+        self.engine = engine
+        self.scheduler = scheduler
+
+    def start(self) -> "DecodeServer":
+        self.engine.start()
+        self.scheduler.start()
+        return self
+
+    def stop(self, drain: bool = True) -> None:
+        self.scheduler.stop(drain=drain)
+        self.engine.stop()
+
+    def __enter__(self) -> "DecodeServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def submit(self, prompt, max_new_tokens: Optional[int] = None):
+        return self.scheduler.submit(prompt, max_new_tokens)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return self.scheduler.snapshot()
+
+
+def build_decode_server(spec, plan=None, params=None,
+                        seed: int = 0, **scheduler_kw) -> DecodeServer:
+    """Wire a :class:`DecodeServer` from a deployment spec (+ optionally
+    its plan, whose stage cuts become pipeline stages).  ``params=None``
+    draws fresh smoke weights."""
+    from .placement import decode_config_for, operating_point
+    cfg = decode_config_for(spec.model)
+    if cfg.family not in DECODE_FAMILIES:
+        raise ValueError(
+            f"decode serving runs the scan-block attention families "
+            f"{DECODE_FAMILIES}; {cfg.name} is family={cfg.family!r} "
+            f"(recurrent/enc-dec families plan with 'decode_placement' "
+            f"but have no continuous-batching engine yet)")
+    point = operating_point(spec)
+    if params is None:
+        params = lm.init_params(cfg, jax.random.PRNGKey(seed))
+    stage_blocks = None
+    if plan is not None:
+        from ..launch.pipeline_spmd import stage_block_counts
+        stage_blocks = stage_block_counts(plan, cfg.n_layers)
+    engine = PipelineDecodeEngine(cfg, params,
+                                  n_slots=point.concurrency,
+                                  max_context=point.max_context,
+                                  stage_blocks=stage_blocks)
+    sched = DecodeScheduler(engine, max_context=point.max_context,
+                            **scheduler_kw)
+    return DecodeServer(engine, sched)

@@ -54,7 +54,14 @@ class DepthCosts:
     ``time_s is None`` means "no measured times: use the closed-form
     analytic expression over the integer arrays" — the bit-identical
     legacy path.  When ``time_s`` is given, ``weight_load_s`` must be too
-    (the non-amortizing replication term)."""
+    (the non-amortizing replication term).
+
+    ``state_bytes`` is the decode regime's third axis (ISSUE 10): per-depth
+    *per-sequence* steady-state bytes a depth level pins on-device while a
+    sequence is in flight — KV cache for attention blocks (a function of
+    context length), O(1) recurrent state for rwkv6/rglru blocks, zero for
+    stateless levels.  ``None`` (every prefill/batch source) keeps the
+    engine's state queries inert."""
 
     params: Sequence[int]
     macs: Sequence[int]
@@ -62,6 +69,7 @@ class DepthCosts:
     cut_bytes: Sequence[int]
     time_s: Optional[Sequence[float]] = None
     weight_load_s: Optional[Sequence[float]] = None
+    state_bytes: Optional[Sequence[int]] = None
 
 
 def _analytic_depth_time(macs: int, weight_bytes: int,

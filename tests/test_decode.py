@@ -1,0 +1,315 @@
+"""Decode serving tier: costing regimes, KV-aware placement, and the
+pipelined decode engine's exact equivalence with the reference
+``forward_decode`` path (ISSUE 10)."""
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.api import DeploymentSpec, PlanReport, plan, resolve_model_graph
+from repro.core.edge_tpu_model import EdgeTPUModel, EdgeTPUSpec
+from repro.core.segmentation import balanced_split, segment_ranges
+from repro.decode.costing import (DecodeCostSource, DecodeOperatingPoint,
+                                  decode_depth_costs)
+from repro.decode.engine import PipelineDecodeEngine, build_decode_server
+from repro.decode.placement import (decode_config_for, kv_budget_bytes,
+                                    step_cost_fn)
+from repro.models import lm
+
+
+def _graph_and_cfg(arch):
+    return resolve_model_graph(f"lm:{arch}"), decode_config_for(f"lm:{arch}")
+
+
+# ---------------------------------------------------------------------------
+# costing: the per-token regime
+# ---------------------------------------------------------------------------
+def test_dense_kv_state_grows_with_context():
+    g, cfg = _graph_and_cfg("qwen3-1.7b")
+    _, s128 = decode_depth_costs(cfg, g, DecodeOperatingPoint(4, 128))
+    _, s256 = decode_depth_costs(cfg, g, DecodeOperatingPoint(4, 256))
+    blocks = [i for i, s in enumerate(s128) if s > 0]
+    assert blocks, "dense model must pin KV state somewhere"
+    for i in blocks:
+        assert s256[i] == 2 * s128[i]          # KV bytes ~ context
+    # per-position KV row: 2 (K+V) * kv_heads * head_dim * itemsize
+    row = 2 * cfg.n_kv_heads * cfg.hd * np.dtype(np.float32).itemsize
+    assert s128[blocks[0]] == 128 * row
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "recurrentgemma-9b"])
+def test_recurrent_state_is_o1_in_context(arch):
+    """rwkv6/rglru blocks pin O(1) state: bytes independent of context."""
+    g, cfg = _graph_and_cfg(arch)
+    _, s_small = decode_depth_costs(cfg, g, DecodeOperatingPoint(4, 64))
+    _, s_big = decode_depth_costs(cfg, g, DecodeOperatingPoint(4, 8192))
+    grew = [i for i in range(len(s_small)) if s_big[i] > s_small[i]]
+    if cfg.family == "ssm":
+        assert not grew                       # pure recurrent: nothing grows
+    else:
+        # hybrid: only the (window-clamped) attention levels may grow, and
+        # only up to the window
+        for i in grew:
+            assert s_big[i] <= cfg.local_window * 2 * cfg.n_kv_heads \
+                * cfg.hd * 4
+
+
+def test_moe_decode_macs_only_touch_active_experts():
+    g, cfg = _graph_and_cfg("phi3.5-moe-42b-a6.6b")
+    macs, _ = decode_depth_costs(cfg, g, DecodeOperatingPoint(1, 64))
+    params = g.params_per_depth()
+    blocks = [i for i, p in enumerate(params)
+              if p > cfg.d_model * cfg.vocab]       # the MoE block levels
+    assert blocks
+    for i in blocks:
+        # inactive experts cost memory but not decode compute
+        assert macs[i] < params[i]
+
+
+def test_cost_engine_exposes_segment_state():
+    g, cfg = _graph_and_cfg("qwen3-1.7b")
+    point = DecodeOperatingPoint(4, 128)
+    eng = EdgeTPUModel(g, EdgeTPUSpec(),
+                       cost_source=DecodeCostSource(cfg, point)).engine
+    assert eng.has_state_costs
+    _, state = decode_depth_costs(cfg, g, point)
+    # depth ranges are inclusive [lo, hi], matching segment_params
+    assert eng.segment_state_bytes(0, g.depth - 1) == sum(state)
+    assert eng.segment_state_bytes(0, 0) == state[0]
+
+
+# ---------------------------------------------------------------------------
+# placement: KV cap, never-worse guarantee, report columns
+# ---------------------------------------------------------------------------
+def test_decode_plan_report_carries_kv_columns():
+    g = resolve_model_graph("lm:qwen3-1.7b")
+    pl = plan(DeploymentSpec(model="lm:qwen3-1.7b",
+                             strategy="decode_placement", stages=3,
+                             workload="decode", max_context=128,
+                             decode_concurrency=4), graph=g)
+    rep = pl.report
+    assert rep.is_decode
+    assert rep.decode_concurrency == 4 and rep.decode_max_context == 128
+    assert rep.decode_tokens_per_s > 0
+    assert len(rep.stage_kv_bytes) == pl.n_stages
+    assert len(rep.stage_kv_cap_bytes) == pl.n_stages
+    budget = kv_budget_bytes(EdgeTPUSpec())
+    assert all(cap == budget for cap in rep.stage_kv_cap_bytes)
+    assert all(kv <= cap for kv, cap
+               in zip(rep.stage_kv_bytes, rep.stage_kv_cap_bytes))
+    assert 0.0 <= rep.kv_headroom_pct <= 100.0
+    assert "decode" in rep.describe()
+
+
+@pytest.mark.parametrize("arch,stages,c,ctx", [
+    ("qwen3-1.7b", 2, 4, 256),
+    ("qwen2.5-14b", 4, 8, 512),
+    ("recurrentgemma-9b", 3, 8, 1024),
+])
+def test_decode_plan_never_worse_than_weight_balanced(arch, stages, c, ctx):
+    g, cfg = _graph_and_cfg(arch)
+    pl = plan(DeploymentSpec(model=f"lm:{arch}",
+                             strategy="decode_placement", stages=stages,
+                             workload="decode", max_context=ctx,
+                             decode_concurrency=c), graph=g)
+    point = DecodeOperatingPoint(c, ctx)
+    base = EdgeTPUSpec()
+    eng = EdgeTPUModel(g, base,
+                       cost_source=DecodeCostSource(cfg, point)).engine
+    cost = step_cost_fn(eng, base, point)
+    bal = balanced_split(g.params_per_depth(), stages)
+    bal_pace = max(cost(lo, hi)
+                   for lo, hi in segment_ranges(g.depth, bal))
+    if bal_pace != math.inf:
+        assert pl.report.decode_tokens_per_s >= c / bal_pace - 1e-9
+
+
+def test_recurrent_plan_headroom_independent_of_context():
+    """An O(1)-state family plans the same at any context: the KV economy
+    never binds."""
+    g = resolve_model_graph("lm:rwkv6-1.6b")
+    reps = []
+    for ctx in (128, 8192):
+        pl = plan(DeploymentSpec(model="lm:rwkv6-1.6b",
+                                 strategy="decode_placement", stages=2,
+                                 workload="decode", max_context=ctx,
+                                 decode_concurrency=8), graph=g)
+        reps.append(pl.report)
+    assert reps[0].stage_kv_bytes == reps[1].stage_kv_bytes
+    assert reps[0].kv_headroom_pct == pytest.approx(reps[1].kv_headroom_pct)
+    assert reps[0].kv_headroom_pct > 99.0
+
+
+def test_infeasible_operating_point_raises_actionable_error():
+    g = resolve_model_graph("lm:qwen3-1.7b")
+    with pytest.raises(ValueError, match="lower decode_concurrency"):
+        plan(DeploymentSpec(model="lm:qwen3-1.7b",
+                            strategy="decode_placement", stages=2,
+                            workload="decode", max_context=4096,
+                            decode_concurrency=64), graph=g)
+
+
+def test_auto_stages_scale_out_under_kv_pressure():
+    """stages=None picks the smallest KV-feasible stage count — more
+    stages than the weight economy alone would ask for."""
+    g = resolve_model_graph("lm:qwen3-1.7b")
+    pl = plan(DeploymentSpec(model="lm:qwen3-1.7b",
+                             strategy="decode_placement", workload="decode",
+                             max_context=2048, decode_concurrency=8),
+              graph=g)
+    assert pl.n_stages > 1
+    assert pl.report.decode_tokens_per_s > 0
+    assert pl.report.kv_headroom_pct >= 0.0
+
+
+def test_decode_placement_requires_lm_model_ref():
+    g = resolve_model_graph("lm:qwen3-1.7b")
+    with pytest.raises(ValueError, match="lm:<arch>"):
+        plan(DeploymentSpec(model=None, strategy="decode_placement",
+                            stages=2), graph=g)
+
+
+# ---------------------------------------------------------------------------
+# spec validation + JSON round-trips (pinned error text)
+# ---------------------------------------------------------------------------
+def test_decode_spec_validation_pins():
+    with pytest.raises(ValueError, match="workload must be 'batch' or "
+                                         "'decode'"):
+        DeploymentSpec(stages=2, workload="prefill")
+    with pytest.raises(ValueError, match="requires an 'lm:<arch>' model"):
+        DeploymentSpec(stages=2, workload="decode", model="cnn:ResNet50")
+    with pytest.raises(ValueError, match="max_context must be >= 2"):
+        DeploymentSpec(stages=2, workload="decode", model="lm:qwen3-1.7b",
+                       max_context=1)
+    with pytest.raises(ValueError, match="decode_concurrency must be >= 1"):
+        DeploymentSpec(stages=2, workload="decode", model="lm:qwen3-1.7b",
+                       decode_concurrency=0)
+
+
+def test_decode_spec_and_report_round_trip():
+    spec = DeploymentSpec(model="lm:qwen3-1.7b",
+                          strategy="decode_placement", stages=2,
+                          workload="decode", max_context=64,
+                          decode_concurrency=2)
+    assert DeploymentSpec.from_json(spec.to_json()) == spec
+    pl = plan(spec)
+    rep = pl.report
+    back = PlanReport.from_json(rep.to_json())
+    assert back == rep
+    assert back.is_decode and back.stage_kv_bytes == rep.stage_kv_bytes
+    # a pre-decode report document (no decode keys) still loads
+    doc = json.loads(rep.to_json())
+    for key in ("decode_tokens_per_s", "decode_concurrency",
+                "decode_max_context", "stage_kv_bytes",
+                "stage_kv_cap_bytes", "kv_headroom_pct"):
+        doc.pop(key)
+    old = PlanReport.from_dict(doc)
+    assert not old.is_decode
+
+
+# ---------------------------------------------------------------------------
+# engine: exact greedy-token equivalence with forward_decode
+# ---------------------------------------------------------------------------
+def _reference_greedy(cfg, params, prompt, n_new, max_context):
+    """Teacher-force the prompt through forward_decode one token at a
+    time, then decode greedily — the sequential reference."""
+    cache = lm.init_cache(cfg, 1, max_context)
+    logits = None
+    for tok in prompt:
+        logits, cache = lm.forward_decode(
+            cfg, params, jnp.asarray([[tok]], jnp.int32), cache)
+    out = []
+    tok = int(jnp.argmax(logits[0, -1]))
+    for _ in range(n_new):
+        out.append(tok)
+        logits, cache = lm.forward_decode(
+            cfg, params, jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(logits[0, -1]))
+    return out
+
+
+@pytest.mark.parametrize("arch,stage_blocks", [
+    ("qwen3-1.7b", None),                  # single stage
+    ("qwen3-1.7b", "split"),               # two pipeline stages
+    ("phi3.5-moe-42b-a6.6b", "split"),
+    ("qwen2-vl-72b", None),
+])
+def test_engine_matches_forward_decode_exactly(arch, stage_blocks):
+    cfg = dataclasses.replace(configs.get(arch).smoke_config(),
+                              dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if stage_blocks == "split":
+        half = cfg.n_layers // 2
+        stage_blocks = [half, cfg.n_layers - half]
+    max_context, n_new = 32, 5
+    prompt = np.asarray([3, 1, 4, 1, 5, 9], np.int32)
+    expect = _reference_greedy(cfg, params, prompt, n_new, max_context)
+
+    engine = PipelineDecodeEngine(cfg, params, n_slots=2,
+                                  max_context=max_context,
+                                  stage_blocks=stage_blocks)
+    with engine:
+        # use slot 1 of 2: slot 0 stays inactive (all-masked lanes must
+        # not perturb the live one)
+        tok = engine.prefill(1, prompt)
+        got = [tok]
+        ctx = prompt.size + 1
+        while len(got) < n_new:
+            tok = engine.step([1], [ctx], [tok])[0]
+            ctx += 1
+            got.append(tok)
+    assert got == expect
+
+
+def test_engine_rejects_bad_shapes():
+    cfg = dataclasses.replace(configs.get("qwen3-1.7b").smoke_config(),
+                              dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="sum"):
+        PipelineDecodeEngine(cfg, params, n_slots=1, max_context=8,
+                             stage_blocks=[1])
+    eng = PipelineDecodeEngine(cfg, params, n_slots=1, max_context=8)
+    with pytest.raises(ValueError, match="out of range"):
+        eng.prefill(2, np.asarray([1, 2], np.int32))
+    with pytest.raises(ValueError, match="leaves no room"):
+        eng.prefill(0, np.arange(8, dtype=np.int32))
+
+
+def test_build_decode_server_rejects_recurrent_families():
+    spec = DeploymentSpec(model="lm:rwkv6-1.6b",
+                          strategy="decode_placement", stages=2,
+                          workload="decode", max_context=32,
+                          decode_concurrency=2)
+    with pytest.raises(ValueError, match="no continuous-batching engine"):
+        build_decode_server(spec)
+
+
+def test_deployment_serve_decode_end_to_end():
+    """The whole front door: spec -> plan -> Deployment.serve() -> token
+    streams, with the plan's cuts becoming engine stages."""
+    from repro.api import deploy
+    cfg = dataclasses.replace(configs.get("qwen3-1.7b").smoke_config(),
+                              dtype=jnp.float32)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    spec = DeploymentSpec(model="lm:qwen3-1.7b",
+                          strategy="decode_placement", stages=2,
+                          workload="decode", max_context=16,
+                          decode_concurrency=2)
+    dep = deploy(spec)
+    assert dep.plan.n_stages == 2
+    with dep.serve(start=True, params=params) as srv:
+        assert srv.engine.stage_blocks == [2, 2] or \
+            sum(srv.engine.stage_blocks) == cfg.n_layers
+        reqs = [srv.submit(np.asarray([2, 7, 1], np.int32),
+                           max_new_tokens=3) for _ in range(3)]
+        outs = [r.result(timeout=300) for r in reqs]
+    assert all(len(o) == 3 for o in outs)
+    assert outs[0] == outs[1] == outs[2]       # same prompt, greedy decode
+    snap_keyset = {"slot", "rid", "context_len", "kv_bytes"}
+    assert srv.engine.kv_bytes_per_token > 0
+    assert snap_keyset  # silence lint; snapshot shape covered in sched tests

@@ -1,0 +1,280 @@
+"""DecodeScheduler semantics over a scripted fake engine: prefill-join
+token order, KV-cap shedding with PR-8 retry hints, and drain-on-stop
+(ISSUE 10 satellite)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineStopped
+from repro.decode.scheduler import DecodeRequest, DecodeScheduler
+from repro.serving.server import Overloaded
+
+
+class FakeEngine:
+    """Deterministic decode engine: the first token is ``prompt[0] *
+    1000`` and every step increments the last token — each sequence's
+    expected stream is a pure function of its prompt, whatever the
+    admission interleaving."""
+
+    def __init__(self, n_slots=2, step_delay_s=0.0, gate=None):
+        self.n_slots = n_slots
+        self.kv_bytes_per_token = 10
+        self.step_delay_s = step_delay_s
+        self.gate = gate                      # optional Event: block steps
+        self.released = []
+        self.step_batches = []
+
+    def prefill(self, slot, prompt):
+        return int(prompt[0]) * 1000
+
+    def step(self, slots, ctx_lens, last_tokens):
+        if self.gate is not None:
+            self.gate.wait(timeout=30)
+        if self.step_delay_s:
+            time.sleep(self.step_delay_s)
+        self.step_batches.append(list(slots))
+        return [t + 1 for t in last_tokens]
+
+    def release(self, slot):
+        self.released.append(slot)
+
+
+def expected_tokens(prompt, n):
+    first = int(prompt[0]) * 1000
+    return [first + i for i in range(n)]
+
+
+def drain_stream(req: DecodeRequest):
+    out = []
+    while True:
+        try:
+            out.append(req.stream.get_nowait())
+        except Exception:
+            return out
+
+
+# ---------------------------------------------------------------------------
+# prefill-join preserves per-sequence token order
+# ---------------------------------------------------------------------------
+def test_prefill_join_keeps_per_sequence_order():
+    eng = FakeEngine(n_slots=2)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=16)
+    with sched:
+        prompts = [np.asarray([i + 1, 7], np.int32) for i in range(5)]
+        reqs = [sched.submit(p, max_new_tokens=4) for p in prompts]
+        outs = [r.result(timeout=30) for r in reqs]
+    for req, prompt, out in zip(reqs, prompts, outs):
+        assert out == expected_tokens(prompt, 4)
+        pairs = drain_stream(req)
+        # stream indices strictly increasing from 0, tokens in order
+        assert [i for i, _ in pairs] == list(range(4))
+        assert [t for _, t in pairs] == out
+    # 5 sequences through 2 slots: joins happened mid-run, and every
+    # batched step only carried live slots
+    assert all(len(b) <= 2 for b in eng.step_batches)
+    assert sorted(eng.released) != []
+
+
+def test_joining_request_enters_at_token_boundary():
+    """A request admitted while another is mid-sequence shares the very
+    next batched step (continuous batching, no drain between)."""
+    gate = threading.Event()
+    gate.set()
+    eng = FakeEngine(n_slots=2, step_delay_s=0.01)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=16)
+    with sched:
+        r1 = sched.submit(np.asarray([1], np.int32), max_new_tokens=30)
+        time.sleep(0.05)                      # r1 is several steps in
+        r2 = sched.submit(np.asarray([2], np.int32), max_new_tokens=5)
+        r1.result(timeout=30)
+        r2.result(timeout=30)
+    assert any(len(b) == 2 for b in eng.step_batches)
+    assert r2.tokens == expected_tokens([2], 5)
+
+
+# ---------------------------------------------------------------------------
+# KV-cap shedding: Overloaded + retry hint (PR-8 semantics)
+# ---------------------------------------------------------------------------
+def test_shed_at_kv_cap_returns_overloaded_with_retry_hint():
+    eng = FakeEngine(n_slots=1)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=2,
+                            backoff_base_s=0.05, backoff_seed=0)
+    # not started: the queue fills deterministically
+    ok = [sched.submit(np.asarray([1], np.int32)) for _ in range(2)]
+    shed1 = sched.submit(np.asarray([2], np.int32))
+    shed2 = sched.submit(np.asarray([3], np.int32))
+    assert all(not r.done for r in ok)
+    for shed in (shed1, shed2):
+        assert shed.done
+        with pytest.raises(Overloaded) as ei:
+            shed.result(timeout=1)
+        assert ei.value.rid == shed.rid
+        assert ei.value.retry_after_s > 0
+        assert ei.value.queue_delay_est_s >= 0
+    # consecutive sheds climb the backoff ladder (jitter is <= 25%, the
+    # base doubles, so the second hint is strictly larger)
+    assert shed2.error.retry_after_s > shed1.error.retry_after_s
+    sched.stop()
+    for r in ok:
+        with pytest.raises(PipelineStopped):
+            r.result(timeout=1)
+
+
+def test_successful_enqueue_resets_backoff_ladder():
+    eng = FakeEngine(n_slots=1)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=1,
+                            backoff_base_s=0.05)
+    sched.submit(np.asarray([1], np.int32))            # fills the queue
+    first = sched.submit(np.asarray([2], np.int32)).error
+    sched.submit(np.asarray([3], np.int32))            # shed again: ladder up
+    assert sched._consec_sheds == 2
+    with sched._cond:
+        sched._pending.clear()                         # queue drains
+    sched.submit(np.asarray([4], np.int32))            # accepted
+    assert sched._consec_sheds == 0
+    again = sched.submit(np.asarray([5], np.int32)).error
+    # back at the bottom rung: same magnitude as the first shed
+    assert again.retry_after_s < 2 * first.retry_after_s
+    sched.stop()
+
+
+def test_oversized_prompt_rejected_immediately():
+    eng = FakeEngine(n_slots=1)
+    sched = DecodeScheduler(eng, max_context=8, queue_size=2)
+    req = sched.submit(np.arange(8, dtype=np.int32))
+    with pytest.raises(ValueError, match="does not fit"):
+        req.result(timeout=1)
+    sched.stop()
+
+
+def test_context_cap_truncates_generation():
+    """A sequence whose context hits max_context finishes early instead
+    of overrunning the cache."""
+    eng = FakeEngine(n_slots=1)
+    sched = DecodeScheduler(eng, max_context=8, queue_size=2)
+    with sched:
+        req = sched.submit(np.asarray([1, 2, 3, 4, 5], np.int32),
+                           max_new_tokens=100)
+        out = req.result(timeout=30)
+    # prompt(5) + first token -> ctx 6; steps to ctx 7 then the next
+    # token would need ctx 8 == max_context, so generation stops
+    assert 1 <= len(out) < 100
+    assert out == expected_tokens([1], len(out))
+
+
+def test_eos_token_stops_sequence():
+    eng = FakeEngine(n_slots=1)
+    # first token is 1000; eos at 1002 -> exactly 3 tokens emitted
+    sched = DecodeScheduler(eng, max_context=64, queue_size=2,
+                            eos_token=1002)
+    with sched:
+        out = sched.submit(np.asarray([1], np.int32),
+                           max_new_tokens=50).result(timeout=30)
+    assert out == [1000, 1001, 1002]
+
+
+# ---------------------------------------------------------------------------
+# stop(): drain semantics
+# ---------------------------------------------------------------------------
+def test_drain_completes_in_flight_sequences():
+    eng = FakeEngine(n_slots=2, step_delay_s=0.01)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=16)
+    sched.start()
+    reqs = [sched.submit(np.asarray([i + 1], np.int32), max_new_tokens=10)
+            for i in range(2)]
+    time.sleep(0.03)                          # both admitted, mid-sequence
+    sched.stop(drain=True)
+    for i, r in enumerate(reqs):
+        assert r.result(timeout=1) == expected_tokens([i + 1], 10)
+
+
+def test_drain_rejects_never_admitted_requests():
+    eng = FakeEngine(n_slots=1, step_delay_s=0.01)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=16)
+    sched.start()
+    slow = sched.submit(np.asarray([1], np.int32), max_new_tokens=20)
+    time.sleep(0.03)
+    queued = [sched.submit(np.asarray([9], np.int32), max_new_tokens=5)
+              for _ in range(3)]
+    sched.stop(drain=True)
+    assert slow.result(timeout=1) == expected_tokens([1], 20)
+    for q in queued:
+        with pytest.raises(PipelineStopped):
+            q.result(timeout=1)
+
+
+def test_stop_without_drain_fails_active_sequences():
+    eng = FakeEngine(n_slots=1, step_delay_s=0.01)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=4)
+    sched.start()
+    req = sched.submit(np.asarray([1], np.int32), max_new_tokens=10_000)
+    time.sleep(0.05)
+    sched.stop(drain=False)
+    with pytest.raises(PipelineStopped):
+        req.result(timeout=1)
+    assert 0 < len(req.tokens) < 10_000       # partial stream, then cut
+
+
+def test_stop_before_start_fails_pending():
+    eng = FakeEngine(n_slots=1)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=4)
+    reqs = [sched.submit(np.asarray([1], np.int32)) for _ in range(2)]
+    sched.stop()
+    for r in reqs:
+        with pytest.raises(PipelineStopped):
+            r.result(timeout=1)
+    # submissions after stop() complete immediately with PipelineStopped
+    late = sched.submit(np.asarray([1], np.int32))
+    with pytest.raises(PipelineStopped):
+        late.result(timeout=1)
+
+
+def test_start_is_idempotent():
+    eng = FakeEngine(n_slots=1)
+    sched = DecodeScheduler(eng, max_context=64)
+    assert sched.start() is sched.start()
+    sched.stop()
+
+
+# ---------------------------------------------------------------------------
+# telemetry: per-slot KV occupancy
+# ---------------------------------------------------------------------------
+def test_snapshot_reports_slot_kv_occupancy():
+    gate = threading.Event()
+    eng = FakeEngine(n_slots=2, gate=gate)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=16)
+    sched.start()
+    sched.submit(np.asarray([1, 2, 3], np.int32), max_new_tokens=50)
+    deadline = time.time() + 5
+    snap = sched.snapshot()
+    while not snap["slots"] and time.time() < deadline:
+        time.sleep(0.01)
+        snap = sched.snapshot()
+    assert snap["slots_busy"] == 1 and snap["n_slots"] == 2
+    slot = snap["slots"][0]
+    # context = prompt(3) + generated so far; KV = context * bytes/token
+    assert slot["context_len"] >= 4
+    assert slot["kv_bytes"] == slot["context_len"] * eng.kv_bytes_per_token
+    assert snap["kv_bytes_total"] == slot["kv_bytes"]
+    gate.set()
+    sched.stop(drain=False)
+
+
+def test_snapshot_counts_and_rates_are_deltas():
+    eng = FakeEngine(n_slots=2)
+    sched = DecodeScheduler(eng, max_context=64, queue_size=16)
+    with sched:
+        reqs = [sched.submit(np.asarray([i + 1], np.int32),
+                             max_new_tokens=3) for i in range(4)]
+        for r in reqs:
+            r.result(timeout=30)
+        snap = sched.snapshot()
+        assert snap["admitted"] == 4 and snap["completed"] == 4
+        assert snap["tokens"] == 12 and snap["shed"] == 0
+        assert snap["tokens_per_s"] > 0
+        assert snap["inter_token_p95_s"] >= snap["inter_token_p50_s"] >= 0
+        # second snapshot covers an empty window
+        snap2 = sched.snapshot()
+        assert snap2["tokens"] == 0 and snap2["admitted"] == 0

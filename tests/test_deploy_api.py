@@ -292,7 +292,11 @@ if HAVE_HYPOTHESIS:
         microbatch_wait_s=st.floats(min_value=0, max_value=1,
                                     allow_nan=False),
         slo_p95_ms=st.one_of(st.none(), _pos_float),
-        slo_throughput_rps=st.one_of(st.none(), _pos_float))
+        slo_throughput_rps=st.one_of(st.none(), _pos_float),
+        max_context=st.one_of(st.none(),
+                              st.integers(min_value=2, max_value=65536)),
+        decode_concurrency=st.one_of(
+            st.none(), st.integers(min_value=1, max_value=512)))
 
     @settings(max_examples=60, deadline=None)
     @given(spec=_spec)
@@ -301,6 +305,29 @@ if HAVE_HYPOTHESIS:
         back = DeploymentSpec.from_json(doc)
         assert back == spec
         # and the document is plain JSON (no repr smuggling)
+        json.loads(doc)
+
+    # the decode tier: workload="decode" is only valid with an lm: ref
+    _decode_spec = st.builds(
+        DeploymentSpec,
+        model=st.sampled_from(("lm:qwen3-1.7b", "lm:rwkv6-1.6b",
+                               "lm:qwen2.5-14b:seq=128")),
+        workload=st.just("decode"),
+        strategy=st.just("decode_placement"),
+        stages=st.one_of(st.none(), st.integers(min_value=1, max_value=8)),
+        max_context=st.one_of(st.none(),
+                              st.integers(min_value=2, max_value=65536)),
+        decode_concurrency=st.one_of(
+            st.none(), st.integers(min_value=1, max_value=512)),
+        queue_size=st.integers(min_value=1, max_value=1024))
+
+    @settings(max_examples=60, deadline=None)
+    @given(spec=_decode_spec)
+    def test_decode_spec_json_roundtrip_property(spec):
+        doc = spec.to_json()
+        back = DeploymentSpec.from_json(doc)
+        assert back == spec
+        assert back.workload == "decode"
         json.loads(doc)
 
     _floats = st.lists(st.floats(min_value=0, max_value=1e3,
@@ -322,7 +349,14 @@ if HAVE_HYPOTHESIS:
         stage_capacity_bytes=_ints, spill_bytes=st.integers(min_value=0),
         devices=st.lists(_name, max_size=5).map(tuple),
         replicas=st.lists(st.integers(min_value=1, max_value=8),
-                          max_size=5).map(tuple))
+                          max_size=5).map(tuple),
+        decode_tokens_per_s=st.floats(min_value=0, max_value=1e9,
+                                      allow_nan=False),
+        decode_concurrency=st.integers(min_value=0, max_value=512),
+        decode_max_context=st.integers(min_value=0, max_value=65536),
+        stage_kv_bytes=_ints, stage_kv_cap_bytes=_ints,
+        kv_headroom_pct=st.floats(min_value=-1, max_value=100,
+                                  allow_nan=False))
 
     @settings(max_examples=60, deadline=None)
     @given(report=_report)

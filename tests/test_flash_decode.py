@@ -41,6 +41,91 @@ def test_flash_decode_bf16():
                                rtol=2e-2, atol=2e-2)
 
 
+@pytest.mark.parametrize("group", [1, 2, 4, 8])
+def test_flash_decode_gqa_group_sizes(group):
+    """Every GQA fold from MHA (group=1) to MQA (group=Hq): q-head h must
+    read kv-head h // group."""
+    b, hq, t, d, bk = 2, 8, 256, 32, 64
+    hkv = hq // group
+    q = jnp.asarray(RNG.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), jnp.float32)
+    out = flash_decode(q, k, v, jnp.asarray(193, jnp.int32), bk=bk,
+                       interpret=True)
+    expect = ref.flash_decode_ref(q, k, v, 193)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-6, atol=2e-6)
+
+
+def _softmax_attention(q, ks, vs):
+    """Oracle: one query row against a chronological (b, hkv, n, d) set,
+    GQA-folded, computed in plain fp32 numpy."""
+    b, hq, d = q.shape
+    hkv = ks.shape[1]
+    group = hq // hkv
+    out = np.zeros((b, hq, d), np.float32)
+    for bb in range(b):
+        for h in range(hq):
+            s = ks[bb, h // group] @ q[bb, h] / np.sqrt(d)
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            out[bb, h] = p @ vs[bb, h // group]
+    return out
+
+
+@pytest.mark.parametrize("cache_len", [63, 64, 65, 101, 128, 150])
+def test_flash_decode_ring_buffer_wraparound(cache_len):
+    """Windowed layers keep a ring cache of T == window slots: token i
+    lives at slot i % T and the newest write lands at (cache_len-1) % T.
+    Past wrap-around the kernel (fed valid_len = min(cache_len, T)) must
+    equal attention over the *chronological* last-T tokens — softmax is
+    permutation-invariant over the KV set, so the ring layout is free."""
+    b, hq, hkv, t, d, bk = 2, 4, 2, 64, 32, 32
+    stream = 150
+    q = np.asarray(RNG.normal(size=(b, hq, d)), np.float32)
+    ks = np.asarray(RNG.normal(size=(b, hkv, stream, d)), np.float32)
+    vs = np.asarray(RNG.normal(size=(b, hkv, stream, d)), np.float32)
+
+    ring_k = np.zeros((b, hkv, t, d), np.float32)
+    ring_v = np.zeros((b, hkv, t, d), np.float32)
+    for i in range(cache_len):               # the model's mod-T writes
+        ring_k[:, :, i % t] = ks[:, :, i]
+        ring_v[:, :, i % t] = vs[:, :, i]
+
+    valid = min(cache_len, t)
+    out = flash_decode(jnp.asarray(q), jnp.asarray(ring_k),
+                       jnp.asarray(ring_v),
+                       jnp.asarray(valid, jnp.int32), bk=bk,
+                       interpret=True)
+    lo = cache_len - valid
+    expect = _softmax_attention(q, ks[:, :, lo:cache_len],
+                                vs[:, :, lo:cache_len])
+    np.testing.assert_allclose(np.asarray(out), expect,
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_decode_windowed_layer_vs_decode_attention():
+    """A windowed layer on a *linear* (non-ring) cache: gathering the
+    window into a contiguous cache for the kernel must match
+    decode_attention's window mask on the full cache."""
+    from repro.models.attention import decode_attention
+    b, hq, hkv, t, d, w = 2, 4, 2, 256, 32, 64
+    cache_len = 150
+    q = jnp.asarray(RNG.normal(size=(b, hq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, t, d)), jnp.float32)
+    model_out = decode_attention(
+        q.reshape(b, 1, hq, d), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), jnp.asarray(cache_len), window=w)
+    kern_out = flash_decode(q, k[:, :, cache_len - w:cache_len],
+                            v[:, :, cache_len - w:cache_len],
+                            jnp.asarray(w, jnp.int32), bk=32,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(kern_out),
+                               np.asarray(model_out[:, 0]),
+                               rtol=2e-5, atol=2e-5)
+
+
 def test_flash_decode_matches_model_decode_attention():
     """The kernel must agree with the model's decode_attention path."""
     from repro.models.attention import decode_attention
